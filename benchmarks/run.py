@@ -1,0 +1,40 @@
+"""Benchmark harness — one section per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables
+to stderr-ish comments).  Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import vat_tables as T
+
+    print("name,us_per_call,derived")
+
+    # ---- Table 1: execution time + speedup ----
+    t1 = T.table1()
+    for r in t1:
+        tag = " (py scaled)" if r["scaled"] else ""
+        print(f"table1/{r['dataset']}/python,{r['python_s']*1e6:.1f},"
+              f"baseline{tag}")
+        print(f"table1/{r['dataset']}/jax,{r['jax_s']*1e6:.1f},"
+              f"speedup={r['speedup_jax']:.1f}x")
+        print(f"table1/{r['dataset']}/pallas_interpret,"
+              f"{r['pallas_interp_s']*1e6:.1f},correctness-mode")
+
+    # ---- Table 2: Hopkins ----
+    for r in T.table2():
+        print(f"table2/{r['dataset']}/hopkins,0,{r['hopkins']:.4f}")
+
+    # ---- Table 3: clustering alignment ----
+    for r in T.table3():
+        print(f"table3/{r['dataset']}/vat,0,"
+              f"block_score={r['vat_block_score']:.3f};k_est={r['vat_k_est']}")
+        print(f"table3/{r['dataset']}/kmeans,0,ari={r['kmeans_ari']:.3f}")
+        print(f"table3/{r['dataset']}/dbscan,0,ari={r['dbscan_ari']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

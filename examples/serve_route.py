@@ -1,0 +1,61 @@
+"""Serving example: sVAT-driven request routing + batched greedy decoding.
+
+A serving frontend receives a mixed bag of requests; sVAT over the prompt
+embeddings reveals how many request families are in flight, maximin
+sampling picks the batch groups, and each group decodes together against
+a KV cache (prefix locality => better cache behaviour on real serving
+stacks).  Uses a reduced model so it runs on CPU in seconds.
+
+Run:  PYTHONPATH=src python examples/serve_route.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.configs import smoke_config
+from repro.models import model as M
+from repro.train.steps import build_serve_step
+
+
+def main():
+    cfg = smoke_config("phi3-mini-3.8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # 32 requests from two prompt families (e.g. two system prompts)
+    rng = np.random.default_rng(0)
+    fam = rng.integers(0, 2, 32)
+    prompts = np.where(fam[:, None] == 0,
+                       rng.integers(1, 40, (32, 8)),
+                       rng.integers(80, 120, (32, 8))).astype(np.int32)
+
+    # prompt embeddings from the serving encoder (stubbed here: an
+    # untrained embed table carries no semantics, so we synthesize the
+    # family-separated embeddings a trained encoder would produce)
+    emb = (rng.normal(size=(32, 64)) + fam[:, None] * 4.0).astype(np.float32)
+    rep = core.activation_report(jnp.asarray(emb), jax.random.PRNGKey(1),
+                                 sample=32)
+    k = int(rep.k_est)
+    print(f"request-pool tendency: hopkins={float(rep.hopkins):.3f} "
+          f"block_score={float(rep.block_score):.3f} -> {k} groups")
+
+    # group by k-means over the embeddings (k from VAT) and decode batched
+    labels, _, _ = core.kmeans(jnp.asarray(emb), jax.random.PRNGKey(2), k=k)
+    serve = jax.jit(build_serve_step(cfg))
+    for g in range(k):
+        idx = np.where(np.asarray(labels) == g)[0]
+        toks = jnp.asarray(prompts[idx, -1:])          # last prompt token
+        cache = M.init_cache(cfg, len(idx), 32, jnp.float32)
+        pos = 0
+        outs = []
+        for step in range(8):
+            toks, cache = serve(params, cache, toks, jnp.int32(pos))
+            pos += 1
+            outs.append(np.asarray(toks)[:, 0])
+        gen = np.stack(outs, axis=1)
+        print(f"group {g}: {len(idx)} requests, generated {gen.shape[1]} "
+              f"tokens each; majority family: {int(np.median(fam[idx]))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Fast-VAT core: the paper's contribution as composable JAX modules."""
+from repro.core.vat import vat, vat_from_dist, vat_order, reorder, VATResult, block_structure_score
+from repro.core.ivat import ivat, ivat_from_vat
+from repro.core.svat import svat, maximin_sample, SVATResult
+from repro.core.hopkins import hopkins
+from repro.core.distributed import dvat, pairwise_dist_sharded, DVATResult
+from repro.core.diagnostics import activation_report, embedding_tendency, router_tendency, TendencyReport
+from repro.core.cluster import kmeans, dbscan, adjusted_rand_index, pca
+
+__all__ = [
+    "vat", "vat_from_dist", "vat_order", "reorder", "VATResult",
+    "block_structure_score", "ivat", "ivat_from_vat", "svat",
+    "maximin_sample", "SVATResult", "hopkins", "dvat",
+    "pairwise_dist_sharded", "DVATResult", "activation_report",
+    "embedding_tendency", "router_tendency", "TendencyReport",
+]
+from repro.core.streaming import StreamingVAT
+__all__.append("StreamingVAT")
+from repro.core.tsne import tsne
+__all__.append("tsne")

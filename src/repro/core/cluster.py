@@ -1,0 +1,110 @@
+"""Clustering baselines the paper compares VAT against (Table 3).
+
+K-Means (Lloyd) and DBSCAN, both JAX-native and O(n^2)-dense — DBSCAN's
+neighbour graph reuses the same pairwise-distance kernel as VAT, and its
+cluster assignment is a vectorized min-label propagation (no Python BFS).
+ARI (adjusted Rand index) is host-side numpy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(X: jax.Array, key: jax.Array, *, k: int, iters: int = 50):
+    """Lloyd's algorithm. Returns (labels (n,), centers (k,d), inertia)."""
+    n, d = X.shape
+    # k-means++-lite: greedy maximin seeding from a random start
+    from repro.core.svat import maximin_sample
+    centers = X[maximin_sample(X, k, key)]
+
+    def body(_, centers):
+        dist = kops.pairwise_dist(X, centers)            # (n, k)
+        lab = jnp.argmin(dist, axis=1)
+        oh = jax.nn.one_hot(lab, k, dtype=X.dtype)       # (n, k)
+        counts = jnp.sum(oh, axis=0)                     # (k,)
+        sums = oh.T @ X                                  # (k, d)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        return jnp.where(counts[:, None] > 0, new, centers)
+
+    centers = lax.fori_loop(0, iters, body, centers)
+    dist = kops.pairwise_dist(X, centers)
+    labels = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.min(dist, axis=1) ** 2)
+    return labels, centers, inertia
+
+
+@functools.partial(jax.jit, static_argnames=("min_pts",))
+def dbscan(X: jax.Array, *, eps: float, min_pts: int = 5):
+    """Density-based clustering; returns labels (n,), -1 = noise.
+
+    Connected components of the core-point graph are found by iterated
+    min-label propagation (O(n^2) matmul-ish per sweep, <= n sweeps,
+    converges in diameter-many; we run until fixpoint via while_loop).
+    """
+    n = X.shape[0]
+    R = kops.pairwise_dist(X)
+    nbr = R <= eps                                       # (n, n) bool, incl self
+    core = jnp.sum(nbr, axis=1) >= min_pts
+
+    ids = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.int32(n)
+    labels0 = jnp.where(core, ids, big)
+
+    core_nbr = nbr & core[None, :]                       # edges into core pts
+
+    def sweep(labels):
+        # each core point takes the min label among its core neighbours
+        cand = jnp.where(core_nbr, labels[None, :], big)
+        best = jnp.min(cand, axis=1)
+        return jnp.where(core, jnp.minimum(labels, best), labels)
+
+    def cond(c):
+        labels, changed = c
+        return changed
+
+    def body(c):
+        labels, _ = c
+        new = sweep(labels)
+        return new, jnp.any(new != labels)
+
+    labels, _ = lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+    # border points join the min-labelled core neighbour; else noise (-1)
+    cand = jnp.where(core_nbr, labels[None, :], big)
+    border = jnp.min(cand, axis=1)
+    out = jnp.where(core, labels, jnp.where(border < big, border, -1))
+    return out.astype(jnp.int32)
+
+
+def adjusted_rand_index(a: np.ndarray, b: np.ndarray) -> float:
+    """ARI between two integer label vectors (noise -1 treated as a label)."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    _, ai = np.unique(a, return_inverse=True)
+    _, bi = np.unique(b, return_inverse=True)
+    C = np.zeros((ai.max() + 1, bi.max() + 1), np.int64)
+    np.add.at(C, (ai, bi), 1)
+    comb = lambda x: x * (x - 1) // 2
+    sum_ij = comb(C).sum()
+    sum_a = comb(C.sum(1)).sum()
+    sum_b = comb(C.sum(0)).sum()
+    total = comb(len(a))
+    exp = sum_a * sum_b / max(total, 1)
+    mx = 0.5 * (sum_a + sum_b)
+    if mx == exp:
+        return 1.0
+    return float((sum_ij - exp) / (mx - exp))
+
+
+def pca(X: jax.Array, k: int = 2) -> jax.Array:
+    """Top-k principal components (validation visual the paper uses)."""
+    Xc = X - jnp.mean(X, axis=0)
+    _, _, vt = jnp.linalg.svd(Xc, full_matrices=False)
+    return Xc @ vt[:k].T

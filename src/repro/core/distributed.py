@@ -1,0 +1,127 @@
+"""Distributed VAT — lifting the paper's O(n^2) memory wall with shard_map.
+
+The paper's Limitations section: "VAT requires storage of the full pairwise
+dissimilarity matrix ... a bottleneck for n > 10^4".  Two remedies here:
+
+* ``pairwise_dist_sharded``: the n x n matrix is computed and kept sharded
+  over the mesh `data` axis (row blocks) — aggregate pod HBM instead of
+  one host's RAM (x256 on a 16x16 pod).
+
+* ``dvat``: **matrix-free** distributed VAT.  Points are sharded; the Prim
+  loop keeps only the O(n) min-distance frontier (itself sharded) and
+  recomputes the needed distance row on the fly each step.  Per-step cost:
+  one all_gather of P (value, index) pairs + one psum broadcast of the
+  selected point.  Memory is O(n d / P + n / P) per device — no n x n
+  object ever exists, so n ~ 10^6+ fits a pod.
+
+Both run under jit+shard_map on any mesh axis name (default "data").
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.kernels import ops as kops
+
+
+class DVATResult(NamedTuple):
+    order: jax.Array  # (n,) int32 VAT permutation (replicated)
+
+
+def pairwise_dist_sharded(X: jax.Array, mesh: Mesh, axis: str = "data"):
+    """Distance matrix with rows sharded over `axis`; X gathered per shard."""
+
+    def shard_fn(Xl, Xfull):
+        return kops.pairwise_dist(Xl, Xfull)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(axis, None))
+    return fn(X, X)
+
+
+def _dvat_shard(Xl: jax.Array, axis: str, exact_start: bool):
+    """Runs on each shard: Xl is the local (n/P, d) slice of the points."""
+    p = lax.axis_index(axis)
+    Pn = lax.psum(1, axis)
+    nl, d = Xl.shape
+    n = nl * Pn
+    offset = (p * nl).astype(jnp.int32)
+    local_ids = jnp.arange(nl, dtype=jnp.int32) + offset
+
+    def bcast_point(q):
+        """Fetch row q of X from whichever shard owns it (one psum)."""
+        owner = q // nl
+        lq = q - owner * nl
+        mine = jnp.where(p == owner, Xl[lq], jnp.zeros((d,), Xl.dtype))
+        return lax.psum(mine, axis)
+
+    def dist_to_local(xq):
+        diff = Xl - xq[None, :]
+        return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0))
+
+    if exact_start:
+        # exact VAT start: row of the global max of R (O(n^2 d / P) pass,
+        # done in n/P-row chunks against a gathered X)
+        Xfull = lax.all_gather(Xl, axis, tiled=True)          # (n, d)
+        Rl = kops.pairwise_dist(Xl, Xfull)                     # (nl, n)
+        local_max = jnp.max(Rl, axis=1)                        # per local row
+        li = jnp.argmax(local_max).astype(jnp.int32)
+        vals = lax.all_gather(local_max[li], axis)             # (P,)
+        idxs = lax.all_gather(li + offset, axis)
+        i0 = idxs[jnp.argmax(vals)].astype(jnp.int32)
+    else:
+        # matrix-free start: farthest point from the global mean
+        mean = lax.pmean(jnp.mean(Xl, axis=0), axis)
+        dm = jnp.linalg.norm(Xl - mean[None, :], axis=1)
+        li = jnp.argmax(dm).astype(jnp.int32)
+        vals = lax.all_gather(dm[li], axis)
+        idxs = lax.all_gather(li + offset, axis)
+        i0 = idxs[jnp.argmax(vals)].astype(jnp.int32)
+
+    x0 = bcast_point(i0)
+    mind0 = dist_to_local(x0)
+    sel0 = local_ids == i0
+    order0 = jnp.zeros((n,), jnp.int32).at[0].set(i0)
+
+    def body(t, carry):
+        mind, selected, order = carry
+        masked = jnp.where(selected, jnp.inf, mind)
+        li = jnp.argmin(masked).astype(jnp.int32)
+        vals = lax.all_gather(masked[li], axis)                # (P,)
+        idxs = lax.all_gather(li + offset, axis)
+        w = jnp.argmin(vals)                                    # first-index ties
+        q = idxs[w].astype(jnp.int32)
+        order = order.at[t].set(q)
+        xq = bcast_point(q)
+        mind = jnp.minimum(mind, dist_to_local(xq))
+        selected = selected | (local_ids == q)
+        return mind, selected, order
+
+    _, _, order = lax.fori_loop(1, n, body, (mind0, sel0, order0))
+    return order
+
+
+def dvat(X: jax.Array, mesh: Mesh, axis: str = "data", *,
+         exact_start: bool = True) -> DVATResult:
+    """Matrix-free distributed VAT ordering of X (n, d).
+
+    n must be divisible by the mesh axis size (pad upstream otherwise).
+    exact_start=False skips the O(n^2 d / P) max-pair pass and starts from
+    the point farthest from the mean (block structure is unaffected; the
+    ordering may start in a different cluster).
+    """
+    fn = shard_map(
+        functools.partial(_dvat_shard, axis=axis, exact_start=exact_start),
+        mesh=mesh,
+        in_specs=(P(axis, None),),
+        out_specs=P(),  # order replicated (built from all_gathered data)
+        check_vma=False)
+    return DVATResult(order=jax.jit(fn)(X))

@@ -1,0 +1,42 @@
+"""Hopkins statistic — the paper's quantitative clusterability check (Table 2).
+
+H = sum(u) / (sum(u) + sum(w)) where u are nearest-neighbour distances of
+m synthetic uniform points to the data and w are NN distances of m sampled
+data points to the rest of the data.  H ~ 0.5 for uniform data; H > 0.75
+indicates significant cluster structure (the threshold the paper uses).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def hopkins(X: jax.Array, key: jax.Array, *, m: int = 0) -> jax.Array:
+    """Hopkins statistic of X (n, d); m defaults to min(n//10, 256), >=8."""
+    n, d = X.shape
+    if m == 0:
+        m = max(8, min(n // 10, 256))
+    m = min(m, n - 1)
+    k_samp, k_unif = jax.random.split(key)
+
+    lo = jnp.min(X, axis=0)
+    hi = jnp.max(X, axis=0)
+    U = jax.random.uniform(k_unif, (m, d), dtype=X.dtype,
+                           minval=lo, maxval=hi)
+    idx = jax.random.choice(k_samp, n, (m,), replace=False)
+    S = X[idx]
+
+    # u: NN distance from uniform points to the data
+    du = kops.pairwise_dist(U, X)
+    u = jnp.min(du, axis=1)
+    # w: NN distance from sampled data points to the data minus themselves
+    dw = kops.pairwise_dist(S, X)
+    dw = dw.at[jnp.arange(m), idx].set(jnp.inf)
+    w = jnp.min(dw, axis=1)
+
+    return jnp.sum(u) / (jnp.sum(u) + jnp.sum(w) + 1e-12)

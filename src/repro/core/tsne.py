@@ -1,0 +1,81 @@
+"""t-SNE (exact O(n^2) variant) — the paper validates cluster tendency
+with PCA and t-SNE alongside VAT; both live here as JAX-native utilities.
+
+Standard formulation (van der Maaten & Hinton 2008): per-point sigmas by
+bisection to a target perplexity, symmetrized affinities, KL gradient
+descent with early exaggeration and momentum — all inside one jit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops as kops
+
+
+def _cond_probs(D2: jax.Array, perplexity: float, iters: int = 32):
+    """Row-wise conditional P_{j|i} at the target perplexity (bisection)."""
+    n = D2.shape[0]
+    target = jnp.log(perplexity)
+    eye = jnp.eye(n, dtype=bool)
+
+    def entropy_probs(beta):
+        logits = -D2 * beta[:, None]
+        logits = jnp.where(eye, -jnp.inf, logits)
+        P = jax.nn.softmax(logits, axis=1)
+        H = -jnp.sum(P * jnp.where(P > 0, jnp.log(P), 0.0), axis=1)
+        return H, P
+
+    def body(_, carry):
+        lo, hi, beta = carry
+        H, _ = entropy_probs(beta)
+        too_high = H > target          # entropy too high -> raise beta
+        lo = jnp.where(too_high, beta, lo)
+        hi = jnp.where(too_high, hi, beta)
+        beta = jnp.where(jnp.isinf(hi), beta * 2.0, (lo + hi) / 2.0)
+        return lo, hi, beta
+
+    beta0 = jnp.ones((n,))
+    lo0 = jnp.zeros((n,))
+    hi0 = jnp.full((n,), jnp.inf)
+    _, _, beta = lax.fori_loop(0, iters, body, (lo0, hi0, beta0))
+    _, P = entropy_probs(beta)
+    return P
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("perplexity", "iters", "dim", "lr"))
+def tsne(X: jax.Array, key: jax.Array, *, perplexity: float = 30.0,
+         iters: int = 500, dim: int = 2, lr: float = 10.0) -> jax.Array:
+    """X (n, d) -> (n, dim) embedding."""
+    n = X.shape[0]
+    D = kops.pairwise_dist(X)
+    P = _cond_probs(D * D, perplexity)
+    P = (P + P.T) / (2.0 * n)
+    P = jnp.maximum(P, 1e-12)
+
+    Y0 = 1e-2 * jax.random.normal(key, (n, dim))
+    eye = jnp.eye(n, dtype=bool)
+
+    def grad(Y, exaggeration):
+        d2 = jnp.sum((Y[:, None] - Y[None]) ** 2, axis=-1)
+        num = 1.0 / (1.0 + d2)
+        num = jnp.where(eye, 0.0, num)
+        Q = jnp.maximum(num / jnp.sum(num), 1e-12)
+        PQ = (exaggeration * P - Q) * num
+        return 4.0 * (jnp.sum(PQ, axis=1, keepdims=True) * Y - PQ @ Y)
+
+    def body(t, carry):
+        Y, V = carry
+        exag = jnp.where(t < 100, 12.0, 1.0)
+        mom = jnp.where(t < 100, 0.5, 0.8)
+        g = grad(Y, exag)
+        V = mom * V - lr * g
+        Y = Y + V
+        return Y - jnp.mean(Y, axis=0), V
+
+    Y, _ = lax.fori_loop(0, iters, body, (Y0, jnp.zeros_like(Y0)))
+    return Y

@@ -1,0 +1,2 @@
+from repro.data.tokens import input_specs, make_batch, SyntheticCorpus
+from repro.data.synth import DATASETS, make_dataset

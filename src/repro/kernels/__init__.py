@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+pairwise_dist — MXU-tiled Euclidean distance matrix (the O(n^2 d) stage
+                the paper's Cython version optimizes with flattened loops)
+prim_update   — fused masked block-argmin for Prim's greedy selection
+ops           — jit'd dispatch wrappers (pallas | xla)
+ref           — pure-jnp oracles, also the production CPU path
+"""

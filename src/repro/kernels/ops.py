@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the kernels package.
+
+Dispatch policy: Pallas kernels target TPU; on a CPU backend (this
+container) they run in ``interpret=True`` mode for correctness validation,
+while the default production path on CPU is the XLA reference in ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.pairwise_dist import pairwise_dist_pallas
+from repro.kernels.prim_update import masked_argmin_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
+                  use_pallas: bool = False, block: int = 256) -> jax.Array:
+    """Euclidean distance matrix; Pallas-tiled on request, XLA otherwise."""
+    if use_pallas:
+        R = pairwise_dist_pallas(X, Y, block=block, interpret=_interpret())
+    else:
+        R = ref.pairwise_dist_ref(X, Y)
+    if Y is None:  # exact zero diagonal for self-distances
+        n = R.shape[0]
+        R = R * (1.0 - jnp.eye(n, dtype=R.dtype))
+    return R
+
+
+def masked_argmin(vals: jax.Array, mask: jax.Array, *,
+                  use_pallas: bool = False, block: int = 1024):
+    """(min, argmin) over unmasked entries (mask=True excludes)."""
+    if use_pallas:
+        return masked_argmin_pallas(vals, mask, block=block,
+                                    interpret=_interpret())
+    return ref.masked_argmin_ref(vals, mask)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests sweep against, and
+also the production XLA fallback path (they jit and shard fine — the
+Pallas kernels exist to beat them on TPU, not to replace them).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_dist_ref(X: jax.Array, Y: jax.Array | None = None) -> jax.Array:
+    """Euclidean distance matrix via the Gram trick.
+
+    ||xi - yj||^2 = ||xi||^2 + ||yj||^2 - 2 xi.yj  — the cross term is one
+    matmul, which is what makes this MXU-friendly (and is the exact
+    decomposition the Pallas kernel tiles).
+    """
+    if Y is None:
+        Y = X
+    Xf = X.astype(jnp.float32)
+    Yf = Y.astype(jnp.float32)
+    nx = jnp.sum(Xf * Xf, axis=-1)
+    ny = jnp.sum(Yf * Yf, axis=-1)
+    sq = nx[:, None] + ny[None, :] - 2.0 * (Xf @ Yf.T)
+    return jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def masked_argmin_ref(vals: jax.Array, mask: jax.Array):
+    """(min value, argmin index) of vals where mask is False.
+
+    `mask=True` means "excluded" (already selected in Prim's loop).
+    First-index tie-breaking, matching jnp.argmin.
+    """
+    masked = jnp.where(mask, jnp.inf, vals.astype(jnp.float32))
+    idx = jnp.argmin(masked).astype(jnp.int32)
+    return masked[idx], idx

@@ -1,0 +1,81 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+Drives the real serving path (prefill fills the cache, decode_step
+continues) with sVAT request-group diagnostics every --diag-every
+batches.  Reduced configs make it runnable on CPU:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
+      --smoke --requests 8 --prompt-len 16 --gen 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B, P, G = args.requests, args.prompt_len, args.gen
+    prompts = rng.integers(1, cfg.vocab, (B, P)).astype(np.int32)
+
+    batch = {"tokens": jnp.asarray(prompts)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+
+    max_len = P + G + (cfg.n_patches if cfg.family == "vlm" else 0)
+    prefill = jax.jit(lambda p, b: M.prefill(p, cfg, b, max_len))
+    decode = jax.jit(lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
+
+    t0 = time.perf_counter()
+    logits, cache, pos = prefill(params, batch)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(nxt)
+    t_prefill = time.perf_counter() - t0
+
+    gen = [np.asarray(nxt)[:, 0]]
+    t0 = time.perf_counter()
+    for i in range(G - 1):
+        lg, cache = decode(params, nxt, cache, pos + i)
+        nxt = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+        gen.append(np.asarray(nxt)[:, 0])
+    t_decode = time.perf_counter() - t0
+    out = np.stack(gen, axis=1)
+
+    print(f"prefill {B}x{P}: {t_prefill*1e3:.1f} ms   "
+          f"decode {G-1} steps: {t_decode*1e3:.1f} ms "
+          f"({(G-1)*B/max(t_decode,1e-9):.1f} tok/s)")
+    print(f"sample continuation[0]: {out[0][:12].tolist()}")
+
+    # request-pool tendency diagnostic (paper integration)
+    emb = np.asarray(params["embed"])[prompts].mean(axis=1)
+    rep = core.activation_report(jnp.asarray(emb), jax.random.PRNGKey(1),
+                                 sample=min(64, B))
+    print(f"request tendency: hopkins={float(rep.hopkins):.3f} "
+          f"block={float(rep.block_score):.3f} k={int(rep.k_est)}")
+
+
+if __name__ == "__main__":
+    main()

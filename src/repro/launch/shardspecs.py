@@ -1,0 +1,139 @@
+"""Input/state sharding specs for the launchers (train + serve)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.sharding import param_shardings
+
+
+def _dp(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: dict) -> dict:
+    """Shardings for the input batch dict (tokens/labels/patches/frames)."""
+    dp = _dp(mesh)
+    dpsize = 1
+    for a in dp:
+        dpsize *= _sizes(mesh)[a]
+
+    out = {}
+    for name, sds in specs.items():
+        b = sds.shape[0]
+        lead = dp if b % dpsize == 0 else None
+        out[name] = NamedSharding(mesh, P(lead, *([None] * (sds.ndim - 1))))
+    return out
+
+
+def _recheck(spec, shape, mesh: Mesh) -> NamedSharding:
+    """Divisibility-validate a raw spec list against a concrete shape."""
+    sizes = _sizes(mesh)
+    ok = []
+    for dim, s in enumerate(list(spec)[:len(shape)]):
+        names = (s,) if isinstance(s, str) else tuple(s or ())
+        total = 1
+        for nm in names:
+            total *= sizes.get(nm, 1)
+        ok.append(s if total and shape[dim] % total == 0 else None)
+    ok += [None] * (len(shape) - len(ok))
+    return NamedSharding(mesh, P(*ok))
+
+
+def state_shardings(state, mesh: Mesh):
+    """TrainState shardings.
+
+    params / first moment reuse the param rules directly.  Adafactor's
+    factored second moment derives from the param spec by *dropping the
+    reduced dim*: vr (row stats, mean over last dim) keeps spec[:-1];
+    vc (col stats, mean over dim -2) keeps spec[:-2] + spec[-1].  This is
+    what keeps the 61x256-expert stat tensors sharded over the expert dim
+    instead of replicating hundreds of GB.
+    """
+    params = state.params
+    p_sh = param_shardings(params, mesh)
+    flat_psh, tdef = jax.tree.flatten(p_sh)
+    flat_p = tdef.flatten_up_to(params)
+
+    def like_params(tree):
+        flat_t = tdef.flatten_up_to(tree)
+        out = []
+        for sh, t in zip(flat_psh, flat_t):
+            if isinstance(t, tuple):            # factored (vr, vc)
+                spec = list(sh.spec)
+                vr = _recheck(spec[:-1], t[0].shape, mesh)
+                vc = _recheck(spec[:-2] + [spec[-1]], t[1].shape, mesh)
+                out.append((vr, vc))
+            else:
+                out.append(_recheck(list(sh.spec), t.shape, mesh))
+        return tdef.unflatten(out)
+
+    from repro.train.steps import TrainState
+    from repro.optim.adamw import OptState
+    opt = state.opt
+    return TrainState(
+        params=p_sh,
+        opt=OptState(step=NamedSharding(mesh, P()),
+                     m=None if opt.m is None else like_params(opt.m),
+                     v=like_params(opt.v)),
+        ef=None if state.ef is None else type(state.ef)(
+            residual=like_params(state.ef.residual)))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache, batch: int,
+                    max_len: int):
+    """Decode-cache shardings.
+
+    Rules (by dim size, per leaf): the batch dim shards over the DP axes
+    when divisible; KV/state head dims shard over `model` when divisible;
+    if batch cannot shard (long_500k: B=1), the max_len dim shards over
+    `data` instead (context-sharded cache).
+    """
+    dp = _dp(mesh)
+    sizes = _sizes(mesh)
+    dpsize = 1
+    for a in dp:
+        dpsize *= sizes[a]
+    m = sizes.get("model", 1)
+    d = sizes.get("data", 1)
+    batch_ok = batch % dpsize == 0
+    head_sizes = {cfg.eff_kv_heads, cfg.eff_heads}
+    if cfg.family in ("hybrid",):
+        head_sizes.add(cfg.ssm_expand * cfg.d_model // cfg.ssm_head_dim)
+    if cfg.family == "ssm":
+        head_sizes.add(cfg.d_model // cfg.rwkv_head_dim)
+
+    heads_shardable = any(h % m == 0 for h in head_sizes)
+
+    def one(leaf):
+        spec = []
+        used_batch = used_seq = used_head = False
+        for dim in leaf.shape:
+            if dim == batch and not used_batch:
+                spec.append(dp if batch_ok else None)
+                used_batch = True
+            elif dim == max_len and not used_seq and not batch_ok:
+                spec.append("data" if dim % d == 0 else None)
+                used_seq = True
+            elif (dim == max_len and not used_seq and not heads_shardable
+                  and dim % m == 0):
+                # context sharding: heads can't split over `model` (e.g.
+                # whisper's 20 heads on a 16-way axis) — shard the KV
+                # sequence dim there instead, so the cache doesn't
+                # replicate 16x per device
+                spec.append("model")
+                used_seq = True
+            elif dim in head_sizes and not used_head and dim % m == 0:
+                spec.append("model")
+                used_head = True
+            else:
+                spec.append(None)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache)

@@ -1,0 +1,57 @@
+"""Training launcher: mesh-aware entry point for real runs.
+
+On this CPU container it drives the host mesh (1 device); on a pod the
+same script shards over whatever `jax.devices()` reports — the launcher
+only picks the mesh, `train_step` is identical to the dry-run one.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+      --steps 100 --batch 8 --seq 128 [--smoke] [--model-axis 1]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import sharding
+from repro.train.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="TP width of the host mesh")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-step data deadline in seconds (straggler)")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(model=args.model_axis)
+    if mesh.devices.size > 1:
+        sharding.set_mesh(mesh)
+    tc = TrainConfig(lr=args.lr, total_steps=args.steps,
+                     ckpt_dir=args.ckpt_dir,
+                     compress_grads=args.compress_grads)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    with mesh:
+        state, hist = train(cfg, tc, shape,
+                            step_deadline_s=args.deadline)
+    print(f"final loss {hist[-1]['loss']:.4f} over {len(hist)} steps "
+          f"on {mesh.devices.size} device(s)")
+
+
+if __name__ == "__main__":
+    main()

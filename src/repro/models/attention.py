@@ -1,0 +1,191 @@
+"""Attention: GQA/MQA (chunked causal), MLA (DeepSeek), cross-attention.
+
+Training/prefill attention is q-chunked ("flash-lite"): the (S x S) score
+matrix never materializes — each q-chunk computes a (chunk x S) row block,
+masks, softmaxes and contracts immediately.  Memory is O(S * chunk) per
+head instead of O(S^2), which is what lets prefill_32k compile inside a
+v5e HBM budget.  The contraction runs on the MXU in bf16 with f32 softmax.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import sharding
+from repro.models.common import apply_rope, rope_freqs
+
+_NEG = -1e30
+
+
+def _block_attn(qg, k, v, qpos, kv_idx, causal):
+    """qg (B,L,G,R,hd) vs k/v (B,K,G,hd) -> (B,L,G,R,hd)."""
+    scale = qg.shape[-1] ** -0.5
+    s = jnp.einsum("blgrh,bkgh->bgrlk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = kv_idx[None, :] <= qpos[:, None]          # (L, K)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bgrlk,bkgh->blgrh", p, v)
+
+
+def attention(q, k, v, *, causal: bool = True, chunk: int = 0,
+              q_offset=0):
+    """q (B,S,H,hd), k/v (B,K,Hkv,hd) -> (B,S,H,hd); GQA via head groups."""
+    B, S, H, hd = q.shape
+    K, Hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]  # may differ from hd (MLA: qk dim != v dim)
+    rep = H // Hkv
+    qg = q.reshape(B, S, Hkv, rep, hd)
+    kv_idx = jnp.arange(K)
+    qpos_all = q_offset + jnp.arange(S)
+
+    if chunk and S > chunk and S % chunk == 0:
+        n = S // chunk
+        qs = jnp.moveaxis(qg.reshape(B, n, chunk, Hkv, rep, hd), 1, 0)
+        pos = qpos_all.reshape(n, chunk)
+        out = lax.map(lambda t: _block_attn(t[0], k, v, t[1], kv_idx, causal),
+                      (qs, pos))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, vd)
+    else:
+        out = _block_attn(qg, k, v, qpos_all, kv_idx, causal)
+        out = out.reshape(B, S, H, vd)
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Smax, Hkv, hd)
+    v: jax.Array
+
+
+def gqa_block(p, h, cfg, cos, sin, *, causal=True, cache: KVCache | None = None,
+              pos=None):
+    """Self-attention sublayer (projections + rope + attn + out proj).
+
+    Train/prefill: cache is None, h is (B,S,D).
+    Decode: cache holds Smax entries, h is (B,1,D), pos is the write index.
+    """
+    B, S, D = h.shape
+    H, Hkv, hd = cfg.eff_heads, cfg.eff_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    q = sharding.hint(q, "dp", None, "model", None)
+    k = sharding.hint(k, "dp", None, "model", None)
+    v = sharding.hint(v, "dp", None, "model", None)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if cache is None:
+        out = attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+        new_cache = None
+    else:
+        ck = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, pos, 0, 0))
+        cv = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, pos, 0, 0))
+        new_cache = KVCache(ck, cv)
+        out = attention(q, ck, cv, causal=True, q_offset=pos)
+    if H != cfg.n_heads:
+        # padded heads (TP-divisibility) are masked out: function- and
+        # gradient-equivalent to the unpadded architecture
+        out = out * (jnp.arange(H) < cfg.n_heads)[None, None, :, None]
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"], new_cache
+
+
+def cross_block(p, h, enc_kv, cfg):
+    """Cross-attention sublayer (whisper decoder). enc_kv = (k, v) tensors."""
+    B, S, D = h.shape
+    H, hd = cfg.eff_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv
+    out = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    if H != cfg.n_heads:
+        out = out * (jnp.arange(H) < cfg.n_heads)[None, None, :, None]
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------- MLA ----
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, Smax, kv_lora)  compressed latent
+    k_rope: jax.Array  # (B, Smax, rope_dim) shared positional key
+
+
+def _mla_qkv(p, h, cfg, cos, sin):
+    """Expanded-form MLA projections (train / prefill)."""
+    from repro.models.common import rms_norm
+    B, S, _ = h.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = rms_norm(h @ p["wq_a"], p["q_norm"], cfg.norm_eps)  # (B,S,q_lora)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, dn + dr)
+    ckv_full = h @ p["wkv_a"]                           # (B,S,kv_lora+dr)
+    c_kv, k_rope = ckv_full[..., :cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # 1 shared head
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, H, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return q_full, k_full, v, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_block(p, h, cfg, cos, sin, *, cache: MLACache | None = None, pos=None):
+    """DeepSeek-V3 Multi-head Latent Attention sublayer.
+
+    Decode uses the *absorbed* form: scores and context are computed in the
+    compressed kv_lora space directly against the latent cache, so the
+    per-token cache cost is kv_lora + rope_dim (576 for DSv3), not
+    2 * H * hd — MLA's entire point.
+    """
+    B, S, D = h.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if cache is None:
+        q, k, v, _, _ = _mla_qkv(p, h, cfg, cos, sin)
+        q = sharding.hint(q, "dp", None, "model", None)
+        k = sharding.hint(k, "dp", None, "model", None)
+        out = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        return out.reshape(B, S, H * dv) @ p["wo"], None
+
+    # ---- absorbed decode path ----
+    from repro.models.common import rms_norm
+    cq = rms_norm(h @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    ckv_full = h @ p["wkv_a"]
+    c_new, kr_new = ckv_full[..., :cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank:]
+    c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0, :]
+    c_kv = lax.dynamic_update_slice(cache.c_kv, c_new.astype(cache.c_kv.dtype),
+                                    (0, pos, 0))
+    k_rope = lax.dynamic_update_slice(cache.k_rope, kr_new.astype(cache.k_rope.dtype),
+                                      (0, pos, 0))
+    new_cache = MLACache(c_kv, k_rope)
+
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb W_uk into q: (B,1,H,dn) x (l,H,dn) -> (B,1,H,l)
+    q_c = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bshl,bkl->bhsk", q_c, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshr,bkr->bhsk", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    kv_idx = jnp.arange(c_kv.shape[1])
+    qpos = pos + jnp.arange(S)                 # per-query absolute position
+    s = jnp.where(kv_idx[None, None, None, :] <= qpos[None, None, :, None],
+                  s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+    ctx_c = jnp.einsum("bhsk,bkl->bshl", pr, c_kv)       # context in latent space
+    out = jnp.einsum("bshl,lhv->bshv", ctx_c, w_uv)      # absorb W_uv
+    return out.reshape(B, S, H * dv) @ p["wo"], new_cache

@@ -1,0 +1,155 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+Training/prefill runs the chunkwise algorithm: within a chunk of length L
+the output is a masked (L x L) matmul (MXU work), between chunks a single
+(B,H,N,P) state carries through a lax.scan — O(S) time, O(B H N P) state,
+bounded memory (the L x L decay tensor is per-chunk only).
+
+Decode is the pure recurrence: h' = exp(dA) h + B (dt x);  y = C h + D x.
+
+The short causal conv over (x, B, C) keeps a (window-1)-deep conv state
+for decode, mirroring the CUDA reference implementation's layout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import sharding
+from repro.models.common import rms_norm
+
+_CONV_W = 4  # short conv window
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array    # (B, H, N, P) f32
+    conv: jax.Array   # (B, CONV_W-1, inner + 2N)
+
+
+def _dims(cfg):
+    inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = inner // P
+    N = cfg.ssm_state
+    return inner, H, P, N
+
+
+def _split_proj(zxbcdt, cfg):
+    inner, H, P, N = _dims(cfg)
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner:2 * inner + 2 * N]
+    dt = zxbcdt[..., 2 * inner + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_k):
+    """Depthwise causal conv, window 4: xBC (B,S,C), conv_k (W,C)."""
+    pad = jnp.pad(xBC, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * conv_k[i]
+              for i in range(_CONV_W))
+    return jax.nn.silu(out)
+
+
+def mamba_block(p, u, cfg, *, state: MambaState | None = None,
+                return_state: bool = False):
+    """u (B,S,D) -> (B,S,D).
+
+    state=None: full-sequence (train / prefill); pass return_state=True to
+    also get the final recurrent state (serving prefill handoff).
+    state!=None with S==1: single-token decode.
+    """
+    B, S, D = u.shape
+    inner, H, P, N = _dims(cfg)
+    zxbcdt = u @ p["in_proj"]
+    zxbcdt = sharding.hint(zxbcdt, "dp", None, "model")
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+
+    if state is None:
+        xBC_raw = xBC
+        xBC = _causal_conv(xBC, p["conv"])
+        new_state = None
+        x, Bm, Cm = (xBC[..., :inner], xBC[..., inner:inner + N],
+                     xBC[..., inner + N:])
+        xh = x.reshape(B, S, H, P)
+        y, final_ssm = _ssd_chunked(xh, Bm, Cm, dt, A, cfg)     # f32
+        y = y + p["skip_d"].astype(jnp.float32)[None, None, :, None] \
+            * xh.astype(jnp.float32)
+        y = y.reshape(B, S, inner).astype(u.dtype)
+        if return_state:
+            # conv state = last (window-1) *pre-conv* inputs
+            pad = jnp.pad(xBC_raw, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+            new_state = MambaState(ssm=final_ssm,
+                                   conv=pad[:, S:S + _CONV_W - 1, :])
+    else:
+        # ---- decode: conv state + recurrence ----
+        win = jnp.concatenate([state.conv, xBC], axis=1)       # (B, W, C)
+        conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, p["conv"]))
+        new_conv = win[:, 1:, :]
+        x = conv_out[:, :inner].reshape(B, H, P)
+        Bm = conv_out[:, inner:inner + N]
+        Cm = conv_out[:, inner + N:]
+        dt1 = dt[:, 0]                                          # (B,H)
+        dA = jnp.exp(dt1 * A[None, :])                          # (B,H)
+        xbar = (x.astype(jnp.float32) * dt1[..., None])         # (B,H,P)
+        ssm = (state.ssm * dA[:, :, None, None]
+               + jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32), xbar))
+        y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), ssm)
+        y = y + p["skip_d"].astype(jnp.float32)[None, :, None] * x
+        y = y.reshape(B, 1, inner).astype(u.dtype)
+        new_state = MambaState(ssm=ssm, conv=new_conv)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state
+
+
+def _ssd_chunked(x, Bm, Cm, dt, A, cfg):
+    """Chunkwise SSD scan.
+
+    x (B,S,H,P); Bm/Cm (B,S,N); dt (B,S,H); A (H,) -> y (B,S,H*P)
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(cfg.ssm_chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by ssm chunk {L}"
+    nc = S // L
+
+    xf = x.astype(jnp.float32) * dt[..., None]                  # xbar
+    dA = dt * A[None, None, :]                                  # (B,S,H) <=0
+    ch = lambda t: t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+    xs = (ch(xf), ch(Bm.astype(jnp.float32)), ch(Cm.astype(jnp.float32)),
+          ch(dA))
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(state, chunk):
+        xc, bc, cc, dac = chunk                                 # (B,L,...)
+        seg = jnp.cumsum(dac, axis=1)                           # (B,L,H)
+        # inter-chunk: contribution of the carried state
+        y_prev = jnp.einsum("bln,bhnp->blhp", cc, state) * jnp.exp(seg)[..., None]
+        # intra-chunk: masked decay matmul
+        diff = seg[:, :, None, :] - seg[:, None, :, :]          # (B,L,L,H) t,s
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        cb = jnp.einsum("bln,bsn->bls", cc, bc)
+        y_intra = jnp.einsum("bls,blsh,bshp->blhp", cb, decay, xc)
+        # state update
+        total = seg[:, -1]                                      # (B,H)
+        edge = jnp.exp(total[:, None, :] - seg)                 # (B,L,H)
+        state = (state * jnp.exp(total)[:, :, None, None]
+                 + jnp.einsum("bsn,bsh,bshp->bhnp", bc, edge, xc))
+        return state, y_prev + y_intra
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    final, ys = lax.scan(step, state0, xs)                      # (nc,B,L,H,P)
+    return ys.swapaxes(0, 1).reshape(B, S, H, P), final         # f32
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> MambaState:
+    inner, H, P, N = _dims(cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, H, N, P), jnp.float32),
+        conv=jnp.zeros((batch, _CONV_W - 1, inner + 2 * N), dtype))

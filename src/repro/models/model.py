@@ -1,0 +1,628 @@
+"""Model zoo assembly: init / forward / decode for every assigned family.
+
+One parameter-pytree + pure-function design (no flax):
+
+  init_params(cfg, key, dtype)            -> params pytree
+  forward(params, cfg, batch)             -> (logits, aux_loss)   [train/prefill]
+  init_cache(cfg, batch, max_len, dtype)  -> cache pytree
+  decode_step(params, cfg, tokens, cache, pos) -> (logits, cache) [serving]
+
+Layers are *stacked* (leading L axis) and iterated with lax.scan so the
+HLO stays compact (one layer body regardless of depth) — essential for
+61-layer dry-run compiles and for FSDP gather/compute overlap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding
+from repro.models.attention import (KVCache, MLACache, cross_block, gqa_block,
+                                    mla_block)
+from repro.models.common import dense_init, keygen, rms_norm, rope_freqs
+from repro.models.mamba2 import MambaState, init_mamba_state, mamba_block, _dims
+from repro.models.moe import dense_ffn, moe_ffn
+from repro.models.rwkv6 import RWKVState, init_rwkv_state, rwkv_block
+
+# --------------------------------------------------------------- init ----
+
+
+def _init_tree(key, spec: dict, dtype) -> dict:
+    """spec: name -> (shape, scale|None). Deterministic per-name keys."""
+    out = {}
+    for i, (name, (shape, scale)) in enumerate(sorted(spec.items())):
+        sub = jax.random.fold_in(key, i)
+        if scale == "zeros":
+            out[name] = jnp.zeros(shape, dtype)
+        elif scale == "ones":
+            out[name] = jnp.ones(shape, dtype)
+        elif isinstance(scale, (int, float)) or scale is None:
+            out[name] = dense_init(sub, shape, scale, dtype)
+        else:  # callable
+            out[name] = scale(sub, shape).astype(dtype)
+    return out
+
+
+def _attn_spec(cfg: ModelConfig, L: tuple[int, ...]) -> dict:
+    D = cfg.d_model
+    if cfg.use_mla:
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return {
+            "wq_a": ((*L, D, cfg.q_lora_rank), None),
+            "q_norm": ((*L, cfg.q_lora_rank), "zeros"),
+            "wq_b": ((*L, cfg.q_lora_rank, cfg.n_heads * (dn + dr)), None),
+            "wkv_a": ((*L, D, cfg.kv_lora_rank + dr), None),
+            "kv_norm": ((*L, cfg.kv_lora_rank), "zeros"),
+            "wkv_b": ((*L, cfg.kv_lora_rank, cfg.n_heads * (dn + dv)), None),
+            "wo": ((*L, cfg.n_heads * dv, D), None),
+        }
+    return {
+        "wq": ((*L, D, cfg.q_dim), None),
+        "wk": ((*L, D, cfg.kv_dim), None),
+        "wv": ((*L, D, cfg.kv_dim), None),
+        "wo": ((*L, cfg.q_dim, D), None),
+    }
+
+
+def _ffn_spec(cfg: ModelConfig, L: tuple[int, ...], d_ff: int,
+              prefix: str = "w") -> dict:
+    D = cfg.d_model
+    spec = {
+        f"{prefix}_up": ((*L, D, d_ff), None),
+        f"{prefix}_down": ((*L, d_ff, D), None),
+    }
+    if cfg.gated:
+        spec[f"{prefix}_gate"] = ((*L, D, d_ff), None)
+    return spec
+
+
+def _moe_spec(cfg: ModelConfig, L: tuple[int, ...]) -> dict:
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert or cfg.d_ff
+    spec = {
+        "router": ((*L, D, E), 0.02),
+        "e_up": ((*L, E, D, Fe), None),
+        "e_down": ((*L, E, Fe, D), None),
+    }
+    if cfg.gated:
+        spec["e_gate"] = ((*L, E, D, Fe), None)
+    if cfg.n_shared_experts > 0:
+        spec.update(_ffn_spec(cfg, L, Fe * cfg.n_shared_experts, prefix="s"))
+    return spec
+
+
+def _mamba_spec(cfg: ModelConfig, L: tuple[int, ...]) -> dict:
+    inner, H, P, N = _dims(cfg)
+    D = cfg.d_model
+    proj_out = 2 * inner + 2 * N + H
+
+    def a_init(k, shape):
+        return jnp.log(jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0))
+
+    def dt_init(k, shape):
+        dt = jnp.exp(jax.random.uniform(k, shape, jnp.float32,
+                                        jnp.log(1e-3), jnp.log(1e-1)))
+        return dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+
+    return {
+        "ln": ((*L, D), "zeros"),
+        "in_proj": ((*L, D, proj_out), None),
+        "conv": ((*L, 4, inner + 2 * N), lambda k, s: 0.1 * jax.random.normal(k, s)),
+        "a_log": ((*L, H), a_init),
+        "dt_bias": ((*L, H), dt_init),
+        "skip_d": ((*L, H), "ones"),
+        "norm": ((*L, inner), "zeros"),
+        "out_proj": ((*L, inner, D), None),
+    }
+
+
+def _rwkv_spec(cfg: ModelConfig, L: tuple[int, ...]) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    N = cfg.rwkv_head_dim
+    H = D // N
+    half = lambda k, s: jnp.full(s, 0.5, jnp.float32)
+    spec = {
+        "ln1": ((*L, D), "zeros"), "ln2": ((*L, D), "zeros"),
+        "mu_r": ((*L, D), half), "mu_k": ((*L, D), half),
+        "mu_v": ((*L, D), half), "mu_w": ((*L, D), half),
+        "mu_g": ((*L, D), half),
+        "w_recv": ((*L, D, D), None), "w_key": ((*L, D, D), None),
+        "w_val": ((*L, D, D), None), "w_gateproj": ((*L, D, D), None),
+        "w0": ((*L, D), lambda k, s: jnp.full(s, -4.6, jnp.float32)),
+        "w_lora_a": ((*L, D, 64), 0.02), "w_lora_b": ((*L, 64, D), 0.02),
+        "u": ((*L, H, N), 0.02),
+        "ln_x": ((*L, D), "zeros"),
+        "w_out": ((*L, D, D), None),
+        "cm_mu_k": ((*L, D), half), "cm_mu_r": ((*L, D), half),
+        "w_up": ((*L, D, F), None), "w_down": ((*L, F, D), None),
+        "w_recv_cm": ((*L, D, D), None),
+    }
+    return spec
+
+
+def _block_spec(cfg: ModelConfig, L: tuple[int, ...], moe: bool) -> dict:
+    spec = {"ln1": ((*L, cfg.d_model), "zeros"),
+            "ln2": ((*L, cfg.d_model), "zeros")}
+    spec.update(_attn_spec(cfg, L))
+    if moe:
+        spec.update(_moe_spec(cfg, L))
+    else:
+        spec.update(_ffn_spec(cfg, L, cfg.d_ff))
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    kg = keygen(key)
+    D, V = cfg.d_model, cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": dense_init(next(kg), (V, D), 0.02, dtype),
+        "final_norm": jnp.zeros((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(next(kg), (D, V), None, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = _init_tree(next(kg),
+                                      _block_spec(cfg, (cfg.n_layers,), False),
+                                      dtype)
+    elif fam == "moe":
+        params["layers"] = _init_tree(next(kg),
+                                      _block_spec(cfg, (cfg.n_layers,), True),
+                                      dtype)
+        if cfg.mtp:
+            mtp = _block_spec(cfg, (), False)
+            mtp["mtp_proj"] = ((2 * D, D), None)
+            mtp["mtp_norm"] = ((D,), "zeros")
+            params["mtp_block"] = _init_tree(next(kg), mtp, dtype)
+    elif fam == "ssm":
+        params["layers"] = _init_tree(next(kg), _rwkv_spec(cfg, (cfg.n_layers,)),
+                                      dtype)
+    elif fam == "hybrid":
+        nsb = cfg.n_layers // cfg.attn_every
+        k_inner = cfg.attn_every - 1
+        params["layers"] = _init_tree(next(kg),
+                                      _mamba_spec(cfg, (nsb, k_inner)), dtype)
+        params["shared_attn"] = _init_tree(next(kg), _block_spec(cfg, (), False),
+                                           dtype)
+    elif fam == "audio":
+        enc = _block_spec(cfg, (cfg.n_enc_layers,), False)
+        params["enc_layers"] = _init_tree(next(kg), enc, dtype)
+        params["enc_final_norm"] = jnp.zeros((D,), dtype)
+        dec = _block_spec(cfg, (cfg.n_layers,), False)
+        dec.update({f"x_{k}": v for k, v in _attn_spec(cfg, (cfg.n_layers,)).items()})
+        dec["ln_x_attn"] = ((cfg.n_layers, D), "zeros")
+        params["layers"] = _init_tree(next(kg), dec, dtype)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ------------------------------------------------------------ forward ----
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _attn(p, h, cfg, cos, sin, cache=None, pos=None, causal=True):
+    if cfg.use_mla:
+        hn = h
+        if "q_norm" in p:  # latent norms applied inside projections
+            pass
+        return mla_block(p, hn, cfg, cos, sin, cache=cache, pos=pos)
+    return gqa_block(p, h, cfg, cos, sin, causal=causal, cache=cache, pos=pos)
+
+
+def _dense_block(p, h, cfg, cos, sin, cache=None, pos=None, causal=True):
+    a, new_cache = _attn(p, rms_norm(h, p["ln1"], cfg.norm_eps), cfg, cos, sin,
+                         cache=cache, pos=pos, causal=causal)
+    h = h + a
+    h = h + dense_ffn(p, rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h, new_cache
+
+
+def _moe_block(p, h, cfg, cos, sin, cache=None, pos=None):
+    a, new_cache = _attn(p, rms_norm(h, p["ln1"], cfg.norm_eps), cfg, cos, sin,
+                         cache=cache, pos=pos)
+    h = h + a
+    y, aux = moe_ffn(p, rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h + y, aux, new_cache
+
+
+def _embed_tokens(params, cfg, tokens):
+    h = params["embed"][tokens]
+    if cfg.tie_embeddings:  # gemma-style input scaling
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def _lm_head(params, cfg, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = (h @ params["embed"].T).astype(jnp.float32)
+    else:
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:   # mask padding rows out of softmax
+        iota = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(iota >= cfg.vocab, -1e30, logits)
+    return logits
+
+
+def _rope_tables(cfg, positions):
+    if cfg.use_mla:
+        return rope_freqs(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    return rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            return_hidden: bool = False):
+    """Full-sequence forward. Returns (logits (B,S,V) f32, aux_loss scalar),
+    or (final hidden states, aux) with return_hidden=True (chunked-CE path).
+
+    batch: tokens (B,S[-n_patches]); vlm adds patches (B,n_patches,D);
+    audio adds enc_frames (B,enc_seq,D).
+    """
+    if cfg.family == "audio":
+        return _forward_encdec(params, cfg, batch,
+                               return_hidden=return_hidden)
+
+    tokens = batch["tokens"]
+    h = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    B, S, D = h.shape
+    h = sharding.hint(h, "dp", "model" if cfg.seq_shard else None, None)
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+    aux = jnp.zeros((), jnp.float32)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        def body(h, lp):
+            h, _ = _dense_block(lp, h, cfg, cos, sin)
+            return h, None
+        h, _ = lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+    elif fam == "moe":
+        def body(carry, lp):
+            h, aux = carry
+            h, a, _ = _moe_block(lp, h, cfg, cos, sin)
+            return (h, aux + a), None
+        (h, aux), _ = lax.scan(_maybe_remat(body, cfg), (h, aux),
+                               params["layers"])
+    elif fam == "ssm":
+        def body(h, lp):
+            h, _ = rwkv_block(lp, h, cfg)
+            return h, None
+        h, _ = lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(h, lp):
+            hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+            d, _ = mamba_block(lp, hn, cfg)
+            return h + d, None
+
+        def outer(h, lps):
+            h, _ = lax.scan(inner, h, lps)
+            h, _ = _dense_block(shared, h, cfg, cos, sin)
+            return h, None
+        h, _ = lax.scan(_maybe_remat(outer, cfg), h, params["layers"])
+    else:
+        raise ValueError(fam)
+
+    if cfg.family == "moe" and cfg.mtp and "mtp_block" in params \
+            and "labels" in batch:
+        aux = aux + _mtp_loss(params, cfg, h, batch, cos, sin)
+    if cfg.family == "vlm":
+        h = h[:, batch["patches"].shape[1]:, :]
+    if return_hidden:
+        return h, aux
+    return _lm_head(params, cfg, h), aux
+
+
+def _mtp_loss(params, cfg, h, batch, cos, sin):
+    """DeepSeek-V3 multi-token prediction: one extra block predicts t+2."""
+    p = params["mtp_block"]
+    tokens = batch["tokens"]
+    nxt = jnp.roll(tokens, -1, axis=1)
+    e = _embed_tokens(params, cfg, nxt)
+    hin = jnp.concatenate([rms_norm(h, p["mtp_norm"], cfg.norm_eps), e],
+                          axis=-1) @ p["mtp_proj"]
+    hout, _ = _dense_block(p, hin, cfg, cos, sin)
+    S = hout.shape[1]
+    labels2 = jnp.roll(batch["labels"], -1, axis=1)
+    labels2 = jnp.where(jnp.arange(S)[None, :] >= S - 2, -1, labels2)
+    ce, _, cnt = ce_from_hidden(params, cfg, hout, labels2,
+                                chunk=cfg.ce_chunk)
+    return 0.3 * ce / jnp.maximum(cnt, 1.0)
+
+
+def _forward_encdec(params, cfg, batch, *, return_hidden=False):
+    """Whisper: encoder over precomputed frame embeddings + causal decoder."""
+    frames = batch["enc_frames"]
+    B = frames.shape[0]
+    h = frames.astype(params["embed"].dtype)
+    cos_e, sin_e = _rope_tables(cfg, jnp.arange(h.shape[1]))
+
+    def enc_body(h, lp):
+        h, _ = _dense_block(lp, h, cfg, cos_e, sin_e, causal=False)
+        return h, None
+    h, _ = lax.scan(_maybe_remat(enc_body, cfg), h, params["enc_layers"])
+    enc_out = rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    hd_ = _embed_tokens(params, cfg, tokens)
+    S = hd_.shape[1]
+    cos_d, sin_d = _rope_tables(cfg, jnp.arange(S))
+
+    def dec_body(h, lp):
+        h, _ = _dec_block(lp, h, enc_out, cfg, cos_d, sin_d)
+        return h, None
+    hd_, _ = lax.scan(_maybe_remat(dec_body, cfg), hd_, params["layers"])
+    if return_hidden:
+        return hd_, jnp.zeros((), jnp.float32)
+    return _lm_head(params, cfg, hd_), jnp.zeros((), jnp.float32)
+
+
+def _dec_block(lp, h, enc_out, cfg, cos, sin, cache=None, pos=None,
+               enc_kv=None):
+    a, new_cache = gqa_block(lp, rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                             cos, sin, causal=True, cache=cache, pos=pos)
+    h = h + a
+    xp = {k[2:]: v for k, v in lp.items() if k.startswith("x_")}
+    hx = rms_norm(h, lp["ln_x_attn"], cfg.norm_eps)
+    if enc_kv is None:
+        Hkv, hd = cfg.eff_kv_heads, cfg.head_dim
+        Be, Se, _ = enc_out.shape
+        k = (enc_out @ xp["wk"]).reshape(Be, Se, Hkv, hd)
+        v = (enc_out @ xp["wv"]).reshape(Be, Se, Hkv, hd)
+        enc_kv = (k, v)
+    h = h + cross_block(xp, hx, enc_kv, cfg)
+    h = h + dense_ffn(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+    return h, new_cache
+
+
+# ------------------------------------------------------------- decode ----
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Zero-filled decoding cache for `batch` streams of up to `max_len`."""
+    fam = cfg.family
+    L = cfg.n_layers
+    if fam in ("dense", "vlm", "audio") or (fam == "moe" and not cfg.use_mla):
+        kv = KVCache(
+            k=jnp.zeros((L, batch, max_len, cfg.eff_kv_heads, cfg.head_dim), dtype),
+            v=jnp.zeros((L, batch, max_len, cfg.eff_kv_heads, cfg.head_dim), dtype))
+        cache = {"kv": kv}
+        if fam == "audio":
+            cache["enc_kv"] = (
+                jnp.zeros((L, batch, cfg.enc_seq, cfg.eff_kv_heads, cfg.head_dim), dtype),
+                jnp.zeros((L, batch, cfg.enc_seq, cfg.eff_kv_heads, cfg.head_dim), dtype))
+        return cache
+    if fam == "moe":  # MLA latent cache
+        return {"mla": MLACache(
+            c_kv=jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dtype),
+            k_rope=jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), dtype))}
+    if fam == "ssm":
+        st = init_rwkv_state(cfg, batch, dtype)
+        return {"rwkv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (L, *x.shape)), st)}
+    if fam == "hybrid":
+        nsb = L // cfg.attn_every
+        k_inner = cfg.attn_every - 1
+        ms = init_mamba_state(cfg, batch, dtype)
+        mamba = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None, None], (nsb, k_inner, *x.shape)), ms)
+        kv = KVCache(
+            k=jnp.zeros((nsb, batch, max_len, cfg.eff_kv_heads, cfg.head_dim), dtype),
+            v=jnp.zeros((nsb, batch, max_len, cfg.eff_kv_heads, cfg.head_dim), dtype))
+        return {"mamba": mamba, "kv": kv}
+    raise ValueError(fam)
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: dict, pos) -> tuple[jax.Array, dict]:
+    """One token step: tokens (B,1) -> (logits (B,1,V) f32, new cache)."""
+    h = _embed_tokens(params, cfg, tokens)
+    cos, sin = _rope_tables(cfg, pos + jnp.arange(1))
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        def body(h, xs):
+            lp, c = xs
+            h, nc = _dense_block(lp, h, cfg, cos, sin, cache=c, pos=pos)
+            return h, nc
+        h, kv = lax.scan(body, h, (params["layers"], cache["kv"]))
+        return _lm_head(params, cfg, h), {"kv": kv}
+
+    if fam == "moe":
+        key = "mla" if cfg.use_mla else "kv"
+        def body(carry, xs):
+            lp, c = xs
+            h, _, nc = _moe_block(lp, carry, cfg, cos, sin, cache=c, pos=pos)
+            return h, nc
+        h, nc = lax.scan(body, h, (params["layers"], cache[key]))
+        return _lm_head(params, cfg, h), {key: nc}
+
+    if fam == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            h, ns = rwkv_block(lp, h, cfg, state=st)
+            return h, ns
+        h, ns = lax.scan(body, h, (params["layers"], cache["rwkv"]))
+        return _lm_head(params, cfg, h), {"rwkv": ns}
+
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(h, xs):
+            lp, st = xs
+            hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+            d, ns = mamba_block(lp, hn, cfg, state=st)
+            return h + d, ns
+
+        def outer(h, xs):
+            lps, sts, kvc = xs
+            h, nsts = lax.scan(inner, h, (lps, sts))
+            h, nkv = _dense_block(shared, h, cfg, cos, sin, cache=kvc, pos=pos)
+            return h, (nsts, nkv)
+        h, (nm, nkv) = lax.scan(outer, h,
+                                (params["layers"], cache["mamba"], cache["kv"]))
+        return _lm_head(params, cfg, h), {"mamba": nm, "kv": nkv}
+
+    if fam == "audio":
+        def body(h, xs):
+            lp, c, ek, ev = xs
+            h, nc = _dec_block(lp, h, None, cfg, cos, sin, cache=c, pos=pos,
+                               enc_kv=(ek, ev))
+            return h, nc
+        ek, ev = cache["enc_kv"]
+        h, kv = lax.scan(body, h, (params["layers"], cache["kv"], ek, ev))
+        return _lm_head(params, cfg, h), {"kv": kv, "enc_kv": cache["enc_kv"]}
+
+    raise ValueError(fam)
+
+
+# ------------------------------------------------------- chunked loss ----
+
+
+def ce_sums(logits, labels):
+    """(sum CE, sum lse^2, token count) with labels<0 masked out."""
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    return (jnp.sum((lse - ll) * mask), jnp.sum(jnp.square(lse) * mask),
+            jnp.sum(mask))
+
+
+def ce_from_hidden(params, cfg: ModelConfig, h, labels, *, chunk: int = 0):
+    """CE sums from final hidden states; chunk>0 scans over sequence chunks
+    so the (B, S, V) f32 logits tensor never materializes (the logits peak
+    dominates HBM for fat-vocab archs)."""
+    B, S, D = h.shape
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        return ce_sums(_lm_head(params, cfg, h), labels)
+    nc = S // chunk
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def body(carry, xs):
+        hc, lc = xs
+        ce, z, cnt = ce_sums(_lm_head(params, cfg, hc), lc)
+        return (carry[0] + ce, carry[1] + z, carry[2] + cnt), None
+
+    zero = jnp.zeros((), jnp.float32)
+    (ce, z, cnt), _ = lax.scan(body, (zero, zero, zero), (hs, ls))
+    return ce, z, cnt
+
+
+# ------------------------------------------------------ serving prefill ----
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Full-sequence prefill that RETURNS the decode cache.
+
+    The serving handoff: run the prompt once, keep per-layer KV/latent/
+    state, then `decode_step` continues from position S.  Implemented by
+    running each block in cache mode against a zero cache at pos=0 with
+    the whole prompt as one "step" (dynamic_update_slice writes [0, S)).
+
+    Returns (logits (B,S,V) f32, cache, next_pos).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if cfg.family == "vlm":
+        S = S + cfg.n_patches
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+    h = _embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm":
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+    fam = cfg.family
+    pos0 = jnp.int32(0)
+
+    if fam in ("dense", "vlm"):
+        def body(h, xs):
+            lp, c = xs
+            h, nc = _dense_block(lp, h, cfg, cos, sin, cache=c, pos=pos0)
+            return h, nc
+        h, kv = lax.scan(body, h, (params["layers"], cache["kv"]))
+        new_cache = {"kv": kv}
+    elif fam == "moe":
+        key = "mla" if cfg.use_mla else "kv"
+        def body(h, xs):
+            lp, c = xs
+            h, _, nc = _moe_block(lp, h, cfg, cos, sin, cache=c, pos=pos0)
+            return h, nc
+        h, nc = lax.scan(body, h, (params["layers"], cache[key]))
+        new_cache = {key: nc}
+    elif fam == "ssm":
+        # run the recurrence over the full prompt, keep the final state
+        def body(h, lp):
+            h, ns = rwkv_block(lp, h, cfg, return_state=True)
+            return h, ns
+        h, ns = lax.scan(body, h, params["layers"])
+        new_cache = {"rwkv": jax.tree.map(
+            lambda c, n: n.astype(c.dtype), cache["rwkv"], ns)}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(h, lp):
+            hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+            d, ns = mamba_block(lp, hn, cfg, return_state=True)
+            return h + d, ns
+
+        def outer(h, xs):
+            lps, kvc = xs
+            h, nsts = lax.scan(inner, h, lps)
+            h, nkv = _dense_block(shared, h, cfg, cos, sin, cache=kvc,
+                                  pos=pos0)
+            return h, (nsts, nkv)
+        h, (nm, nkv) = lax.scan(outer, h, (params["layers"], cache["kv"]))
+        new_cache = {"mamba": jax.tree.map(
+            lambda c, n: n.astype(c.dtype), cache["mamba"], nm),
+            "kv": nkv}
+    elif fam == "audio":
+        # encode once, fill cross-attn K/V + run decoder prompt with cache
+        frames = batch["enc_frames"].astype(h.dtype)
+        he = frames
+        cos_e, sin_e = _rope_tables(cfg, jnp.arange(he.shape[1]))
+
+        def enc_body(he, lp):
+            he, _ = _dense_block(lp, he, cfg, cos_e, sin_e, causal=False)
+            return he, None
+        he, _ = lax.scan(_maybe_remat(enc_body, cfg), he,
+                         params["enc_layers"])
+        enc_out = rms_norm(he, params["enc_final_norm"], cfg.norm_eps)
+        Hkv, hd = cfg.eff_kv_heads, cfg.head_dim
+        Be, Se, _ = enc_out.shape
+
+        def dec_body(h, xs):
+            lp, c = xs
+            xp = {k[2:]: v for k, v in lp.items() if k.startswith("x_")}
+            ek = (enc_out @ xp["wk"]).reshape(Be, Se, Hkv, hd)
+            ev = (enc_out @ xp["wv"]).reshape(Be, Se, Hkv, hd)
+            h, nc = _dec_block(lp, h, None, cfg, cos, sin, cache=c,
+                               pos=pos0, enc_kv=(ek, ev))
+            return h, (nc, ek.astype(cache_dtype), ev.astype(cache_dtype))
+        h, (kv, eks, evs) = lax.scan(dec_body, h,
+                                     (params["layers"], cache["kv"]))
+        new_cache = {"kv": kv, "enc_kv": (eks, evs)}
+    else:
+        raise ValueError(fam)
+
+    if cfg.family == "vlm":
+        h = h[:, cfg.n_patches:, :]
+    return _lm_head(params, cfg, h), new_cache, jnp.int32(S)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style).
+
+Expert-parallel layout: the leading expert dim of the (E, C, D) dispatch
+buffer and the expert weight stacks shard over the mesh `model` axis; the
+capacity dim shards over the batch axes.  Dispatch/combine are scatter-add
+and gather in the global view — under SPMD these lower to the all-to-all
+pattern of classic EP.
+
+Position computation is the slot-major cumsum trick: entries are ordered
+(slot, token) so slot 0 of every token beats slot 1 for buffer space, and
+tokens that overflow an expert's capacity are *dropped* (contribute zero;
+the residual stream carries them — standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.common import activation
+
+
+def dense_ffn(p, h, cfg, prefix="w"):
+    """Gated (or plain) FFN: h (B,S,D) -> (B,S,D)."""
+    act = activation(cfg.act)
+    up = h @ p[f"{prefix}_up"]
+    up = sharding.hint(up, "dp", None, "model")
+    if cfg.gated:
+        gate = act(h @ p[f"{prefix}_gate"])
+        gate = sharding.hint(gate, "dp", None, "model")
+        inner = gate * up
+    else:
+        inner = act(up)
+    return inner @ p[f"{prefix}_down"]
+
+
+def moe_ffn(p, h, cfg):
+    """MoE FFN: returns (out (B,S,D), aux_loss scalar).
+
+    p: router (D,E); e_gate/e_up (E,D,F); e_down (E,F,D);
+       optional shared-expert weights s_gate/s_up/s_down.
+    """
+    B, S, D = h.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    x = h.reshape(T, D)
+    x = sharding.hint(x, "dp", None)
+
+    logits = (x @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if cfg.route_groups > 1:
+        # group-limited routing (DeepSeek-V3): keep only the top-g expert
+        # groups per token, confining dispatch traffic to a fraction of
+        # the mesh (groups map to contiguous device blocks under EP)
+        G = cfg.route_groups
+        gsz = E // G
+        gscore = jnp.sum(jax.lax.top_k(probs.reshape(T, G, gsz),
+                                       min(2, gsz))[0], axis=-1)  # (T, G)
+        _, gidx = jax.lax.top_k(gscore, cfg.route_top_groups)
+        gmask = jnp.zeros((T, G), bool).at[
+            jnp.arange(T)[:, None], gidx].set(True)
+        probs = jnp.where(jnp.repeat(gmask, gsz, axis=1), probs, 0.0)
+    w, ids = jax.lax.top_k(probs, K)                      # (T, K)
+    w = (w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)).astype(h.dtype)
+
+    cap = int(K * T * cfg.capacity_factor / E)
+    cap = max(cap, 1)
+
+    # slot-major flattening: (K*T,) with slot 0 entries first
+    ids_f = ids.T.reshape(-1)                             # (KT,)
+    tok_f = jnp.tile(jnp.arange(T), K)
+    w_f = w.T.reshape(-1)
+    oh = jax.nn.one_hot(ids_f, E, dtype=jnp.int32)        # (KT, E)
+    pos_in_e = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=1) - 1
+    keep = pos_in_e < cap
+    pos_c = jnp.clip(pos_in_e, 0, cap - 1)
+
+    # dispatch: scatter-add tokens into the (E, cap, D) buffer
+    contrib = jnp.where(keep[:, None], x[tok_f], 0).astype(h.dtype)
+    buf = jnp.zeros((E, cap, D), h.dtype).at[ids_f, pos_c].add(contrib)
+    e_axes = ("model", "data") if sharding.ep2d() else "model"
+    buf = sharding.hint(buf, e_axes, None if sharding.ep2d() else "dp", None)
+
+    # expert compute (batched over the expert dim — EP over `model`)
+    act = activation(cfg.act)
+    up = jnp.einsum("ecd,edf->ecf", buf, p["e_up"])
+    if cfg.gated:
+        gate = act(jnp.einsum("ecd,edf->ecf", buf, p["e_gate"]))
+        inner = gate * up
+    else:
+        inner = act(up)
+    out_buf = jnp.einsum("ecf,efd->ecd", inner, p["e_down"])
+    out_buf = sharding.hint(out_buf, e_axes, None if sharding.ep2d() else "dp",
+                            None)
+
+    # combine: gather each entry's expert output, weight, scatter to tokens
+    gathered = out_buf[ids_f, pos_c]                      # (KT, D)
+    gathered = jnp.where(keep[:, None], gathered, 0) * w_f[:, None]
+    y = jnp.zeros((T, D), h.dtype).at[tok_f].add(gathered)
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    frac_tokens = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32),
+                           axis=0)
+    frac_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_prob) * cfg.router_aux_coef
+
+    if cfg.n_shared_experts > 0:
+        y = y + dense_ffn(p, h, cfg, prefix="s").reshape(T, D)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,118 @@
+"""RWKV-6 (Finch) block: data-dependent-decay linear attention, no KV cache.
+
+Time-mix keeps a per-head (N x N) matrix state updated once per token —
+decode is O(1) in sequence length, which is why rwkv6 runs the long_500k
+cell that quadratic-attention archs skip.  Training materializes r/k/v/w
+for the whole sequence (matmuls) and runs the recurrence as a lax.scan.
+
+The decay is the Finch LoRA form: w = exp(-exp(w0 + tanh(x W1) W2)),
+data-dependent per channel per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import sharding
+from repro.models.common import rms_norm
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # (B, H, N, N) f32 linear-attention state
+    tm_last: jax.Array  # (B, D) previous token (time-mix shift)
+    cm_last: jax.Array  # (B, D) previous token (channel-mix shift)
+
+
+def _heads(t, H, N):
+    return t.reshape(*t.shape[:-1], H, N)
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu
+
+
+def _decay(xw, p):
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32)
+                            + lora.astype(jnp.float32)))
+
+
+def rwkv_block(p, hin, cfg, *, state: RWKVState | None = None,
+               return_state: bool = False):
+    """hin (B,S,D) residual stream -> (B,S,D).
+
+    state=None: full sequence (optionally return the final state for the
+    serving prefill handoff).  state!=None with S==1: decode.
+    """
+    B, S, D = hin.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+
+    # ---- time mix ----
+    x = rms_norm(hin, p["ln1"], cfg.norm_eps)
+    if state is None:
+        xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        wkv0 = jnp.zeros((B, H, N, N), jnp.float32)
+    else:
+        xprev = state.tm_last[:, None, :]
+        wkv0 = state.wkv
+    xr = _mix(x, xprev, p["mu_r"])
+    xk = _mix(x, xprev, p["mu_k"])
+    xv = _mix(x, xprev, p["mu_v"])
+    xw = _mix(x, xprev, p["mu_w"])
+    xg = _mix(x, xprev, p["mu_g"])
+    r = _heads(xr @ p["w_recv"], H, N).astype(jnp.float32)
+    k = _heads(xk @ p["w_key"], H, N).astype(jnp.float32)
+    v = _heads(xv @ p["w_val"], H, N).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_gateproj"])
+    w = _heads(_decay(xw, p), H, N)                     # (B,S,H,N) in (0,1)
+    u = p["u"].astype(jnp.float32)                      # (H,N)
+
+    def step(wkv, inp):
+        rt, kt, vt, wt = inp                            # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]        # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       wkv + u[None, :, :, None] * kv)
+        wkv = wt[..., :, None] * wkv + kv
+        return wkv, y
+
+    seq_first = lambda t: jnp.moveaxis(t, 1, 0)          # (S,B,H,N)
+    new_wkv, ys = lax.scan(step, wkv0,
+                           (seq_first(r), seq_first(k),
+                            seq_first(v), seq_first(w)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    h = hin + y @ p["w_out"]
+
+    # ---- channel mix ----
+    x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if state is None:
+        x2prev = jnp.pad(x2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x2prev = state.cm_last[:, None, :]
+    hk = _mix(x2, x2prev, p["cm_mu_k"])
+    hr = _mix(x2, x2prev, p["cm_mu_r"])
+    kcm = jnp.square(jax.nn.relu(hk @ p["w_up"]))
+    kcm = sharding.hint(kcm, "dp", None, "model")
+    vcm = kcm @ p["w_down"]
+    rcm = jax.nn.sigmoid(hr @ p["w_recv_cm"])
+    h = h + rcm * vcm
+
+    new_state = None
+    if state is not None or return_state:
+        new_state = RWKVState(wkv=new_wkv, tm_last=x[:, -1, :],
+                              cm_last=x2[:, -1, :])
+    return h, new_state
+
+
+def init_rwkv_state(cfg, batch: int, dtype) -> RWKVState:
+    D = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = D // N
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, N, N), jnp.float32),
+        tm_last=jnp.zeros((batch, D), dtype),
+        cm_last=jnp.zeros((batch, D), dtype))

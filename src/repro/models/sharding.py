@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules for the model zoo.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  Logical placement:
+
+  * batch            -> ("pod", "data")        (DP)
+  * TP / EP          -> "model"                (heads, d_ff, experts, vocab)
+  * FSDP weight shard-> "data"                 (the d_model-ish dim)
+  * stacked layer dim-> replicated (scan carries it)
+
+Divisibility fallback: any dim not divisible by its mesh axis size is left
+unsharded (e.g. whisper's 20 heads or 51866 vocab on a 16-wide model axis)
+— recorded in the dry-run log so the roofline can attribute replication.
+
+Activation hints are applied through ``hint`` which no-ops when no mesh
+context is active, so smoke tests and CPU runs never see sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# module-level mesh context used for activation hints; set by launchers
+_ACTIVE: dict[str, Any] = {"mesh": None, "dp": None, "ep2d": False}
+
+
+def set_ep2d(on: bool) -> None:
+    """2-D expert parallelism: distribute experts over model x data instead
+    of EP(model) + FSDP(data).  Kills the per-step all-gather of the full
+    expert stack (the dominant collective for 256-expert models); expert
+    weights live whole on one device row, tokens move via all-to-all."""
+    _ACTIVE["ep2d"] = on
+
+
+def ep2d() -> bool:
+    return _ACTIVE["ep2d"]
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    """Register the active mesh for activation hints (None to disable)."""
+    if mesh is None:
+        _ACTIVE["mesh"] = None
+        _ACTIVE["dp"] = None
+        return
+    axes = mesh.axis_names
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["dp"] = ("pod", "data") if "pod" in axes else ("data",)
+
+
+def dp_axes() -> tuple[str, ...] | None:
+    return _ACTIVE["dp"]
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint that degrades to identity without a mesh.
+
+    spec entries: "dp" (expands to the batch axes), a mesh axis name, or
+    None.  Dims whose size is not divisible by the axis size fall back to
+    None.
+    """
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    resolved = []
+    for dim, s in enumerate(spec):
+        if s == "dp":
+            s = _ACTIVE["dp"]
+        if s is None:
+            resolved.append(None)
+            continue
+        names = (s,) if isinstance(s, str) else tuple(s)
+        total = 1
+        for nm in names:
+            total *= sizes.get(nm, 1)
+        if x.shape[dim] % total != 0:
+            resolved.append(None)
+        else:
+            resolved.append(names if len(names) > 1 else names[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def _divis(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its path name.
+
+    Weight naming convention (see models/model.py init):
+      wq wk wv wo w_gate w_up w_down  — attention / FFN projections
+      e_gate e_up e_down router       — MoE experts (leading E dim)
+      embed lm_head pos_*             — vocab-space tables
+      in_proj out_proj (ssm/rwkv)     — wide fused projections
+      everything else (norms, biases, decay vectors) — replicated
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    d = sizes.get("data", 1)
+    leaf = path.split("/")[-1]
+    nd = len(shape)
+
+    def ax(i: int, name: str, size: int):
+        return name if _divis(shape[i], size) else None
+
+    if leaf in ("embed", "lm_head", "mtp_head"):
+        # (V, D) or (D, V): shard vocab over model, other dim over data
+        if leaf == "embed":
+            return P(ax(0, "model", m), ax(1, "data", d))
+        return P(ax(0, "data", d), ax(1, "model", m))
+    if leaf.startswith("pos_"):
+        return P(*([None] * nd))
+    if leaf in ("e_gate", "e_up", "e_down"):
+        if _ACTIVE["ep2d"] and shape[1] % (m * d) == 0:
+            # 2-D EP: experts spread over model x data, no FSDP gather
+            return P(None, ("model", "data"), None, None)
+        # (L, E, Din, Dout): experts over model (EP), inner over data
+        if leaf == "e_down":
+            return P(None, ax(1, "model", m), None, ax(3, "data", d))
+        return P(None, ax(1, "model", m), ax(2, "data", d), None)
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj",
+                "wq_a", "wq_b", "wkv_a", "wkv_b", "w_recv", "w_key",
+                "w_val", "w_gateproj"):
+        # (..., D_in, D_wide): FSDP on D_in, TP on the wide dim
+        return P(*([None] * (nd - 2)),
+                 ax(nd - 2, "data", d), ax(nd - 1, "model", m))
+    if leaf in ("wo", "w_down", "out_proj", "w_out"):
+        # (..., D_wide, D_out): TP on the wide dim, FSDP on D_out
+        return P(*([None] * (nd - 2)),
+                 ax(nd - 2, "model", m), ax(nd - 1, "data", d))
+    if leaf == "router":
+        return P(*([None] * (nd - 2)), ax(nd - 2, "data", d), None)
+    if leaf == "conv":  # depthwise conv kernels (mamba) — small
+        return P(*([None] * nd))
+    # norms / scalar-ish leaves: replicated
+    return P(*([None] * nd))
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    """Pytree of NamedShardings matching `params` (works on ShapeDtypeStructs)."""
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        return NamedSharding(mesh, spec_for(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params)

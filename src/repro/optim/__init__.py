@@ -1,0 +1,4 @@
+from repro.optim.adamw import (OptState, adamw_init, adamw_update,
+                               adafactor_init, adafactor_update, init_opt,
+                               apply_opt, clip_by_global_norm, cosine_lr)
+from repro.optim.compression import EFState, ef_init, compress

@@ -1,0 +1,147 @@
+"""Optimizers: AdamW and Adafactor(-style factored second moment).
+
+Self-contained (no optax dependency).  Adafactor is the memory play for
+the 671B config: first moment in bf16, second moment factored into row/col
+statistics — O(d_in + d_out) instead of O(d_in * d_out) per matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any        # first moment (adamw: f32 tree; adafactor: bf16 tree)
+    v: Any        # second moment (adamw: f32 tree; adafactor: factored)
+
+
+def cosine_lr(tc: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    return tc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+# ------------------------------------------------------------- AdamW ----
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def adamw_update(tc: TrainConfig, params, grads, st: OptState):
+    step = st.step + 1
+    lr = cosine_lr(tc, step)
+    b1, b2 = tc.b1, tc.b2
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(st.m)
+    flat_v = tdef.flatten_up_to(st.v)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([r[0] for r in res])
+    new_m = tdef.unflatten([r[1] for r in res])
+    new_v = tdef.unflatten([r[2] for r in res])
+    return new_p, OptState(step=step, m=new_m, v=new_v)
+
+
+# --------------------------------------------------------- Adafactor ----
+
+def adafactor_init(params, *, momentum: bool = True) -> OptState:
+    def m_init(p):
+        return jnp.zeros(p.shape, jnp.bfloat16)
+
+    def v_init(p):
+        if p.ndim >= 2:
+            return (jnp.zeros(p.shape[:-1], jnp.float32),        # row stats
+                    jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(m_init, params) if momentum else None,
+                    v=jax.tree.map(v_init, params,
+                                   is_leaf=lambda x: isinstance(x, jax.Array)))
+
+
+def adafactor_update(tc: TrainConfig, params, grads, st: OptState):
+    step = st.step + 1
+    lr = cosine_lr(tc, step)
+    b2 = 1.0 - step.astype(jnp.float32) ** -0.8  # Shazeer-Stern decay
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            vr, vc = v
+            vr2 = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc2 = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = (vr2[..., None] * vc2[..., None, :]
+                     / (jnp.mean(vr2, axis=-1, keepdims=True)[..., None] + 1e-30))
+            u = gf * jax.lax.rsqrt(denom + 1e-30)
+            v2 = (vr2, vc2)
+        else:
+            v2 = b2 * v + (1 - b2) * g2
+            u = gf * jax.lax.rsqrt(v2 + 1e-30)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        if m is None:                 # momentum-free (Shazeer-Stern) mode
+            m2, delta = None, u
+        else:
+            m2 = (tc.b1 * m.astype(jnp.float32) + (1 - tc.b1) * u)
+            delta = m2
+            m2 = m2.astype(jnp.bfloat16)
+        if p.ndim >= 2:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m2, v2)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = ([None] * len(flat_p) if st.m is None
+              else tdef.flatten_up_to(st.m))
+    flat_v = tdef.flatten_up_to(st.v)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([r[0] for r in res])
+    new_m = None if st.m is None else tdef.unflatten([r[1] for r in res])
+    new_v = tdef.unflatten([r[2] for r in res])
+    return new_p, OptState(step=step, m=new_m, v=new_v)
+
+
+def init_opt(tc: TrainConfig, params) -> OptState:
+    if tc.optimizer == "adamw":
+        return adamw_init(params)
+    return adafactor_init(params, momentum=tc.b1 > 0.0)
+
+
+def apply_opt(tc: TrainConfig, params, grads, st: OptState):
+    if tc.optimizer == "adamw":
+        return adamw_update(tc, params, grads, st)
+    return adafactor_update(tc, params, grads, st)

@@ -1,0 +1,54 @@
+"""Error-feedback top-k gradient compression for the DP axis.
+
+At 1000+-node scale the data-parallel all-reduce of dense gradients can
+dominate step time for fat-embedding models.  EF-top-k keeps only the
+largest `frac` fraction of each gradient tensor (by magnitude), carries
+the residual forward (error feedback guarantees convergence), and lets
+the all-reduce move ~frac of the bytes.
+
+In the SPMD/jit world the "compression" is expressed as sparsification
+*before* the pseudo-all-reduce (the mean over the DP axis happens inside
+jit); the bytes saving is realized on real multi-host meshes where the
+gradient tensors are sharded over `data` — we verify semantics (masking +
+error feedback) here and count collective bytes in the roofline.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # same-structure tree of carried-forward error
+
+
+def ef_init(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    k = max(1, int(frac * x.size))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress(grads, ef: EFState, frac: float):
+    """Returns (sparse grads to all-reduce, new EF state)."""
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        if acc.ndim < 2:          # don't sparsify norms/biases
+            return acc, jnp.zeros_like(acc)
+        mask = _topk_mask(acc, frac)
+        sent = acc * mask
+        return sent, acc - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    res = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = tdef.unflatten([r[0] for r in res])
+    new_r = tdef.unflatten([r[1] for r in res])
+    return sent, EFState(residual=new_r)

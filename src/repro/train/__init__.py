@@ -1,0 +1,2 @@
+from repro.train.steps import TrainState, build_train_step, build_serve_step, init_state, loss_fn
+from repro.train.loop import train

@@ -1,0 +1,77 @@
+"""train_step / serve_step builders — the units the launcher jits and shards."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import model as M
+from repro.optim import adamw as O
+from repro.optim import compression as C
+
+Z_LOSS = 1e-4
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: O.OptState
+    ef: C.EFState | None
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    labels = batch["labels"]
+    if cfg.ce_chunk > 0:
+        # chunked CE: the (B, S, V) f32 logits never materialize
+        h, aux = M.forward(params, cfg, batch, return_hidden=True)
+        ce_sum, z_sum, cnt = M.ce_from_hidden(params, cfg, h, labels,
+                                              chunk=cfg.ce_chunk)
+    else:
+        logits, aux = M.forward(params, cfg, batch)    # logits f32
+        ce_sum, z_sum, cnt = M.ce_sums(logits, labels)
+    denom = jnp.maximum(cnt, 1.0)
+    ce = ce_sum / denom
+    zloss = Z_LOSS * z_sum / denom
+    total = ce + zloss + aux
+    return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+def init_state(cfg: ModelConfig, tc: TrainConfig, key,
+               param_dtype=jnp.float32) -> TrainState:
+    params = M.init_params(cfg, key, param_dtype)
+    return TrainState(params=params, opt=O.init_opt(tc, params),
+                      ef=C.ef_init(params) if tc.compress_grads else None)
+
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics), jit-ready."""
+
+    def train_step(state: TrainState, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch)
+        grads, gnorm = O.clip_by_global_norm(grads, tc.grad_clip)
+        ef = state.ef
+        if ef is not None:
+            grads, ef = C.compress(grads, ef, tc.topk_frac)
+        params, opt = O.apply_opt(tc, state.params, grads, state.opt)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(params=params, opt=opt, ef=ef), metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ModelConfig, *, greedy: bool = True):
+    """Returns serve_step(params, cache, tokens, pos) -> (next_tokens, cache).
+
+    One new token per request stream against a seq_len-deep KV/state cache
+    — exactly the decode_* / long_* dry-run cells.
+    """
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = M.decode_step(params, cfg, tokens, cache, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step

@@ -1,0 +1,5 @@
+"""Make `pytest tests/` work with or without PYTHONPATH=src."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,62 @@
+"""K-Means / DBSCAN baselines + ARI (paper Table 3 machinery)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.data.synth import make_dataset
+
+
+def test_kmeans_recovers_blobs():
+    X, y = make_dataset("blobs")
+    labels, centers, inertia = core.kmeans(jnp.asarray(X),
+                                           jax.random.PRNGKey(0), k=3)
+    assert core.adjusted_rand_index(np.asarray(labels), y) > 0.95
+    assert float(inertia) > 0
+
+
+def test_kmeans_fails_on_circles_dbscan_succeeds():
+    """The paper's headline qualitative comparison (Table 3, Circles)."""
+    X, y = make_dataset("circles")
+    km, _, _ = core.kmeans(jnp.asarray(X), jax.random.PRNGKey(0), k=2)
+    db = core.dbscan(jnp.asarray(X), eps=0.12, min_pts=5)
+    ari_km = core.adjusted_rand_index(np.asarray(km), y)
+    ari_db = core.adjusted_rand_index(np.asarray(db), y)
+    assert ari_db > 0.95 > ari_km + 0.5
+
+
+def test_dbscan_moons():
+    X, y = make_dataset("moons")
+    db = core.dbscan(jnp.asarray(X), eps=0.12, min_pts=5)
+    assert core.adjusted_rand_index(np.asarray(db), y) > 0.9
+
+
+def test_dbscan_labels_noise():
+    rng = np.random.default_rng(0)
+    X = np.concatenate([rng.normal(scale=0.05, size=(50, 2)),
+                        np.array([[5.0, 5.0]])]).astype(np.float32)
+    db = np.asarray(core.dbscan(jnp.asarray(X), eps=0.3, min_pts=5))
+    assert db[-1] == -1          # the far outlier is noise
+    assert len(set(db[:50].tolist())) == 1
+
+
+def test_ari_properties():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert core.adjusted_rand_index(a, a) == pytest.approx(1.0)
+    perm = np.array([5, 5, 3, 3, 9, 9])   # same partition, renamed
+    assert core.adjusted_rand_index(a, perm) == pytest.approx(1.0)
+    rng = np.random.default_rng(0)
+    b = rng.integers(0, 3, 600)
+    c = rng.integers(0, 3, 600)
+    assert abs(core.adjusted_rand_index(b, c)) < 0.05   # ~0 for random
+
+
+def test_pca_shape_and_variance_order():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(100, 5)) * np.array([10, 5, 1, .1, .01]),
+                    jnp.float32)
+    P = core.pca(X, k=2)
+    assert P.shape == (100, 2)
+    v = np.var(np.asarray(P), axis=0)
+    assert v[0] >= v[1]

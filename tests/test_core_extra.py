@@ -1,0 +1,128 @@
+"""Hopkins / sVAT / diagnostics / distributed VAT properties."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.kernels import ops
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(20, 200), d=st.integers(1, 6))
+def test_hopkins_in_unit_interval(seed, n, d):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    h = float(core.hopkins(X, jax.random.PRNGKey(seed)))
+    assert 0.0 <= h <= 1.0
+
+
+def test_hopkins_separates_uniform_from_clustered():
+    rng = np.random.default_rng(0)
+    U = jnp.asarray(rng.uniform(size=(400, 2)), jnp.float32)
+    C = jnp.asarray(np.concatenate([rng.normal(scale=.05, size=(200, 2)),
+                                    rng.normal(scale=.05, size=(200, 2)) + 3]),
+                    jnp.float32)
+    hu = float(core.hopkins(U, jax.random.PRNGKey(1)))
+    hc = float(core.hopkins(C, jax.random.PRNGKey(1)))
+    assert hc > 0.8 > hu + 0.1
+
+
+def test_svat_sample_is_valid_subset():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(300, 3)), jnp.float32)
+    res = core.svat(X, jax.random.PRNGKey(0), s=32)
+    idx = np.asarray(res.sample_idx)
+    assert len(np.unique(idx)) == 32
+    assert res.vat.rstar.shape == (32, 32)
+
+
+def test_svat_preserves_block_structure():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(np.concatenate([
+        rng.normal(size=(300, 2)), rng.normal(size=(300, 2)) + 15,
+        rng.normal(size=(300, 2)) - 15]), jnp.float32)
+    res = core.svat(X, jax.random.PRNGKey(0), s=48)
+    score, k = core.block_structure_score(res.vat.rstar)
+    assert float(score) > 0.6
+    assert int(k) == 3
+
+
+def test_maximin_covers_clusters():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(np.concatenate(
+        [rng.normal(size=(100, 2)) + c for c in ([0, 0], [20, 0], [0, 20])]),
+        jnp.float32)
+    idx = np.asarray(core.maximin_sample(X, 6, jax.random.PRNGKey(0)))
+    labels = idx // 100
+    assert set(labels.tolist()) == {0, 1, 2}
+
+
+def test_diagnostics_report_shapes_and_ranges():
+    rng = np.random.default_rng(0)
+    acts = jnp.asarray(np.concatenate([rng.normal(size=(100, 8)),
+                                       rng.normal(size=(100, 8)) + 8]),
+                       jnp.float32)
+    rep = core.activation_report(acts, jax.random.PRNGKey(0), sample=64)
+    assert 0.0 <= float(rep.hopkins) <= 1.0
+    assert 0.0 <= float(rep.block_score) <= 1.0
+    assert rep.rstar.shape == (64, 64)
+    assert int(rep.k_est) >= 2
+
+
+def test_router_collapse_detection():
+    rng = np.random.default_rng(0)
+    # collapsed router: all tokens produce ~identical logits
+    collapsed = jnp.asarray(rng.normal(size=(1, 16))
+                            + 0.01 * rng.normal(size=(256, 16)), jnp.float32)
+    healthy = jnp.asarray(np.concatenate(
+        [rng.normal(size=(64, 16)) + 6 * np.eye(16)[i % 16]
+         for i in range(4)]), jnp.float32)
+    rc = core.router_tendency(collapsed, jax.random.PRNGKey(0))
+    rh = core.router_tendency(healthy, jax.random.PRNGKey(0))
+    assert float(rh.block_score) > float(rc.block_score)
+
+
+def test_dvat_matches_vat_single_device():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(64, 4)), jnp.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    d = core.dvat(X, mesh)
+    assert np.array_equal(np.asarray(d.order), np.asarray(core.vat(X).order))
+
+
+def test_pairwise_dist_sharded_matches():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(64, 4)), jnp.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    R = core.pairwise_dist_sharded(X, mesh)
+    np.testing.assert_allclose(np.asarray(R),
+                               np.asarray(ops.pairwise_dist(X)), atol=2e-3)
+
+
+MULTI_DEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro import core
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(64, 4)).astype(np.float32))
+    mesh = jax.make_mesh((8,), ("data",))
+    d = core.dvat(X, mesh)
+    assert np.array_equal(np.asarray(d.order), np.asarray(core.vat(X).order)), "order mismatch"
+    d2 = core.dvat(X, mesh, exact_start=False)
+    assert sorted(np.asarray(d2.order).tolist()) == list(range(64))
+    print("MULTIDEV_OK")
+""")
+
+
+def test_dvat_multi_device_subprocess():
+    r = subprocess.run([sys.executable, "-c", MULTI_DEV_SCRIPT],
+                       capture_output=True, text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "MULTIDEV_OK" in r.stdout, r.stderr[-2000:]

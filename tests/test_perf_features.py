@@ -1,0 +1,121 @@
+"""Beyond-paper performance features: exactness + invariants.
+
+These are the §Perf levers — each must be *semantics-preserving* (or have
+its approximation contract tested).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import model as M
+from repro.models.moe import moe_ffn
+
+
+def test_vocab_padding_preserves_logits():
+    cfg0 = smoke_config("phi3-mini-3.8b").replace(vocab=123)  # odd vocab
+    cfgp = cfg0.replace(vocab_pad=64)                         # pads to 128
+    assert cfgp.padded_vocab == 128
+    p0 = M.init_params(cfg0, jax.random.PRNGKey(0))
+    pp = M.init_params(cfgp, jax.random.PRNGKey(0))
+    # share weights: padded embed/lm_head rows beyond vocab are irrelevant
+    pp["embed"] = pp["embed"].at[:123].set(p0["embed"])
+    pp["lm_head"] = pp["lm_head"].at[:, :123].set(p0["lm_head"])
+    pp["layers"] = p0["layers"]
+    pp["final_norm"] = p0["final_norm"]
+    toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    l0, _ = M.forward(p0, cfg0, {"tokens": toks})
+    lp, _ = M.forward(pp, cfgp, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lp[..., :123]), np.asarray(l0),
+                               atol=1e-5)
+    # padded entries can never win an argmax
+    assert bool(jnp.all(jnp.argmax(lp, -1) < 123))
+
+
+def test_chunked_ce_matches_full():
+    from repro.train.steps import loss_fn
+    cfg = smoke_config("gemma-2b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32),
+             "labels": jnp.asarray([[2, 3, -1, 5, 6, 7, 8, 9]], jnp.int32)}
+    full, _ = loss_fn(params, cfg, batch)
+    chunked, _ = loss_fn(params, cfg.replace(ce_chunk=4), batch)
+    np.testing.assert_allclose(float(chunked), float(full), rtol=1e-5)
+
+
+def test_head_padding_exact_function():
+    cfg0 = smoke_config("whisper-large-v3")
+    cfgp = cfg0.replace(head_pad=8)
+    assert cfgp.eff_heads == 8 and cfg0.eff_heads == 4
+    p0 = M.init_params(cfg0, jax.random.PRNGKey(0))
+    pp = M.init_params(cfgp, jax.random.PRNGKey(0))
+    for lname in ("layers", "enc_layers"):
+        for w in ("wq", "wk", "wv", "x_wq", "x_wk", "x_wv"):
+            if w in pp[lname]:
+                d = pp[lname][w]
+                pp[lname][w] = jnp.zeros_like(d).at[
+                    ..., :p0[lname][w].shape[-1]].set(p0[lname][w])
+        for w in ("wo", "x_wo"):
+            if w in pp[lname]:
+                d = pp[lname][w]
+                pp[lname][w] = jnp.zeros_like(d).at[
+                    ..., :p0[lname][w].shape[-2], :].set(p0[lname][w])
+        for w in pp[lname]:
+            if w not in ("wq", "wk", "wv", "wo", "x_wq", "x_wk", "x_wv",
+                         "x_wo"):
+                pp[lname][w] = p0[lname][w]
+    for k in ("embed", "lm_head", "final_norm", "enc_final_norm"):
+        if k in pp:
+            pp[k] = p0[k]
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray([[1, 2, 3, 4]], jnp.int32),
+             "enc_frames": jnp.asarray(rng.normal(size=(1, 16, 64)),
+                                       jnp.float32)}
+    l0, _ = M.forward(p0, cfg0, batch)
+    lp, _ = M.forward(pp, cfgp, batch)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(lp))
+
+
+def test_head_padding_refuses_gqa():
+    cfg = smoke_config("phi3-mini-3.8b").replace(n_kv_heads=2, head_pad=8)
+    # GQA (q != kv) must not pad — group mapping would break
+    assert cfg.eff_heads == cfg.n_heads
+    assert cfg.eff_kv_heads == cfg.n_kv_heads
+
+
+def test_group_limited_routing_containment():
+    cfg = smoke_config("deepseek-v3-671b").replace(
+        n_experts=8, top_k=2, route_groups=4, route_top_groups=1,
+        d_ff_expert=32, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    D = cfg.d_model
+    x = jax.random.normal(key, (64, D))
+    router = jax.random.normal(key, (D, 8))
+    logits = x @ router
+    probs = jax.nn.softmax(logits, -1)
+    G, gsz = 4, 2
+    gscore = jnp.sum(jax.lax.top_k(probs.reshape(-1, G, gsz), 2)[0], -1)
+    gidx = jnp.argmax(gscore, -1)
+    masked = jnp.where(
+        jnp.repeat(jax.nn.one_hot(gidx, G, dtype=bool), gsz, -1), probs, 0)
+    _, ids = jax.lax.top_k(masked, 2)
+    # top-1 group => both selected experts must share one group
+    assert bool(jnp.all(ids[:, 0] // gsz == ids[:, 1] // gsz))
+
+
+def test_momentum_free_adafactor_state_is_smaller():
+    from repro.configs.base import TrainConfig
+    from repro.optim import adamw as O
+    params = {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))}
+    st_m = O.init_opt(TrainConfig(optimizer="adafactor", b1=0.9), params)
+    st_0 = O.init_opt(TrainConfig(optimizer="adafactor", b1=0.0), params)
+    assert st_0.m is None and st_m.m is not None
+    # and it still optimizes
+    tc = TrainConfig(optimizer="adafactor", b1=0.0, lr=0.1,
+                     warmup_steps=1, total_steps=2000, weight_decay=0.0)
+    p = {"w": jnp.full((4, 4), 3.0)}
+    st = O.init_opt(tc, p)
+    for _ in range(200):
+        p, st = O.apply_opt(tc, p, {"w": 2 * p["w"]}, st)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.5

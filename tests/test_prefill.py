@@ -1,0 +1,74 @@
+"""Serving prefill handoff: prefill(prompt) then decode_step continues
+exactly as if the whole sequence had been forwarded at once."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import model as M
+
+PROMPT = [3, 5, 7, 11]
+CONT = [2, 9]
+
+
+def _parity(arch, extra=None, atol=5e-3):
+    cfg = smoke_config(arch)
+    if arch == "deepseek-v3-671b":
+        cfg = cfg.replace(mtp=False, capacity_factor=16.0)
+    if arch == "phi3.5-moe-42b-a6.6b":
+        cfg = cfg.replace(capacity_factor=16.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    full_toks = jnp.asarray([PROMPT + CONT], jnp.int32)
+    batch_full = {"tokens": full_toks}
+    batch_pre = {"tokens": jnp.asarray([PROMPT], jnp.int32)}
+    if extra:
+        batch_full.update(extra)
+        batch_pre.update(extra)
+    logits_full, _ = M.forward(params, cfg, batch_full)
+
+    lp, cache, pos = M.prefill(params, cfg, batch_pre, max_len=16,
+                               cache_dtype=jnp.float32)
+    # prefill logits match the full forward on the prompt part
+    np.testing.assert_allclose(np.asarray(lp), 
+                               np.asarray(logits_full[:, :len(PROMPT)]),
+                               atol=atol, rtol=atol)
+    # decode continues to match (pos returned by prefill is absolute,
+    # patches included for VLM)
+    pos = int(pos)
+    for i, t in enumerate(CONT):
+        lg, cache = M.decode_step(params, cfg,
+                                  jnp.asarray([[t]], jnp.int32), cache,
+                                  jnp.int32(pos + i))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]),
+            np.asarray(logits_full[:, len(PROMPT) + i]),
+            atol=atol, rtol=atol)
+
+
+def test_prefill_parity_dense():
+    _parity("phi3-mini-3.8b")
+
+
+def test_prefill_parity_mla_moe():
+    _parity("deepseek-v3-671b")
+
+
+def test_prefill_parity_ssm():
+    _parity("rwkv6-3b")
+
+
+def test_prefill_parity_hybrid():
+    _parity("zamba2-2.7b", atol=1e-2)
+
+
+def test_prefill_parity_audio():
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.normal(size=(1, 16, 64)), jnp.float32)
+    _parity("whisper-large-v3", extra={"enc_frames": frames})
+
+
+def test_prefill_parity_vlm():
+    rng = np.random.default_rng(0)
+    patches = jnp.asarray(rng.normal(size=(1, 4, 64)), jnp.float32)
+    _parity("internvl2-1b", extra={"patches": patches})

@@ -1,0 +1,38 @@
+"""Streaming VAT: bounded memory, exact on the reservoir, detects drift."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro import core
+from repro.core.streaming import StreamingVAT
+
+
+def test_reservoir_bounded_and_exact():
+    rng = np.random.default_rng(0)
+    sv = StreamingVAT(cap=64, d=3)
+    for _ in range(10):
+        sv.update(rng.normal(size=(50, 3)))
+    assert len(sv.pts) == 64
+    assert sv.n_seen == 500
+    # ordering is exactly batch VAT of the reservoir
+    batch = core.vat(jnp.asarray(sv.pts))
+    assert np.array_equal(sv.order(), np.asarray(batch.order))
+
+
+def test_streaming_detects_emerging_clusters():
+    rng = np.random.default_rng(1)
+    sv = StreamingVAT(cap=96, d=2)
+    sv.update(rng.normal(size=(200, 2)))          # single blob
+    _, score1, _ = sv.tendency()
+    # a second, far cluster starts streaming in
+    sv.update(rng.normal(size=(200, 2)) + 12.0)
+    _, score2, k2 = sv.tendency()
+    assert score2 > score1
+    assert k2 >= 2
+
+
+def test_absorption_keeps_counts():
+    sv = StreamingVAT(cap=4, d=1)
+    sv.update(np.array([[0.0], [1.0], [2.0], [3.0]]))
+    sv.update(np.array([[0.001]] * 5))            # near-duplicates absorbed
+    assert len(sv.pts) == 4
+    assert sv.counts.sum() == 9

@@ -1,0 +1,112 @@
+"""VAT correctness: accelerated paths == pure-Python oracle (paper's claim
+of unchanged mathematical behaviour), plus structural properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core import naive
+
+
+def _data(seed, n, d):
+    rng = np.random.default_rng(seed)
+    # spread points out to avoid distance ties (tie-break conventions differ
+    # only in degenerate data)
+    return (rng.normal(size=(n, d)) * rng.uniform(0.5, 2.0, size=d)
+            ).astype(np.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 60),
+       d=st.integers(1, 8))
+def test_vat_matches_naive(seed, n, d):
+    X = _data(seed, n, d)
+    res = core.vat(jnp.asarray(X))
+    rstar_n, order_n = naive.vat_naive(X.tolist())
+    assert np.array_equal(np.asarray(res.order), np.asarray(order_n))
+    # f32 Gram trick vs float64 python loops: near-zero distances keep
+    # O(sqrt(eps_f32)) absolute error
+    np.testing.assert_allclose(np.asarray(res.rstar), np.asarray(rstar_n),
+                               atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 40))
+def test_order_is_permutation(seed, n):
+    X = _data(seed, n, 3)
+    order = np.asarray(core.vat(jnp.asarray(X)).order)
+    assert sorted(order.tolist()) == list(range(n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(5, 40))
+def test_ivat_matches_naive_and_is_ultrametric(seed, n):
+    X = _data(seed, n, 3)
+    res = core.vat(jnp.asarray(X))
+    iv = core.ivat_from_vat(res.rstar)
+    iv_n = np.asarray(naive.ivat_naive(np.asarray(res.rstar).tolist()))
+    np.testing.assert_allclose(np.asarray(iv), iv_n, atol=1e-4)
+    ivn = np.asarray(iv)
+    # geodesic max-min distance never exceeds the direct distance
+    assert np.all(ivn <= np.asarray(res.rstar) + 1e-4)
+    # strong (ultrametric) triangle inequality d(i,k) <= max(d(i,j), d(j,k))
+    for _ in range(20):
+        i, j, k = np.random.default_rng(seed).integers(0, n, 3)
+        assert ivn[i, k] <= max(ivn[i, j], ivn[j, k]) + 1e-4
+
+
+def test_vat_reveals_blocks_on_clustered_data():
+    rng = np.random.default_rng(0)
+    X = np.concatenate([rng.normal(size=(50, 2)),
+                        rng.normal(size=(50, 2)) + 12.0]).astype(np.float32)
+    res = core.vat(jnp.asarray(X))
+    score, k_est = core.block_structure_score(res.rstar)
+    assert float(score) > 0.5
+    assert int(k_est) == 2
+    # the ordering keeps each cluster contiguous
+    first_half = set(np.asarray(res.order)[:50].tolist())
+    assert first_half in ({*range(50)}, {*range(50, 100)})
+
+
+def test_vat_from_dist_equivalent():
+    X = _data(3, 30, 4)
+    from repro.kernels import ops
+    R = ops.pairwise_dist(jnp.asarray(X))
+    a = core.vat(jnp.asarray(X))
+    b = core.vat_from_dist(R)
+    assert np.array_equal(np.asarray(a.order), np.asarray(b.order))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(5, 40))
+def test_vat_invariant_to_input_permutation(seed, n):
+    """Shuffling the input points permutes the ordering but preserves the
+    reordered image's entry multiset (same MST geometry)."""
+    X = _data(seed, n, 3)
+    perm = np.random.default_rng(seed).permutation(n)
+    a = core.vat(jnp.asarray(X))
+    b = core.vat(jnp.asarray(X[perm]))
+    ea = np.sort(np.asarray(a.rstar), axis=None)
+    eb = np.sort(np.asarray(b.rstar), axis=None)
+    np.testing.assert_allclose(ea, eb, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_vat_keeps_separated_clusters_contiguous(seed):
+    """Any well-separated cluster occupies a contiguous index range in the
+    VAT ordering (the theoretical guarantee behind the dark blocks)."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(5, 20, size=3)
+    centers = np.array([[0, 0], [40, 0], [0, 40]], np.float32)
+    X = np.concatenate([
+        centers[i] + rng.normal(size=(s, 2)).astype(np.float32)
+        for i, s in enumerate(sizes)])
+    labels = np.repeat(np.arange(3), sizes)
+    order = np.asarray(core.vat(jnp.asarray(X)).order)
+    lab_in_order = labels[order]
+    # each label appears as one contiguous run
+    changes = int(np.sum(lab_in_order[1:] != lab_in_order[:-1]))
+    assert changes == 2
