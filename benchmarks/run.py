@@ -35,6 +35,12 @@ def main() -> None:
         print(f"table3/{r['dataset']}/kmeans,0,ari={r['kmeans_ari']:.3f}")
         print(f"table3/{r['dataset']}/dbscan,0,ari={r['dbscan_ari']:.3f}")
 
+    # ---- Table 4: Big-VAT scaling past the paper's n ~ 1e4 wall ----
+    for r in T.table4():
+        print(f"table4/n{r['n']}/{r['method']},{r['fit_s']*1e6:.1f},"
+              f"pts_per_s={r['points_per_s']:.0f};k_est={r['k_est']}"
+              f"/{r['k_true']};hopkins={r['hopkins']:.3f}")
+
 
 if __name__ == "__main__":
     main()

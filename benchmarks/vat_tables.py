@@ -5,6 +5,12 @@ table1 — execution time + speedup (paper Table 1): pure-Python VAT
 table2 — Hopkins statistic per dataset (paper Table 2).
 table3 — clustering alignment: VAT insight vs K-Means vs DBSCAN ARI
          against ground truth (paper Table 3).
+table4 — scaling beyond the paper's n ~ 1e4 wall: wall time, throughput,
+         and k-estimate accuracy of the FastVAT facade at n = 2e4 .. 1e5
+         (auto-selects svat at the 2e4 boundary, the out-of-core clusiVAT
+         pipeline repro.core.bigvat above it; each row names its method).
+
+Usage and output schema: benchmarks/README.md.
 """
 from __future__ import annotations
 
@@ -71,6 +77,35 @@ def table2():
         X, _ = make_dataset(name)
         h = float(core.hopkins(jnp.asarray(X), jax.random.PRNGKey(0)))
         rows.append({"dataset": name, "hopkins": h})
+    return rows
+
+
+def table4(sizes=(20_000, 50_000, 100_000), k_true: int = 5):
+    """Big-VAT wall time + tendency accuracy at paper-breaking n.
+
+    Rows: n, fit_s, points_per_s, k_est, k_true, hopkins, method — each n
+    runs the FastVAT facade, which auto-selects svat/bigvat by size.
+    """
+    from repro.api import FastVAT
+    from repro.data.synth import make_big_blobs
+    rows = []
+    for n in sizes:
+        X, _ = make_big_blobs(n=n, k=k_true)
+        # warmup run absorbs jit compiles; timed run syncs the result
+        # pytree so async dispatch doesn't fake the throughput (cf _time)
+        jax.block_until_ready(
+            FastVAT(sample_size=256, block=8_192).fit(X).result)
+        fv = FastVAT(sample_size=256, block=8_192)
+        t0 = time.perf_counter()
+        fv.fit(X)
+        jax.block_until_ready(fv.result)
+        dt = time.perf_counter() - t0
+        rep = fv.assess()
+        rows.append({
+            "n": n, "fit_s": dt, "points_per_s": n / dt,
+            "k_est": rep["k_est"], "k_true": k_true,
+            "hopkins": rep["hopkins"], "method": fv.method_resolved,
+        })
     return rows
 
 

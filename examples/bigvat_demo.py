@@ -1,0 +1,59 @@
+"""Big-VAT demo: cluster tendency of n = 100,000 points on a laptop CPU.
+
+Exact VAT at this n would need a 40 GB (n, n) float32 matrix — Big-VAT
+(clusiVAT pipeline, see docs/scaling.md) never materializes anything
+larger than O(block * s), so the whole run fits in a few hundred MB and a
+few seconds.  The demo generates 5 Gaussian blobs, lets the ``FastVAT``
+facade auto-select the bigvat rung, and prints the smoothed VAT image plus
+the tendency report.
+
+Run:  PYTHONPATH=src python examples/bigvat_demo.py
+"""
+import time
+
+import numpy as np
+
+from repro.api import FastVAT
+from repro.data.synth import make_big_blobs
+
+N = 100_000
+K = 5
+
+
+def ascii_image(R, size=40):
+    R = np.asarray(R)
+    idx = np.linspace(0, R.shape[0] - 1, size).astype(int)
+    sub = R[np.ix_(idx, idx)]
+    sub = sub / (sub.max() + 1e-9)
+    chars = " .:-=+*#%@"   # dark blocks = close points
+    return "\n".join("".join(chars[int((1 - v) * (len(chars) - 1))]
+                             for v in row) for row in sub)
+
+
+def main():
+    X, labels = make_big_blobs(n=N, k=K)
+    print(f"n={len(X):,} d={X.shape[1]}  "
+          f"(exact VAT would need a {len(X)**2 * 4 / 1e9:.0f} GB matrix)")
+
+    t0 = time.perf_counter()
+    fv = FastVAT(sample_size=256, block=8192).fit(X)
+    dt = time.perf_counter() - t0
+    assert fv.method_resolved == "bigvat", fv.method_resolved
+
+    report = fv.assess()
+    print(ascii_image(fv.image(resolution=256)))
+    print(f"\nmethod={report['method']}  hopkins={report['hopkins']:.3f}  "
+          f"block_score={report['block_score']:.3f}  k_est={report['k_est']}"
+          f"  (true k={K})")
+    print(f"wall time: {dt:.2f}s — peak intermediate "
+          f"O(block*s) = {fv.block * fv.sample_size * 4 / 1e6:.0f} MB")
+
+    # the full-data ordering keeps each blob contiguous (few label changes)
+    lab_in_order = labels[fv.order()]
+    changes = int(np.sum(lab_in_order[1:] != lab_in_order[:-1]))
+    print(f"label runs along the n={len(X):,} ordering: {changes + 1} "
+          f"(ideal {K})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""FastVAT — one front door for every VAT variant in this repo.
+
+Picks the right scaling rung automatically (see ``docs/scaling.md``):
+
+  n <= SMALL_N  (2_048)   exact ``vat``   — O(n^2) matrix fits easily
+  n <= MEDIUM_N (20_000)  ``svat``        — maximin sample, O(ns + s^2)
+  larger                  ``bigvat``      — clusiVAT pipeline, no (n, n)
+
+``method`` overrides: "vat" | "ivat" | "svat" | "bigvat" | "dvat" | "auto".
+"dvat" (matrix-free distributed VAT) needs >1 JAX device and a JAX whose
+shard_map import resolves (``repro.core.HAS_DISTRIBUTED``).
+
+>>> from repro.api import FastVAT
+>>> fv = FastVAT().fit(X)            # auto-selects by n
+>>> fv.method_resolved               # e.g. "bigvat"
+>>> img = fv.image(resolution=256)   # reordered dissimilarity image
+>>> fv.assess()                      # {"hopkins": ..., "k_est": ..., ...}
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.core.bigvat import DEFAULT_BLOCK, bigvat, smoothed_image
+
+SMALL_N = 2_048
+MEDIUM_N = 20_000
+
+METHODS = ("auto", "vat", "ivat", "svat", "bigvat", "dvat")
+
+
+def select_method(n: int) -> str:
+    """The auto-selection policy: exact below SMALL_N, sVAT to MEDIUM_N,
+    Big-VAT beyond (the only rung with no O(n^2) object)."""
+    if n <= SMALL_N:
+        return "vat"
+    if n <= MEDIUM_N:
+        return "svat"
+    return "bigvat"
+
+
+class FastVAT:
+    """Facade over vat / ivat / svat / bigvat / dvat with auto-selection.
+
+    Parameters
+    ----------
+    method:       one of METHODS; "auto" picks by n at fit time.
+    sample_size:  s for svat/bigvat prototypes.
+    block:        row-block size of bigvat's tiled assignment pass.
+    use_pallas:   route distance tiles through the Pallas kernel
+                  (interpret mode on CPU; compiled on TPU).
+    seed:         PRNG seed for sampling.
+    """
+
+    def __init__(self, method: str = "auto", *, sample_size: int = 256,
+                 block: int = DEFAULT_BLOCK, use_pallas: bool = False,
+                 seed: int = 0):
+        if method not in METHODS:
+            raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+        self.method = method
+        self.sample_size = sample_size
+        self.block = block
+        self.use_pallas = use_pallas
+        self.seed = seed
+        self.method_resolved: str | None = None
+        self.result: Any = None
+        self._X = None
+
+    # ------------------------------------------------------------- fit ----
+
+    def fit(self, X) -> "FastVAT":
+        n = X.shape[0]
+        method = self.method if self.method != "auto" else select_method(n)
+        key = jax.random.PRNGKey(self.seed)
+
+        if method in ("vat", "ivat"):
+            Xj = jnp.asarray(np.asarray(X, np.float32))
+            res = core.vat(Xj, use_pallas=self.use_pallas)
+            if method == "ivat":
+                self.result = (res, core.ivat_from_vat(res.rstar))
+            else:
+                self.result = res
+        elif method == "svat":
+            Xj = jnp.asarray(np.asarray(X, np.float32))
+            self.result = core.svat(Xj, key, s=min(self.sample_size, n),
+                                    use_pallas=self.use_pallas)
+        elif method == "bigvat":
+            self.result = bigvat(X, key, s=self.sample_size,
+                                    block=self.block,
+                                    use_pallas=self.use_pallas)
+        elif method == "dvat":
+            if not core.HAS_DISTRIBUTED:
+                raise RuntimeError(
+                    "method='dvat' needs a JAX with shard_map "
+                    "(repro.core.HAS_DISTRIBUTED is False; cause: "
+                    f"{core.DISTRIBUTED_IMPORT_ERROR})")
+            devs = jax.devices()
+            if len(devs) < 2:
+                raise RuntimeError(
+                    f"method='dvat' needs >1 device, found {len(devs)}; "
+                    "use 'bigvat' on a single host")
+            if n % len(devs):
+                raise ValueError(
+                    f"method='dvat' needs n divisible by the device count "
+                    f"({n} % {len(devs)} != 0); pad or truncate X first")
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(devs), ("data",))
+            Xj = jnp.asarray(np.asarray(X, np.float32))
+            self.result = core.dvat(Xj, mesh)
+        self.method_resolved = method
+        self._X = X
+        return self
+
+    # --------------------------------------------------------- queries ----
+
+    def _require_fit(self):
+        if self.result is None:
+            raise RuntimeError("call fit(X) first")
+        return self.result
+
+    def order(self) -> np.ndarray:
+        """VAT ordering: all n points (vat/ivat/bigvat/dvat) or the sample
+        (svat — use sample_indices() to map back to dataset rows)."""
+        res = self._require_fit()
+        m = self.method_resolved
+        if m in ("vat", "dvat"):
+            return np.asarray(res.order)
+        if m == "ivat":
+            return np.asarray(res[0].order)
+        if m == "svat":
+            return np.asarray(res.vat.order)
+        return np.asarray(res.order)                      # bigvat: full n
+
+    def sample_indices(self) -> np.ndarray | None:
+        """Dataset rows of the prototypes (svat/bigvat), else None."""
+        res = self._require_fit()
+        if self.method_resolved == "svat":
+            return np.asarray(res.sample_idx)
+        if self.method_resolved == "bigvat":
+            return np.asarray(res.sample.sample_idx)
+        return None
+
+    def image(self, *, resolution: int = 256,
+              use_ivat: bool | None = None) -> np.ndarray:
+        """The reordered dissimilarity image (the thing you look at).
+
+        vat/svat/ivat return their exact image; bigvat returns the
+        smoothed clusiVAT image expanded to ``resolution`` pixels by group
+        size.  ``use_ivat=None`` (default) uses the geodesic (iVAT) image
+        wherever one was computed (ivat and bigvat); pass False to force
+        the plain reordered distances.
+        """
+        res = self._require_fit()
+        m = self.method_resolved
+        if m == "vat":
+            # geodesic image computed on demand when explicitly requested
+            return np.asarray(core.ivat_from_vat(res.rstar) if use_ivat
+                              else res.rstar)
+        if m == "ivat":
+            return np.asarray(res[1] if use_ivat in (None, True) else res[0].rstar)
+        if m == "svat":
+            return np.asarray(core.ivat_from_vat(res.vat.rstar) if use_ivat
+                              else res.vat.rstar)
+        if m == "bigvat":
+            return smoothed_image(res, resolution,
+                                  use_ivat=use_ivat in (None, True))
+        raise RuntimeError(f"method {m!r} produces an ordering, not an image")
+
+    def _hopkins_subsample(self, cap: int = 2_048) -> np.ndarray:
+        """Uniform random rows of X for the Hopkins statistic.
+
+        Maximin prototypes are deliberately spread out, which biases
+        Hopkins toward 0.5 — so the svat/bigvat rungs must not reuse them
+        here.  Row indexing keeps np.memmap inputs out-of-core.
+        """
+        n = self._X.shape[0]
+        if n <= cap:
+            idx = np.arange(n)
+        else:
+            idx = np.sort(np.random.default_rng(self.seed).choice(
+                n, cap, replace=False))
+        return np.asarray(self._X[idx], np.float32)
+
+    def assess(self, key: jax.Array | None = None) -> dict:
+        """Machine-checkable tendency report: Hopkins + block structure."""
+        res = self._require_fit()
+        m = self.method_resolved
+        if key is None:
+            key = jax.random.PRNGKey(self.seed + 1)
+
+        if m == "vat":
+            rstar = res.rstar
+        elif m == "ivat":
+            rstar = res[0].rstar
+        elif m == "svat":
+            rstar = res.vat.rstar
+        elif m == "bigvat":
+            rstar = res.sample.vat.rstar
+        else:  # dvat: ordering only — score a maximin-sample image
+            Xj = jnp.asarray(np.asarray(self._X, np.float32))
+            sub = core.svat(Xj, key, s=min(self.sample_size, len(Xj)))
+            rstar = sub.vat.rstar
+
+        Xh = self._hopkins_subsample()
+        score, k_est = core.block_structure_score(rstar)
+        h = core.hopkins(jnp.asarray(np.asarray(Xh, np.float32)), key)
+        return {
+            "method": m,
+            "n": int(self._X.shape[0]),
+            "hopkins": float(h),
+            "block_score": float(score),
+            "k_est": int(k_est),
+            "clustered": bool(h > 0.75 and float(score) > 0.3),
+        }
+
+
+def assess_tendency(X, **kwargs) -> dict:
+    """One-shot convenience: FastVAT(**kwargs).fit(X).assess()."""
+    return FastVAT(**kwargs).fit(X).assess()

@@ -1,19 +1,35 @@
-"""Fast-VAT core: the paper's contribution as composable JAX modules."""
+"""Fast-VAT core: the paper's contribution as composable JAX modules.
+
+Module map: README.md (architecture) and docs/scaling.md (the
+vat -> svat -> bigvat -> dvat -> streaming ladder); the user-facing
+facade with automatic method selection is ``repro.api.FastVAT``.
+"""
 from repro.core.vat import vat, vat_from_dist, vat_order, reorder, VATResult, block_structure_score
 from repro.core.ivat import ivat, ivat_from_vat
 from repro.core.svat import svat, maximin_sample, SVATResult
 from repro.core.hopkins import hopkins
-from repro.core.distributed import dvat, pairwise_dist_sharded, DVATResult
+try:  # optional: needs a JAX with shard_map (any home); see distributed.py
+    from repro.core.distributed import dvat, pairwise_dist_sharded, DVATResult
+    HAS_DISTRIBUTED = True
+    DISTRIBUTED_IMPORT_ERROR = None
+except ImportError as _e:  # degrade gracefully — single-host paths stay usable
+    dvat = pairwise_dist_sharded = DVATResult = None  # type: ignore[assignment]
+    HAS_DISTRIBUTED = False
+    DISTRIBUTED_IMPORT_ERROR = repr(_e)   # keep the real cause debuggable
+from repro.core.bigvat import bigvat, BigVATResult, nearest_prototype_assign
 from repro.core.diagnostics import activation_report, embedding_tendency, router_tendency, TendencyReport
 from repro.core.cluster import kmeans, dbscan, adjusted_rand_index, pca
 
 __all__ = [
     "vat", "vat_from_dist", "vat_order", "reorder", "VATResult",
     "block_structure_score", "ivat", "ivat_from_vat", "svat",
-    "maximin_sample", "SVATResult", "hopkins", "dvat",
-    "pairwise_dist_sharded", "DVATResult", "activation_report",
+    "maximin_sample", "SVATResult", "hopkins", "HAS_DISTRIBUTED",
+    "bigvat", "BigVATResult", "nearest_prototype_assign",
+    "activation_report",
     "embedding_tendency", "router_tendency", "TendencyReport",
 ]
+if HAS_DISTRIBUTED:
+    __all__ += ["dvat", "pairwise_dist_sharded", "DVATResult"]
 from repro.core.streaming import StreamingVAT
 __all__.append("StreamingVAT")
 from repro.core.tsne import tsne

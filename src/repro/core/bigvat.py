@@ -1,0 +1,154 @@
+"""Big-VAT — clusiVAT-style out-of-core cluster tendency for n >= 1e5.
+
+The paper's Limitations section concedes that VAT "requires storage of the
+full pairwise dissimilarity matrix", capping practical use near n ~ 1e4.
+Big-VAT breaks that wall with the sVAT/clusiVAT recipe (Rathore et al.):
+
+  1. **sample**  — s maximin "distinguished" prototypes (O(n s) time,
+     O(n) memory),
+  2. **assess**  — exact VAT + iVAT on the (s, s) sample matrix
+     (steps 1+2 together are exactly ``core.svat.svat``, reused here),
+  3. **extend**  — a *tiled nearest-prototype pass* that streams X through
+     ``kernels/pairwise_dist`` in row blocks (Pallas on TPU, XLA tiling on
+     CPU): each block yields a (block, s) tile, reduced immediately to the
+     per-point nearest prototype and its distance.  Peak intermediate is
+     O(block * s); **no (n, n) — or even (n, s) device — array is ever
+     materialized**, so memory scales with n*d instead of n^2.
+
+The full-data ordering groups points by their prototype's position in the
+sample VAT order (nearest-prototype extension), and ``smoothed_image``
+renders the aggregated VAT image where each prototype's row/column band is
+as wide as its group — the clusiVAT "smoothed" picture of all n points.
+
+X may be a numpy array or ``np.memmap``: the extension pass iterates host
+row blocks, so it touches only O(block * d) of X per step.  The maximin
+sampling pass currently loads X once as a device array — total footprint
+is O(n d) + O(block * s), never O(n^2); a block-streamed maximin frontier
+is the remaining step to a fully disk-bound pipeline.
+
+See ``docs/scaling.md`` for where Big-VAT sits on the vat -> svat ->
+bigvat -> dvat -> streaming ladder, and ``repro.api.FastVAT`` for the
+facade that auto-selects it by n.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ivat import ivat_from_vat
+from repro.core.svat import SVATResult, svat
+from repro.kernels import ops as kops
+
+DEFAULT_SAMPLE = 256
+DEFAULT_BLOCK = 4096
+
+
+class BigVATResult(NamedTuple):
+    sample: SVATResult      # exact VAT on the s maximin prototypes
+    ivat: jax.Array | None  # (s, s) iVAT image, or None if compute_ivat=False
+    labels: jax.Array       # (n,) int32 nearest-prototype id (raw sample pos)
+    proto_dist: jax.Array   # (n,) float32 distance to the nearest prototype
+    order: jax.Array        # (n,) int32 full-data ordering (see bigvat())
+    group_sizes: jax.Array  # (s,) int32 group counts, in sample-VAT order
+
+    @property
+    def n(self) -> int:
+        return int(self.labels.shape[0])
+
+    @property
+    def s(self) -> int:
+        return int(self.group_sizes.shape[0])
+
+
+def nearest_prototype_assign(X, prototypes, *, block: int = DEFAULT_BLOCK,
+                             use_pallas: bool = False):
+    """Tiled nearest-prototype pass: (labels, dists), both (n,).
+
+    Streams X in row blocks of ``block`` through ``kernels.ops.pairwise_
+    dist`` against the (s, d) prototype matrix and reduces each (block, s)
+    tile on the spot.  The loop runs on the host so X may be any ndarray-
+    like supporting slicing (np.memmap included, sliced lazily from disk;
+    jax arrays, sliced on device without a host round-trip); each tile is
+    device-resident only while being reduced — peak intermediate
+    O(block * s).
+    """
+    P = jnp.asarray(prototypes)
+    n = X.shape[0]
+    labels = np.empty((n,), np.int32)
+    dists = np.empty((n,), np.float32)
+    for start in range(0, n, block):
+        stop = min(start + block, n)
+        blk = X[start:stop]
+        if not isinstance(blk, jax.Array):
+            blk = jnp.asarray(np.asarray(blk, np.float32))
+        D = kops.pairwise_dist(blk, P, use_pallas=use_pallas)  # (<=block, s)
+        labels[start:stop] = np.asarray(jnp.argmin(D, axis=1), np.int32)
+        dists[start:stop] = np.asarray(jnp.min(D, axis=1), np.float32)
+    return jnp.asarray(labels), jnp.asarray(dists)
+
+
+def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
+           block: int = DEFAULT_BLOCK, use_pallas: bool = False,
+           compute_ivat: bool = True) -> BigVATResult:
+    """clusiVAT-style big-data VAT of X (n, d) without any (n, n) array.
+
+    The returned ``order`` lists all n points grouped by their prototype's
+    position in the sample VAT ordering (points within a group sorted by
+    distance to their prototype) — the nearest-prototype extension of the
+    sample ordering to the full dataset.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = X.shape[0]
+    s = min(s, n)
+
+    # 1+2. maximin prototypes + exact VAT on the (s, s) sample (= sVAT)
+    Xj = X if isinstance(X, jax.Array) else jnp.asarray(np.asarray(X, np.float32))
+    sample = svat(Xj, key, s=s, use_pallas=use_pallas)
+    res = sample.vat
+    prototypes = Xj[sample.sample_idx]
+    iv = ivat_from_vat(res.rstar) if compute_ivat else None
+
+    # 3. tiled nearest-prototype extension over all n points (Xj: the
+    # device copy already made for sampling — avoids a second transfer)
+    labels, proto_dist = nearest_prototype_assign(
+        Xj, prototypes, block=block, use_pallas=use_pallas)
+
+    # rank[p] = position of prototype p in the sample VAT order
+    rank = jnp.zeros((s,), jnp.int32).at[res.order].set(
+        jnp.arange(s, dtype=jnp.int32))
+    # group by VAT rank of the assigned prototype; within a group, nearest
+    # points first (lexsort: last key is primary)
+    order = jnp.lexsort((proto_dist, rank[labels])).astype(jnp.int32)
+    group_sizes = jnp.bincount(labels, length=s)[res.order].astype(jnp.int32)
+
+    return BigVATResult(sample=sample, ivat=iv, labels=labels,
+                        proto_dist=proto_dist, order=order,
+                        group_sizes=group_sizes)
+
+
+def smoothed_image(result: BigVATResult, resolution: int = 256,
+                   *, use_ivat: bool = False) -> np.ndarray:
+    """Aggregated "smoothed" VAT image of all n points at a fixed resolution.
+
+    Each prototype's row/column band spans pixels proportional to its group
+    size, so the picture a full n x n VAT image would show (cluster blocks
+    sized by membership) is rendered from the (s, s) sample image alone —
+    O(resolution^2) memory, independent of n.
+    """
+    if use_ivat and result.ivat is None:
+        raise ValueError("this BigVATResult was built with compute_ivat="
+                         "False; no iVAT image to render")
+    base = result.ivat if use_ivat else result.sample.vat.rstar
+    base = np.asarray(base)
+    sizes = np.asarray(result.group_sizes, np.int64)
+    edges = np.cumsum(sizes)                     # group boundaries in [0, n]
+    n = int(edges[-1])
+    pix = (np.arange(resolution) + 0.5) * n / resolution
+    g = np.searchsorted(edges, pix, side="right")
+    g = np.minimum(g, len(sizes) - 1)
+    return base[np.ix_(g, g)]

@@ -15,19 +15,41 @@ dissimilarity matrix ... a bottleneck for n > 10^4".  Two remedies here:
   object ever exists, so n ~ 10^6+ fits a pod.
 
 Both run under jit+shard_map on any mesh axis name (default "data").
+
+This module is optional: repro.core imports it behind a try/except and
+publishes ``repro.core.HAS_DISTRIBUTED`` (docs/scaling.md has the full
+vat -> svat -> bigvat -> dvat -> streaming ladder).
 """
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax 0.4.x / 0.5.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
 
 from repro.kernels import ops as kops
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, check: bool | None = None):
+    """Version-tolerant shard_map: the replication-check kwarg was renamed
+    from ``check_rep`` (<= 0.5) to ``check_vma`` (>= 0.6)."""
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check is not None:
+        params = inspect.signature(_shard_map_impl).parameters
+        for name in ("check_vma", "check_rep"):
+            if name in params:
+                kwargs[name] = check
+                break
+    return _shard_map_impl(f, **kwargs)
 
 
 class DVATResult(NamedTuple):
@@ -40,7 +62,7 @@ def pairwise_dist_sharded(X: jax.Array, mesh: Mesh, axis: str = "data"):
     def shard_fn(Xl, Xfull):
         return kops.pairwise_dist(Xl, Xfull)
 
-    fn = shard_map(
+    fn = _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),
         out_specs=P(axis, None))
@@ -118,10 +140,10 @@ def dvat(X: jax.Array, mesh: Mesh, axis: str = "data", *,
     the point farthest from the mean (block structure is unaffected; the
     ordering may start in a different cluster).
     """
-    fn = shard_map(
+    fn = _shard_map(
         functools.partial(_dvat_shard, axis=axis, exact_start=exact_start),
         mesh=mesh,
         in_specs=(P(axis, None),),
         out_specs=P(),  # order replicated (built from all_gathered data)
-        check_vma=False)
+        check=False)
     return DVATResult(order=jax.jit(fn)(X))

@@ -4,6 +4,10 @@ The paper lists sampling-based approximation as future work (citing sVAT);
 we implement it: pick s "distinguished" points by greedy maximin (farthest-
 point) sampling — which preserves global cluster geometry — then run exact
 VAT on the sample.  Turns the O(n^2) wall into O(ns + s^2).
+
+This is the second rung of the scaling ladder (docs/scaling.md); for the
+full-dataset extension see core/bigvat.py, and for automatic selection
+by n see repro.api.FastVAT.
 """
 from __future__ import annotations
 
@@ -41,12 +45,17 @@ def maximin_sample(X: jax.Array, s: int, key: jax.Array) -> jax.Array:
     return idx
 
 
-@functools.partial(jax.jit, static_argnames=("s",))
-def svat(X: jax.Array, key: jax.Array, *, s: int = 256) -> SVATResult:
-    """Approximate VAT image of X using s maximin-sampled points."""
+@functools.partial(jax.jit, static_argnames=("s", "use_pallas"))
+def svat(X: jax.Array, key: jax.Array, *, s: int = 256,
+         use_pallas: bool = False) -> SVATResult:
+    """Approximate VAT image of X using s maximin-sampled points.
+
+    use_pallas routes the sample distance matrix through the Pallas kernel
+    (interpret mode on CPU; compiled on TPU).
+    """
     s = min(s, X.shape[0])
     idx = maximin_sample(X, s, key)
     Xs = X[idx]
-    R = kops.pairwise_dist(Xs)
+    R = kops.pairwise_dist(Xs, use_pallas=use_pallas)
     res = vat_from_dist(R)
     return SVATResult(vat=res, sample_idx=idx)

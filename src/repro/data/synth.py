@@ -75,3 +75,18 @@ def make_dataset(name: str, seed: int = 0):
 
 
 DATASETS = ("iris", "mall", "spotify", "blobs", "moons", "circles", "gmm")
+
+
+def make_big_blobs(n: int = 100_000, k: int = 5, d: int = 8, seed: int = 0,
+                   scale: float = 1.5):
+    """Well-separated Gaussian blobs at Big-VAT scale (n >> 1e4).
+
+    Shared by examples/bigvat_demo.py and benchmarks table4 so the demo
+    and the benchmark measure the same distribution.
+    Returns (X float32 (n, d), labels int32 (n,)).
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-40.0, 40.0, size=(k, d)).astype(np.float32)
+    lab = rng.integers(0, k, size=n)
+    X = centers[lab] + rng.normal(scale=scale, size=(n, d)).astype(np.float32)
+    return X.astype(np.float32), lab.astype(np.int32)

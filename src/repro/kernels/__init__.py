@@ -5,4 +5,7 @@ pairwise_dist — MXU-tiled Euclidean distance matrix (the O(n^2 d) stage
 prim_update   — fused masked block-argmin for Prim's greedy selection
 ops           — jit'd dispatch wrappers (pallas | xla)
 ref           — pure-jnp oracles, also the production CPU path
+
+Design notes (BlockSpec tiling, VMEM budget, interpret-mode-on-CPU
+convention): docs/architecture.md.
 """

@@ -122,7 +122,10 @@ MULTI_DEV_SCRIPT = textwrap.dedent("""
 
 
 def test_dvat_multi_device_subprocess():
+    # JAX_PLATFORMS=cpu: the 8-fake-device trick targets the host platform,
+    # and without it backend init can hang probing for a TPU plugin
     r = subprocess.run([sys.executable, "-c", MULTI_DEV_SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "MULTIDEV_OK" in r.stdout, r.stderr[-2000:]

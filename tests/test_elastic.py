@@ -55,5 +55,6 @@ SCRIPT = textwrap.dedent("""
 def test_elastic_remesh_subprocess():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=500,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "ELASTIC_OK" in r.stdout, r.stderr[-3000:]

@@ -103,12 +103,15 @@ DRYRUN_SMALL = textwrap.dedent("""
         compiled = fn.lower(state_shape, specs).compile()
     txt = compiled.as_text()
     assert any(k in txt for k in ("all-reduce", "all-gather")), "no collectives?"
-    print("SMALL_DRYRUN_OK", compiled.cost_analysis().get("flops"))
+    ca = compiled.cost_analysis()   # dict (jax >= 0.5) or [dict] (0.4.x)
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    print("SMALL_DRYRUN_OK", ca.get("flops"))
 """)
 
 
 def test_small_mesh_dryrun_subprocess():
     r = subprocess.run([sys.executable, "-c", DRYRUN_SMALL],
                        capture_output=True, text=True, timeout=500,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "SMALL_DRYRUN_OK" in r.stdout, r.stderr[-3000:]
