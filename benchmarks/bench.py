@@ -1,0 +1,198 @@
+"""Reproducible benchmark harness -> machine-readable BENCH_<stamp>.json.
+
+Where ``benchmarks/run.py`` prints the paper tables as CSV for humans,
+this harness snapshots a run as a schema-versioned JSON document (the
+repo's perf trajectory — see "BENCH_*.json trajectory" in
+benchmarks/README.md), adding two tables the paper doesn't have:
+
+  batched — the batched VAT engine: one compiled ``vat_batch`` /
+            ``ivat_batch`` program over a (b, n, d) stack vs a Python
+            loop of b solo fits (the serving-many-workloads story).
+  ivat    — the fused Pallas iVAT kernel vs the XLA ``at[].set`` path
+            (interpret mode on CPU — correctness-grade timing; compiled
+            numbers belong on TPU hardware, the ``mode`` field says
+            which you are looking at).
+
+Run:
+  PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
+  PYTHONPATH=src python -m benchmarks.bench --smoke    # CI-sized, ~1 min
+  PYTHONPATH=src python -m benchmarks.bench --tables batched,ivat
+
+Validate a snapshot:
+  PYTHONPATH=src python -m benchmarks.bench_schema BENCH_<stamp>.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TABLES = ("table1", "table4", "batched", "ivat")
+
+# (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
+_BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
+_BATCH_WORKLOADS_SMOKE = ((4, 128, 8),)
+_IVAT_SIZES = (512, 1024)
+_IVAT_SIZES_SMOKE = (192,)
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    """Best-of-reps wall seconds; warmup call absorbs jit compilation."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _row(table: str, name: str, seconds: float, **derived) -> dict:
+    return {"table": table, "name": f"{table}/{name}",
+            "us_per_call": seconds * 1e6, "derived": derived}
+
+
+# ------------------------------------------------------------ tables ----
+
+def bench_table1(smoke: bool, reps: int) -> list[dict]:
+    from benchmarks import vat_tables as T
+    kwargs = {"naive_cap": 150, "datasets": ("iris", "blobs")} if smoke else {}
+    rows = []
+    for r in T.table1(reps=reps, **kwargs):
+        # the python baseline is one measured run by design (it is already
+        # seconds long); every jitted row is best-of-`reps`
+        rows.append(_row("table1", f"{r['dataset']}/python", r["python_s"],
+                         scaled=r["scaled"], n=r["n"], reps=1))
+        rows.append(_row("table1", f"{r['dataset']}/jax", r["jax_s"],
+                         speedup_vs_python=round(r["speedup_jax"], 2)))
+        rows.append(_row("table1", f"{r['dataset']}/pallas_interpret",
+                         r["pallas_interp_s"], mode="interpret"))
+    return rows
+
+
+def bench_table4(smoke: bool, reps: int) -> list[dict]:
+    from benchmarks import vat_tables as T
+    sizes = (20_000,) if smoke else (20_000, 50_000, 100_000)
+    rows = []
+    for r in T.table4(sizes=sizes, reps=reps):
+        rows.append(_row("table4", f"n{r['n']}/{r['method']}", r["fit_s"],
+                         points_per_s=round(r["points_per_s"]),
+                         k_est=r["k_est"], k_true=r["k_true"],
+                         hopkins=round(r["hopkins"], 4)))
+    return rows
+
+
+def bench_batched(smoke: bool, reps: int) -> list[dict]:
+    from repro import core
+    rows = []
+    for b, n, d in (_BATCH_WORKLOADS_SMOKE if smoke else _BATCH_WORKLOADS):
+        rng = np.random.default_rng(b * 1000 + n)
+        Xb = jnp.asarray(rng.normal(size=(b, n, d)).astype(np.float32))
+        tag = f"b{b}xn{n}xd{d}"
+
+        t_batch = _time(lambda A: core.vat_batch(A).rstar, Xb, reps=reps)
+
+        def loop_vat(A):  # b solo programs — what fit_many replaces
+            return [core.vat(A[i]).rstar for i in range(A.shape[0])]
+        t_loop = _time(loop_vat, Xb, reps=reps)
+
+        rows.append(_row("batched", f"{tag}/vat_batch", t_batch,
+                         datasets_per_s=round(b / t_batch, 1),
+                         speedup_vs_loop=round(t_loop / t_batch, 2)))
+        rows.append(_row("batched", f"{tag}/vat_loop", t_loop,
+                         datasets_per_s=round(b / t_loop, 1)))
+
+        t_ib = _time(lambda A: core.ivat_batch(A)[0], Xb, reps=reps)
+        rows.append(_row("batched", f"{tag}/ivat_batch", t_ib,
+                         datasets_per_s=round(b / t_ib, 1)))
+    return rows
+
+
+def bench_ivat(smoke: bool, reps: int) -> list[dict]:
+    from repro import core
+    from repro.kernels import ops
+    mode = "interpret" if jax.default_backend() == "cpu" else "compiled"
+    rows = []
+    for n in (_IVAT_SIZES_SMOKE if smoke else _IVAT_SIZES):
+        rng = np.random.default_rng(n)
+        X = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+        rstar = core.vat(X).rstar
+
+        t_xla = _time(lambda R: ops.ivat_from_vat(R), rstar, reps=reps)
+        t_pal = _time(lambda R: ops.ivat_from_vat(R, use_pallas=True),
+                      rstar, reps=reps)
+        rows.append(_row("ivat", f"n{n}/xla", t_xla, mode="xla"))
+        rows.append(_row("ivat", f"n{n}/pallas", t_pal, mode=mode,
+                         speedup_vs_xla=round(t_xla / t_pal, 3)))
+    return rows
+
+
+_BENCHES = {"table1": bench_table1, "table4": bench_table4,
+            "batched": bench_batched, "ivat": bench_ivat}
+assert set(_BENCHES) == set(TABLES)
+
+
+# ------------------------------------------------------------ driver ----
+
+def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
+    """Execute the requested tables; returns the schema-valid document."""
+    rows = []
+    for t in tables:
+        print(f"# bench: {t} ...", file=sys.stderr)
+        rows.extend(_BENCHES[t](smoke, reps))
+    return {
+        "schema_version": 1,
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "host": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+        },
+        "config": {"smoke": smoke, "reps": reps, "tables": list(tables)},
+        "rows": rows,
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized run: tiny datasets, ~1 minute on CPU")
+    p.add_argument("--tables", default=",".join(TABLES),
+                   help=f"comma-separated subset of {TABLES}")
+    p.add_argument("--reps", type=int, default=3,
+                   help="timing repetitions (best-of)")
+    p.add_argument("--out", default=None,
+                   help="output path (default BENCH_<stamp>.json in cwd)")
+    a = p.parse_args(argv)
+
+    tables = tuple(t.strip() for t in a.tables.split(",") if t.strip())
+    if unknown := set(tables) - set(TABLES):
+        p.error(f"unknown tables {sorted(unknown)}; choose from {TABLES}")
+
+    doc = run(tables, smoke=a.smoke, reps=a.reps)
+
+    from benchmarks.bench_schema import validate
+    validate(doc)  # never write an out-of-schema snapshot
+
+    stamp = doc["created_utc"].replace(":", "").replace("-", "")
+    out = a.out or f"BENCH_{stamp}.json"
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out} ({len(doc['rows'])} rows)")
+    for r in doc["rows"]:
+        print(f"  {r['name']:40s} {r['us_per_call']:>14.1f} us  {r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,99 @@
+"""Schema validator for BENCH_*.json perf-trajectory snapshots.
+
+The schema is documented in benchmarks/README.md ("BENCH_*.json
+trajectory"); this module is the executable version of that table —
+hand-rolled (no jsonschema dependency) so it runs anywhere the repo does.
+
+CLI:      PYTHONPATH=src python -m benchmarks.bench_schema BENCH_x.json
+Library:  from benchmarks.bench_schema import validate, validate_file
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+_TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
+_HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
+_CONFIG_KEYS = {"smoke", "reps", "tables"}
+_ROW_KEYS = {"table", "name", "us_per_call", "derived"}
+
+
+def _fail(msg: str):
+    raise ValueError(f"BENCH schema violation: {msg}")
+
+
+def validate(doc: dict) -> dict:
+    """Validate a parsed BENCH document; returns it unchanged on success.
+
+    Args:
+      doc: the json.load()'d snapshot.
+
+    Returns:
+      doc, if every check passes.
+
+    Raises:
+      ValueError naming the first violated rule.
+    """
+    if not isinstance(doc, dict):
+        _fail(f"top level must be an object, got {type(doc).__name__}")
+    if missing := _TOP_KEYS - doc.keys():
+        _fail(f"missing top-level keys {sorted(missing)}")
+    if doc["schema_version"] != SCHEMA_VERSION:
+        _fail(f"schema_version must be {SCHEMA_VERSION}, "
+              f"got {doc['schema_version']!r}")
+    if not isinstance(doc["created_utc"], str) or "T" not in doc["created_utc"]:
+        _fail("created_utc must be an ISO-8601 UTC string")
+
+    host, config, rows = doc["host"], doc["config"], doc["rows"]
+    if not isinstance(host, dict) or (m := _HOST_KEYS - host.keys()):
+        _fail(f"host must be an object with keys {sorted(_HOST_KEYS)}"
+              + (f"; missing {sorted(m)}" if isinstance(host, dict) else ""))
+    if not isinstance(config, dict) or (m := _CONFIG_KEYS - config.keys()):
+        _fail(f"config must be an object with keys {sorted(_CONFIG_KEYS)}")
+    if not isinstance(config["smoke"], bool):
+        _fail("config.smoke must be a bool")
+    if not isinstance(config["tables"], list):
+        _fail("config.tables must be a list of table names")
+
+    if not isinstance(rows, list) or not rows:
+        _fail("rows must be a non-empty list")
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict) or (m := _ROW_KEYS - row.keys()):
+            _fail(f"{where} must have keys {sorted(_ROW_KEYS)}")
+        if not isinstance(row["table"], str) or not row["table"]:
+            _fail(f"{where}.table must be a non-empty string")
+        if not isinstance(row["name"], str) or \
+                not row["name"].startswith(row["table"] + "/"):
+            _fail(f"{where}.name must start with '{row['table']}/' "
+                  f"(got {row['name']!r})")
+        us = row["us_per_call"]
+        if not isinstance(us, (int, float)) or isinstance(us, bool) or us < 0:
+            _fail(f"{where}.us_per_call must be a number >= 0")
+        if not isinstance(row["derived"], dict):
+            _fail(f"{where}.derived must be an object")
+    return doc
+
+
+def validate_file(path: str) -> dict:
+    """json.load + validate; returns the document."""
+    with open(path) as f:
+        return validate(json.load(f))
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    if len(args) != 1:
+        print("usage: python -m benchmarks.bench_schema BENCH_<stamp>.json",
+              file=sys.stderr)
+        return 2
+    doc = validate_file(args[0])
+    print(f"{args[0]}: schema v{doc['schema_version']} OK "
+          f"({len(doc['rows'])} rows, tables={doc['config']['tables']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,6 +15,13 @@ shard_map import resolves (``repro.core.HAS_DISTRIBUTED``).
 >>> fv.method_resolved               # e.g. "bigvat"
 >>> img = fv.image(resolution=256)   # reordered dissimilarity image
 >>> fv.assess()                      # {"hopkins": ..., "k_est": ..., ...}
+
+Batched: a (b, n, d) stack of datasets is assessed in one compiled
+program (see ``docs/api.md``):
+
+>>> fv = FastVAT(method="ivat").fit_many(Xs)   # Xs: (b, n, d)
+>>> fv.image().shape                           # (b, n, n)
+>>> fv.assess()                                # list of b reports
 """
 from __future__ import annotations
 
@@ -69,6 +76,7 @@ class FastVAT:
         self.seed = seed
         self.method_resolved: str | None = None
         self.result: Any = None
+        self.batched = False
         self._X = None
 
     # ------------------------------------------------------------- fit ----
@@ -82,7 +90,8 @@ class FastVAT:
             Xj = jnp.asarray(np.asarray(X, np.float32))
             res = core.vat(Xj, use_pallas=self.use_pallas)
             if method == "ivat":
-                self.result = (res, core.ivat_from_vat(res.rstar))
+                self.result = (res, core.ivat_from_vat(
+                    res.rstar, use_pallas=self.use_pallas))
             else:
                 self.result = res
         elif method == "svat":
@@ -113,7 +122,54 @@ class FastVAT:
             Xj = jnp.asarray(np.asarray(X, np.float32))
             self.result = core.dvat(Xj, mesh)
         self.method_resolved = method
+        self.batched = False
         self._X = X
+        return self
+
+    def fit_many(self, Xs) -> "FastVAT":
+        """Assess a stack of datasets in ONE compiled program.
+
+        Args:
+          Xs: (b, n, d) array-like — b independent datasets of n points
+            each (pad or truncate to a common n first; a Python list of
+            equal-shape (n, d) arrays also works).
+
+        Returns:
+          self. ``order()`` then yields (b, n), ``image()`` (b, n, n),
+          and ``assess()`` a list of b per-dataset reports.
+
+        Only the exact rungs batch: method "vat" / "ivat" (or "auto",
+        which resolves to "vat" for n <= SMALL_N and "ivat" is opt-in).
+        Each dataset's ordering is bitwise-identical to a solo ``fit`` —
+        the batch is a vmap / batched Pallas grid, never an
+        approximation. For n past the exact-VAT rung, loop ``fit()`` per
+        dataset instead (svat/bigvat don't vectorize over datasets yet).
+        """
+        Xs = jnp.asarray(np.asarray(Xs, np.float32))
+        if Xs.ndim != 3:
+            raise ValueError(f"fit_many wants a (b, n, d) stack, got "
+                             f"shape {Xs.shape}")
+        n = Xs.shape[1]
+        method = self.method
+        if method == "auto":
+            if n > SMALL_N:
+                raise ValueError(
+                    f"fit_many batches the exact rungs only (n <= "
+                    f"{SMALL_N}), got per-dataset n={n}; loop fit() per "
+                    "dataset for the svat/bigvat rungs")
+            method = "vat"
+        if method not in ("vat", "ivat"):
+            raise ValueError(
+                f"fit_many supports method 'vat', 'ivat' or 'auto', "
+                f"got {self.method!r}")
+        if method == "vat":
+            self.result = core.vat_batch(Xs, use_pallas=self.use_pallas)
+        else:
+            img, res = core.ivat_batch(Xs, use_pallas=self.use_pallas)
+            self.result = (res, img)
+        self.method_resolved = method
+        self.batched = True
+        self._X = np.asarray(Xs)
         return self
 
     # --------------------------------------------------------- queries ----
@@ -125,7 +181,8 @@ class FastVAT:
 
     def order(self) -> np.ndarray:
         """VAT ordering: all n points (vat/ivat/bigvat/dvat) or the sample
-        (svat — use sample_indices() to map back to dataset rows)."""
+        (svat — use sample_indices() to map back to dataset rows).
+        After ``fit_many`` the result is a (b, n) stack of orderings."""
         res = self._require_fit()
         m = self.method_resolved
         if m in ("vat", "dvat"):
@@ -153,45 +210,78 @@ class FastVAT:
         smoothed clusiVAT image expanded to ``resolution`` pixels by group
         size.  ``use_ivat=None`` (default) uses the geodesic (iVAT) image
         wherever one was computed (ivat and bigvat); pass False to force
-        the plain reordered distances.
+        the plain reordered distances.  After ``fit_many`` the result
+        carries a leading batch axis: (b, n, n).
         """
         res = self._require_fit()
         m = self.method_resolved
         if m == "vat":
             # geodesic image computed on demand when explicitly requested
-            return np.asarray(core.ivat_from_vat(res.rstar) if use_ivat
-                              else res.rstar)
+            return np.asarray(
+                core.ivat_from_vat(res.rstar, use_pallas=self.use_pallas)
+                if use_ivat else res.rstar)
         if m == "ivat":
             return np.asarray(res[1] if use_ivat in (None, True) else res[0].rstar)
         if m == "svat":
-            return np.asarray(core.ivat_from_vat(res.vat.rstar) if use_ivat
-                              else res.vat.rstar)
+            return np.asarray(
+                core.ivat_from_vat(res.vat.rstar, use_pallas=self.use_pallas)
+                if use_ivat else res.vat.rstar)
         if m == "bigvat":
             return smoothed_image(res, resolution,
                                   use_ivat=use_ivat in (None, True))
         raise RuntimeError(f"method {m!r} produces an ordering, not an image")
 
-    def _hopkins_subsample(self, cap: int = 2_048) -> np.ndarray:
+    def _hopkins_subsample(self, X, cap: int = 2_048) -> np.ndarray:
         """Uniform random rows of X for the Hopkins statistic.
 
         Maximin prototypes are deliberately spread out, which biases
         Hopkins toward 0.5 — so the svat/bigvat rungs must not reuse them
-        here.  Row indexing keeps np.memmap inputs out-of-core.
+        here.  Row indexing (sorted) keeps np.memmap inputs out-of-core.
         """
-        n = self._X.shape[0]
+        n = X.shape[0]
         if n <= cap:
             idx = np.arange(n)
         else:
             idx = np.sort(np.random.default_rng(self.seed).choice(
                 n, cap, replace=False))
-        return np.asarray(self._X[idx], np.float32)
+        return np.asarray(X[idx], np.float32)
 
-    def assess(self, key: jax.Array | None = None) -> dict:
-        """Machine-checkable tendency report: Hopkins + block structure."""
+    def _assess_one(self, rstar, X, key, extra: dict) -> dict:
+        """Score one (rstar, X) pair: Hopkins + block structure."""
+        Xh = self._hopkins_subsample(X)
+        score, k_est = core.block_structure_score(rstar)
+        h = core.hopkins(jnp.asarray(Xh), key)
+        return {
+            **extra,
+            "hopkins": float(h),
+            "block_score": float(score),
+            "k_est": int(k_est),
+            "clustered": bool(h > 0.75 and float(score) > 0.3),
+        }
+
+    def assess(self, key: jax.Array | None = None):
+        """Machine-checkable tendency report: Hopkins + block structure.
+
+        Returns one dict after ``fit`` (keys: method, n, hopkins,
+        block_score, k_est, clustered) and a list of b such dicts (plus a
+        ``batch_index`` key) after ``fit_many``.
+        """
         res = self._require_fit()
         m = self.method_resolved
         if key is None:
             key = jax.random.PRNGKey(self.seed + 1)
+
+        if self.batched:
+            rstars = res.rstar if m == "vat" else res[0].rstar   # (b, n, n)
+            b = rstars.shape[0]
+            keys = jax.random.split(key, b)
+            return [
+                self._assess_one(
+                    rstars[i], self._X[i], keys[i],
+                    {"method": m, "n": int(self._X.shape[1]),
+                     "batch_index": i})
+                for i in range(b)
+            ]
 
         if m == "vat":
             rstar = res.rstar
@@ -206,17 +296,8 @@ class FastVAT:
             sub = core.svat(Xj, key, s=min(self.sample_size, len(Xj)))
             rstar = sub.vat.rstar
 
-        Xh = self._hopkins_subsample()
-        score, k_est = core.block_structure_score(rstar)
-        h = core.hopkins(jnp.asarray(np.asarray(Xh, np.float32)), key)
-        return {
-            "method": m,
-            "n": int(self._X.shape[0]),
-            "hopkins": float(h),
-            "block_score": float(score),
-            "k_est": int(k_est),
-            "clustered": bool(h > 0.75 and float(score) > 0.3),
-        }
+        return self._assess_one(rstar, self._X, key,
+                                {"method": m, "n": int(self._X.shape[0])})
 
 
 def assess_tendency(X, **kwargs) -> dict:

@@ -4,8 +4,11 @@ Module map: README.md (architecture) and docs/scaling.md (the
 vat -> svat -> bigvat -> dvat -> streaming ladder); the user-facing
 facade with automatic method selection is ``repro.api.FastVAT``.
 """
-from repro.core.vat import vat, vat_from_dist, vat_order, reorder, VATResult, block_structure_score
-from repro.core.ivat import ivat, ivat_from_vat
+from repro.core.vat import (vat, vat_batch, vat_batch_from_dist,
+                            vat_from_dist, vat_order, reorder, VATResult,
+                            block_structure_score)
+from repro.core.ivat import (ivat, ivat_batch, ivat_batch_from_dist,
+                             ivat_batch_from_vat, ivat_from_vat)
 from repro.core.svat import svat, maximin_sample, SVATResult
 from repro.core.hopkins import hopkins
 try:  # optional: needs a JAX with shard_map (any home); see distributed.py
@@ -21,8 +24,10 @@ from repro.core.diagnostics import activation_report, embedding_tendency, router
 from repro.core.cluster import kmeans, dbscan, adjusted_rand_index, pca
 
 __all__ = [
-    "vat", "vat_from_dist", "vat_order", "reorder", "VATResult",
-    "block_structure_score", "ivat", "ivat_from_vat", "svat",
+    "vat", "vat_batch", "vat_batch_from_dist", "vat_from_dist",
+    "vat_order", "reorder", "VATResult",
+    "block_structure_score", "ivat", "ivat_batch", "ivat_batch_from_dist",
+    "ivat_batch_from_vat", "ivat_from_vat", "svat",
     "maximin_sample", "SVATResult", "hopkins", "HAS_DISTRIBUTED",
     "bigvat", "BigVATResult", "nearest_prototype_assign",
     "activation_report",

@@ -66,7 +66,17 @@ class BigVATResult(NamedTuple):
 
 def nearest_prototype_assign(X, prototypes, *, block: int = DEFAULT_BLOCK,
                              use_pallas: bool = False):
-    """Tiled nearest-prototype pass: (labels, dists), both (n,).
+    """Tiled nearest-prototype pass.
+
+    Args:
+      X: (n, d) array-like supporting row slicing (np.memmap included).
+      prototypes: (s, d) float — the maximin sample.
+      block: rows per streamed tile.
+      use_pallas: route each (block, s) tile through the Pallas kernel.
+
+    Returns:
+      (labels (n,) int32 nearest-prototype ids, dists (n,) float32
+      distances to that prototype).
 
     Streams X in row blocks of ``block`` through ``kernels.ops.pairwise_
     dist`` against the (s, d) prototype matrix and reduces each (block, s)
@@ -96,10 +106,19 @@ def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
            compute_ivat: bool = True) -> BigVATResult:
     """clusiVAT-style big-data VAT of X (n, d) without any (n, n) array.
 
-    The returned ``order`` lists all n points grouped by their prototype's
-    position in the sample VAT ordering (points within a group sorted by
-    distance to their prototype) — the nearest-prototype extension of the
-    sample ordering to the full dataset.
+    Args:
+      X: (n, d) array-like (np.memmap ok — rows are streamed).
+      key: PRNG key for the maximin start (None: PRNGKey(0)).
+      s: prototype count; block: rows per extension tile;
+      use_pallas: Pallas distance tiles; compute_ivat: also build the
+        (s, s) geodesic image.
+
+    Returns:
+      BigVATResult (see the NamedTuple fields above). ``order`` lists all
+      n points grouped by their prototype's position in the sample VAT
+      ordering (points within a group sorted by distance to their
+      prototype) — the nearest-prototype extension of the sample ordering
+      to the full dataset.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -134,6 +153,15 @@ def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
 def smoothed_image(result: BigVATResult, resolution: int = 256,
                    *, use_ivat: bool = False) -> np.ndarray:
     """Aggregated "smoothed" VAT image of all n points at a fixed resolution.
+
+    Args:
+      result: a fitted BigVATResult.
+      resolution: output image edge in pixels.
+      use_ivat: render from the geodesic (s, s) image instead of rstar
+        (requires the result to have been built with compute_ivat=True).
+
+    Returns:
+      (resolution, resolution) float32 numpy image.
 
     Each prototype's row/column band spans pixels proportional to its group
     size, so the picture a full n x n VAT image would show (cluster blocks

@@ -19,7 +19,18 @@ from repro.kernels import ops as kops
 
 @functools.partial(jax.jit, static_argnames=("k", "iters"))
 def kmeans(X: jax.Array, key: jax.Array, *, k: int, iters: int = 50):
-    """Lloyd's algorithm. Returns (labels (n,), centers (k,d), inertia)."""
+    """Lloyd's algorithm with greedy maximin seeding.
+
+    Args:
+      X: (n, d) float — data points.
+      key: PRNG key for the seeding start point.
+      k: number of clusters (static).
+      iters: Lloyd iterations (static).
+
+    Returns:
+      (labels (n,) int32, centers (k, d) float, inertia: f32 scalar sum
+      of squared distances to the assigned center).
+    """
     n, d = X.shape
     # k-means++-lite: greedy maximin seeding from a random start
     from repro.core.svat import maximin_sample
@@ -43,7 +54,17 @@ def kmeans(X: jax.Array, key: jax.Array, *, k: int, iters: int = 50):
 
 @functools.partial(jax.jit, static_argnames=("min_pts",))
 def dbscan(X: jax.Array, *, eps: float, min_pts: int = 5):
-    """Density-based clustering; returns labels (n,), -1 = noise.
+    """Density-based clustering (DBSCAN), JAX-native and O(n^2)-dense.
+
+    Args:
+      X: (n, d) float — data points.
+      eps: neighbourhood radius.
+      min_pts: core-point threshold, self included (static).
+
+    Returns:
+      (n,) int32 labels; -1 marks noise. Label values are core-point
+      indices (not compacted to 0..k-1) — feed through
+      ``adjusted_rand_index`` or np.unique for canonical ids.
 
     Connected components of the core-point graph are found by iterated
     min-label propagation (O(n^2) matmul-ish per sweep, <= n sweeps,
@@ -84,7 +105,14 @@ def dbscan(X: jax.Array, *, eps: float, min_pts: int = 5):
 
 
 def adjusted_rand_index(a: np.ndarray, b: np.ndarray) -> float:
-    """ARI between two integer label vectors (noise -1 treated as a label)."""
+    """Adjusted Rand index between two labelings.
+
+    Args:
+      a, b: (n,) integer label vectors (noise -1 treated as a label).
+
+    Returns:
+      float in [-1, 1]; 1 = identical partitions, ~0 = chance agreement.
+    """
     a = np.asarray(a)
     b = np.asarray(b)
     _, ai = np.unique(a, return_inverse=True)
@@ -104,7 +132,15 @@ def adjusted_rand_index(a: np.ndarray, b: np.ndarray) -> float:
 
 
 def pca(X: jax.Array, k: int = 2) -> jax.Array:
-    """Top-k principal components (validation visual the paper uses)."""
+    """Top-k principal components (validation visual the paper uses).
+
+    Args:
+      X: (n, d) float — data points.
+      k: number of components.
+
+    Returns:
+      (n, k) float — X centered and projected onto the top-k PCs.
+    """
     Xc = X - jnp.mean(X, axis=0)
     _, _, vt = jnp.linalg.svd(Xc, full_matrices=False)
     return Xc @ vt[:k].T

@@ -17,7 +17,17 @@ from repro.kernels import ops as kops
 
 @functools.partial(jax.jit, static_argnames=("m",))
 def hopkins(X: jax.Array, key: jax.Array, *, m: int = 0) -> jax.Array:
-    """Hopkins statistic of X (n, d); m defaults to min(n//10, 256), >=8."""
+    """Hopkins statistic of a dataset.
+
+    Args:
+      X: (n, d) float — data points.
+      key: PRNG key (split for the uniform probe and the data sample).
+      m: probe count (static); 0 means max(8, min(n // 10, 256)).
+
+    Returns:
+      f32 scalar H in (0, 1): ~0.5 for uniform data, > 0.75 indicates
+      significant cluster structure (the paper's threshold).
+    """
     n, d = X.shape
     if m == 0:
         m = max(8, min(n // 10, 256))

@@ -2,39 +2,122 @@
 
 Uses the Havens & Bezdek (2012) O(n^2) recurrence, which requires the
 input to already be VAT-ordered.  The paper cites iVAT as the main
-interpretability extension; here it is a lax.fori_loop whose body is a
-fully vectorized O(n) row update (VPU-friendly).
+interpretability extension; two implementations live in ``kernels/``:
+
+  * XLA fallback (``kernels/ref.py::ivat_from_vat_ref``): lax.fori_loop
+    whose body is a fully vectorized O(n) row update.
+  * fused Pallas kernel (``kernels/ivat_update.py``): keeps the growing
+    D' matrix resident in VMEM, replacing the per-step full-matrix
+    ``at[].set`` copies with two O(n) stores.
+
+``kernels/ops.py::ivat_from_vat`` picks between them; this module is the
+stable public surface.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.vat import VATResult, vat_from_dist
-
-
-@jax.jit
-def ivat_from_vat(rstar: jax.Array) -> jax.Array:
-    """VAT-ordered dissimilarity matrix -> iVAT geodesic matrix."""
-    n = rstar.shape[0]
-    idx = jnp.arange(n)
-
-    def body(r, Dp):
-        row = rstar[r]
-        mask = idx < r
-        j = jnp.argmin(jnp.where(mask, row, jnp.inf))
-        # D'[r,k] = max(R*[r,j], D'[j,k]) for k<r; at k=j, D'[j,j]=0 gives R*[r,j]
-        newrow = jnp.where(mask, jnp.maximum(rstar[r, j], Dp[j]), 0.0)
-        Dp = Dp.at[r, :].set(newrow)
-        Dp = Dp.at[:, r].set(newrow)
-        return Dp
-
-    return lax.fori_loop(1, n, body, jnp.zeros_like(rstar))
+from repro.core.vat import VATResult, vat_batch_from_dist, vat_from_dist
+from repro.kernels import ops as kops
 
 
-@jax.jit
-def ivat(R: jax.Array) -> tuple[jax.Array, VATResult]:
-    """Dissimilarity matrix -> (iVAT image, underlying VAT result)."""
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ivat_from_vat(rstar: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    """VAT-ordered dissimilarity matrix -> iVAT geodesic matrix.
+
+    Args:
+      rstar: (n, n) float — VAT-ordered dissimilarity matrix (the
+        ``rstar`` field of a ``VATResult``). Must be VAT-ordered: the
+        recurrence below is only valid along a recorded Prim traversal.
+      use_pallas: route through the fused VMEM-resident Pallas kernel
+        (interpret mode on CPU; compiled on TPU); falls back to XLA for
+        n > ``kernels.ivat_update.MAX_FUSED_N``.
+
+    Returns:
+      (n, n) float32 — D', the max-min path ("geodesic") distance matrix,
+      symmetric with zero diagonal.
+
+    The Havens & Bezdek (2012) recurrence: with D = R* VAT-ordered,
+    D'[0, 0] = 0, and for each r = 1 .. n-1 in order,
+
+        j        = argmin_{k < r} D[r, k]          (nearest ordered point —
+                                                    the MST edge that
+                                                    attached point r)
+        D'[r, k] = max(D[r, j], D'[j, k])   for k < r, k != j
+        D'[r, j] = D[r, j]
+        D'[k, r] = D'[r, k]                 (symmetry), D'[r, r] = 0.
+
+    Every path from r to an earlier point k must cross r's MST attachment
+    edge (r, j), so the minimax path cost is that edge's weight capped
+    below by the already-known minimax cost D'[j, k] — hence the single
+    max per entry and the O(n^2) total.
+    """
+    return kops.ivat_from_vat(rstar, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ivat(R: jax.Array, *, use_pallas: bool = False
+         ) -> tuple[jax.Array, VATResult]:
+    """Dissimilarity matrix -> (iVAT image, underlying VAT result).
+
+    Args:
+      R: (n, n) float — symmetric dissimilarity matrix, zero diagonal.
+      use_pallas: forwarded to ``ivat_from_vat``.
+
+    Returns:
+      ((n, n) float32 geodesic image, VATResult of the ordering pass).
+    """
     res = vat_from_dist(R)
-    return ivat_from_vat(res.rstar), res
+    return ivat_from_vat(res.rstar, use_pallas=use_pallas), res
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ivat_batch(X: jax.Array, *, use_pallas: bool = False
+               ) -> tuple[jax.Array, VATResult]:
+    """Batched iVAT: stack of datasets -> stack of geodesic images.
+
+    Args:
+      X: (b, n, d) float — b independent datasets of n points each.
+        NOTE: raw data, unlike the unbatched ``ivat`` which takes a
+        precomputed dissimilarity matrix — for a (b, n, n) distance
+        stack use ``ivat_batch_from_dist``.
+      use_pallas: batched Pallas distance grid + fused iVAT kernel
+        (interpret mode on CPU); default is the batched XLA path.
+
+    Returns:
+      ((b, n, n) float32 iVAT stack, batched VATResult — rstar (b, n, n),
+      order (b, n), dist (b, n, n)).
+
+    Per-dataset results are bitwise-identical to running ``ivat`` on each
+    X[i]: the batch axis is a vmap (XLA) or a leading grid axis (Pallas)
+    with no cross-dataset interaction.
+    """
+    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas)
+    res = vat_batch_from_dist(R)
+    return kops.ivat_from_vat(res.rstar, use_pallas=use_pallas), res
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ivat_batch_from_dist(R: jax.Array, *, use_pallas: bool = False
+                         ) -> tuple[jax.Array, VATResult]:
+    """Batched ``ivat``: precomputed (b, n, n) dissimilarity stack in.
+
+    Args:
+      R: (b, n, n) float — symmetric dissimilarity matrices, zero
+        diagonals (the batched analogue of ``ivat``'s input).
+      use_pallas: forwarded to the fused iVAT kernel.
+
+    Returns:
+      ((b, n, n) float32 iVAT stack, batched VATResult).
+    """
+    res = vat_batch_from_dist(R)
+    return kops.ivat_from_vat(res.rstar, use_pallas=use_pallas), res
+
+
+@jax.jit
+def ivat_batch_from_vat(rstar: jax.Array) -> jax.Array:
+    """Batched geodesic transform of an already-ordered (b, n, n) stack."""
+    return kops.ivat_from_vat(rstar)

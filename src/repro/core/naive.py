@@ -4,7 +4,7 @@ This is a faithful transcription of the "standard Python VAT" the paper
 benchmarks against (Table 1): nested-loop pairwise distances and a
 list-based Prim reordering.  Deliberately unvectorized — it is both the
 correctness oracle for the accelerated paths and the denominator of every
-speedup number in ``benchmarks/table1_speed.py``.
+speedup number in ``benchmarks/vat_tables.py::table1``.
 """
 from __future__ import annotations
 

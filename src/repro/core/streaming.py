@@ -48,6 +48,13 @@ class StreamingVAT:
     # ------------------------------------------------------- ingest ----
 
     def update(self, X) -> None:
+        """Ingest a chunk of streaming points.
+
+        Args:
+          X: (m, d) array-like (or anything reshapeable to it) — the next
+            m points of the stream, inserted one at a time into the
+            maximin reservoir (absorb / evict per the class docstring).
+        """
         X = np.asarray(X, np.float32).reshape(-1, self.d)
         for x in X:
             self._insert(x)
@@ -64,9 +71,12 @@ class StreamingVAT:
         # thinning radius: current minimum pairwise separation estimate
         radius = self._min_sep()
         if d2[j] <= radius ** 2:
-            # absorb: x is redundant at the current resolution
-            self.counts[j] += 1
-            self.pts[j] = (self.pts[j] * self.counts[j] + x) / (self.counts[j] + 1)
+            # absorb: x is redundant at the current resolution — fold it
+            # into the slot's running mean with the OLD multiplicity as
+            # the weight (mean_new = (mean * c + x) / (c + 1))
+            c = self.counts[j]
+            self.pts[j] = (self.pts[j] * c + x) / (c + 1)
+            self.counts[j] = c + 1
             return
         # evict the most redundant reservoir point (smallest NN distance)
         nn = self._nn_dists()
@@ -92,13 +102,24 @@ class StreamingVAT:
         return self._cached
 
     def order(self) -> np.ndarray:
+        """Exact VAT ordering of the current reservoir: (len(pts),) int32."""
         return np.asarray(self._vat().order)
 
     def image(self) -> np.ndarray:
+        """Reordered dissimilarity image of the reservoir: (len(pts),)^2."""
         return np.asarray(self._vat().rstar)
 
     def tendency(self, key=None):
-        """(hopkins, block_score, k_est) of the current reservoir."""
+        """Tendency snapshot of the current reservoir.
+
+        Args:
+          key: optional PRNG key for the Hopkins sample (defaults to a
+            key derived from ``n_seen``, so repeated calls between
+            updates are deterministic).
+
+        Returns:
+          (hopkins: float, block_score: float, k_est: int).
+        """
         from repro.core.hopkins import hopkins
         from repro.core.vat import block_structure_score
         key = key if key is not None else jax.random.PRNGKey(self.n_seen)

@@ -28,7 +28,17 @@ class SVATResult(NamedTuple):
 
 
 def maximin_sample(X: jax.Array, s: int, key: jax.Array) -> jax.Array:
-    """Greedy farthest-point sampling: s indices, O(n s) time, O(n) memory."""
+    """Greedy farthest-point (maximin) sampling.
+
+    Args:
+      X: (n, d) float — data points.
+      s: number of distinguished points to pick.
+      key: PRNG key for the random start point.
+
+    Returns:
+      (s,) int32 indices into X — each pick maximizes the distance to
+      the already-picked set. O(n s) time, O(n) memory.
+    """
     n = X.shape[0]
     i0 = jax.random.randint(key, (), 0, n)
     idx0 = jnp.zeros((s,), jnp.int32).at[0].set(i0.astype(jnp.int32))
@@ -50,8 +60,16 @@ def svat(X: jax.Array, key: jax.Array, *, s: int = 256,
          use_pallas: bool = False) -> SVATResult:
     """Approximate VAT image of X using s maximin-sampled points.
 
-    use_pallas routes the sample distance matrix through the Pallas kernel
-    (interpret mode on CPU; compiled on TPU).
+    Args:
+      X: (n, d) float — data points.
+      key: PRNG key for the maximin start.
+      s: sample size (static; clamped to n).
+      use_pallas: route the (s, s) sample distance matrix through the
+        Pallas kernel (interpret mode on CPU; compiled on TPU).
+
+    Returns:
+      SVATResult — ``vat`` is the exact VATResult of the sample,
+      ``sample_idx`` the (s,) dataset rows of the distinguished points.
     """
     s = min(s, X.shape[0])
     idx = maximin_sample(X, s, key)

@@ -31,13 +31,19 @@ class VATResult(NamedTuple):
 def vat_order(R: jax.Array, *, use_pallas_argmin: bool = False) -> jax.Array:
     """Prim-based VAT ordering of a dissimilarity matrix.
 
+    Args:
+      R: (n, n) float — symmetric dissimilarity matrix, zero diagonal.
+      use_pallas_argmin: route the per-step masked argmin through the
+        fused ``prim_update`` Pallas kernel (the Numba-accelerated hot
+        loop of the paper); on CPU it runs in interpret mode — TPU is the
+        target.
+
+    Returns:
+      (n,) int32 permutation — the VAT visit order.
+
     Matches ``core.naive.vat_order_naive`` exactly (first vertex = row of
     the global max; greedy min-edge growth; first-index tie-breaking, which
     jnp.argmin / the naive `<` scan share).
-
-    use_pallas_argmin routes the per-step masked argmin through the fused
-    ``prim_update`` Pallas kernel (the Numba-accelerated hot loop of the
-    paper); on CPU it runs in interpret mode — TPU is the target.
     """
     n = R.shape[0]
     i0 = jnp.argmax(jnp.max(R, axis=1)).astype(jnp.int32)
@@ -61,16 +67,30 @@ def vat_order(R: jax.Array, *, use_pallas_argmin: bool = False) -> jax.Array:
 
 
 def reorder(R: jax.Array, order: jax.Array) -> jax.Array:
-    """R* = R[order][:, order] — one gather along each axis."""
+    """R* = R[order][:, order] — one gather along each axis.
+
+    Args:
+      R: (n, n) float — dissimilarity matrix.
+      order: (n,) int — permutation from ``vat_order``.
+
+    Returns:
+      (n, n) float — R with rows and columns permuted by ``order``.
+    """
     return R[order][:, order]
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def vat(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
-    """Full VAT on a data matrix X (n, d).
+    """Full VAT on a data matrix.
 
-    use_pallas=True routes the distance matrix through the Pallas kernel
-    (interpret mode on CPU; compiled on TPU). Default is the XLA path.
+    Args:
+      X: (n, d) float — data points.
+      use_pallas: route the distance matrix through the Pallas kernel
+        (interpret mode on CPU; compiled on TPU). Default is the XLA path.
+
+    Returns:
+      VATResult — rstar (n, n) reordered image, order (n,) int32
+      permutation, dist (n, n) original distances.
     """
     R = kops.pairwise_dist(X, use_pallas=use_pallas)
     order = vat_order(R)
@@ -79,19 +99,61 @@ def vat(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
 
 @jax.jit
 def vat_from_dist(R: jax.Array) -> VATResult:
-    """VAT when the dissimilarity matrix is precomputed (paper step 2+3)."""
+    """VAT when the dissimilarity matrix is precomputed (paper step 2+3).
+
+    Args:
+      R: (n, n) float — symmetric dissimilarity matrix, zero diagonal.
+
+    Returns:
+      VATResult with ``dist`` aliasing the input R.
+    """
     order = vat_order(R)
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def vat_batch(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
+    """Batched VAT: assess a stack of datasets in one compiled program.
+
+    Args:
+      X: (b, n, d) float — b independent datasets of n points each.
+      use_pallas: route distances through the batched-grid Pallas kernel
+        (``kernels.pairwise_dist_pallas_batch``); default is the batched
+        XLA path.
+
+    Returns:
+      VATResult whose fields carry a leading batch axis: rstar (b, n, n),
+      order (b, n) int32, dist (b, n, n).
+
+    The per-dataset ordering is bitwise-identical to ``vat`` on the same
+    rows (the vmapped ``vat_order`` runs the same argmin/min-update steps
+    per batch lane; no cross-dataset reduction exists anywhere).
+    """
+    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas)
+    return jax.vmap(vat_from_dist)(R)
+
+
+@jax.jit
+def vat_batch_from_dist(R: jax.Array) -> VATResult:
+    """Batched ``vat_from_dist``: (b, n, n) stack -> batched VATResult."""
+    return jax.vmap(vat_from_dist)(R)
 
 
 def block_structure_score(rstar: jax.Array, threshold: float | None = None):
     """Quantify diagonal block structure of a VAT image.
 
-    Returns (score, k_est): `score` in [0, 1] — mean off-diagonal-band
-    contrast; `k_est` — estimated number of diagonal blocks by counting
-    super-diagonal "cuts" (adjacent-in-order distances above threshold).
-    Used by diagnostics and by benchmarks/table3 to turn a VAT image into
-    a machine-checkable "VAT insight".
+    Args:
+      rstar: (n, n) float — VAT-reordered dissimilarity matrix.
+      threshold: cut threshold as a fraction of the matrix mean; None
+        derives one from the super-diagonal statistics (mean + 2 std,
+        floored at half the largest jump).
+
+    Returns:
+      (score, k_est): `score` in [0, 1] — mean off-diagonal-band
+      contrast; `k_est` — estimated number of diagonal blocks by counting
+      super-diagonal "cuts" (adjacent-in-order distances above threshold).
+      Used by diagnostics and by benchmarks/table3 to turn a VAT image
+      into a machine-checkable "VAT insight".
     """
     n = rstar.shape[0]
     sup = jnp.diagonal(rstar, offset=1)           # adjacent-in-order dists

@@ -1,11 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 pairwise_dist — MXU-tiled Euclidean distance matrix (the O(n^2 d) stage
-                the paper's Cython version optimizes with flattened loops)
+                the paper's Cython version optimizes with flattened
+                loops), plus the batched (b, n, d)-stack grid variant
 prim_update   — fused masked block-argmin for Prim's greedy selection
-ops           — jit'd dispatch wrappers (pallas | xla)
+ivat_update   — fused VMEM-resident iVAT recurrence (Havens & Bezdek
+                row update; replaces the XLA ``at[].set`` copies)
+ops           — jit'd dispatch wrappers (pallas | xla), the only front
+                door core code uses
 ref           — pure-jnp oracles, also the production CPU path
 
-Design notes (BlockSpec tiling, VMEM budget, interpret-mode-on-CPU
-convention): docs/architecture.md.
+Design notes (BlockSpec tiling conventions, VMEM budgeting, padding
+rules, interpret-mode-on-CPU testing recipe): docs/kernels.md.
 """

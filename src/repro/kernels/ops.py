@@ -10,7 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.pairwise_dist import pairwise_dist_pallas
+from repro.kernels.ivat_update import MAX_FUSED_N, ivat_from_vat_pallas
+from repro.kernels.pairwise_dist import (pairwise_dist_pallas,
+                                         pairwise_dist_pallas_batch)
 from repro.kernels.prim_update import masked_argmin_pallas
 
 
@@ -20,7 +22,19 @@ def _interpret() -> bool:
 
 def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
                   use_pallas: bool = False, block: int = 256) -> jax.Array:
-    """Euclidean distance matrix; Pallas-tiled on request, XLA otherwise."""
+    """Euclidean distance matrix; Pallas-tiled on request, XLA otherwise.
+
+    Args:
+      X: (n, d) float — query points.
+      Y: (m, d) float or None — reference points; None means self-
+        distances (and forces an exactly-zero diagonal).
+      use_pallas: route through the MXU-tiled Pallas kernel (interpret
+        mode on CPU; compiled on TPU). Default is the XLA Gram-trick path.
+      block: Pallas output tile edge.
+
+    Returns:
+      (n, m) float32 distance matrix ((n, n) when Y is None).
+    """
     if use_pallas:
         R = pairwise_dist_pallas(X, Y, block=block, interpret=_interpret())
     else:
@@ -31,10 +45,63 @@ def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
     return R
 
 
+def pairwise_dist_batch(X: jax.Array, *, use_pallas: bool = False,
+                        block: int = 256) -> jax.Array:
+    """Per-dataset self-distance matrices for a (b, n, d) stack.
+
+    Args:
+      X: (b, n, d) float — b independent datasets.
+      use_pallas: route through the batched-grid Pallas kernel
+        (``pairwise_dist_pallas_batch``); default is a vmap of the XLA
+        reference, which lowers to one batched dot_general.
+      block: Pallas output tile edge.
+
+    Returns:
+      (b, n, n) float32 stack with exactly-zero diagonals.
+    """
+    if use_pallas:
+        R = pairwise_dist_pallas_batch(X, block=block, interpret=_interpret())
+    else:
+        R = jax.vmap(ref.pairwise_dist_ref)(X)
+    n = R.shape[-1]
+    return R * (1.0 - jnp.eye(n, dtype=R.dtype))
+
+
 def masked_argmin(vals: jax.Array, mask: jax.Array, *,
                   use_pallas: bool = False, block: int = 1024):
-    """(min, argmin) over unmasked entries (mask=True excludes)."""
+    """(min, argmin) over unmasked entries (mask=True excludes).
+
+    Args:
+      vals: (n,) float — candidate values.
+      mask: (n,) bool — True lanes are excluded from the reduction.
+      use_pallas: fused block-argmin kernel vs the XLA reference.
+      block: Pallas VMEM tile length.
+
+    Returns:
+      (f32 scalar min, i32 scalar argmin), first-index tie-breaking.
+    """
     if use_pallas:
         return masked_argmin_pallas(vals, mask, block=block,
                                     interpret=_interpret())
     return ref.masked_argmin_ref(vals, mask)
+
+
+def ivat_from_vat(rstar: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    """iVAT geodesic transform of VAT-ordered dissimilarities.
+
+    Args:
+      rstar: (n, n) or (b, n, n) float — VAT-ordered matrix/stack.
+      use_pallas: route through the fused VMEM-resident row-update kernel
+        (``kernels/ivat_update.py``; interpret mode on CPU, compiled on
+        TPU). Matrices with n > ``MAX_FUSED_N`` exceed the kernel's VMEM
+        slab budget and silently take the XLA fallback instead.
+
+    Returns:
+      (n, n) or (b, n, n) float32 max-min path distance matrix/stack.
+    """
+    n = rstar.shape[-1]
+    if use_pallas and n <= MAX_FUSED_N:
+        return ivat_from_vat_pallas(rstar, interpret=_interpret())
+    if rstar.ndim == 3:
+        return jax.vmap(ref.ivat_from_vat_ref)(rstar)
+    return ref.ivat_from_vat_ref(rstar)

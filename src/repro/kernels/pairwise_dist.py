@@ -26,16 +26,27 @@ DEFAULT_BLOCK = 256
 _LANE = 128  # MXU/VREG lane width — pad contraction dim to a multiple
 
 
-def _pairwise_kernel(x_ref, y_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)          # (BM, d)
-    y = y_ref[...].astype(jnp.float32)          # (BN, d)
+def _tile_dist(x, y):
+    """(BM, d), (BN, d) -> (BM, BN) Euclidean tile, f32 accumulate."""
     nx = jnp.sum(x * x, axis=1)                 # (BM,)
     ny = jnp.sum(y * y, axis=1)                 # (BN,)
     cross = jax.lax.dot_general(                # MXU: (BM, d) x (BN, d)^T
         x, y, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
     sq = nx[:, None] + ny[None, :] - 2.0 * cross
-    o_ref[...] = jnp.sqrt(jnp.maximum(sq, 0.0)).astype(o_ref.dtype)
+    return jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def _pairwise_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (BM, d)
+    y = y_ref[...].astype(jnp.float32)          # (BN, d)
+    o_ref[...] = _tile_dist(x, y).astype(o_ref.dtype)
+
+
+def _pairwise_kernel_batch(x_ref, y_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)            # (1, BM, d) slab -> (BM, d)
+    y = y_ref[0].astype(jnp.float32)
+    o_ref[0] = _tile_dist(x, y).astype(o_ref.dtype)
 
 
 def _pad_to(a: jax.Array, size: int, axis: int) -> jax.Array:
@@ -55,7 +66,19 @@ def pairwise_dist_pallas(
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
-    """(n, d), (m, d) -> (n, m) Euclidean distance matrix via pallas_call."""
+    """Blocked Euclidean distance matrix via pallas_call.
+
+    Args:
+      X: (n, d) float — query points.
+      Y: (m, d) float or None — reference points (None: Y = X).
+      block: output tile edge BM = BN (static; clamped to n/m).
+      interpret: Pallas interpret mode (CPU correctness path).
+
+    Returns:
+      (n, m) float32 distance matrix. n, m are padded to the block and d
+      to the 128-lane width internally; padding lives in sliced-off
+      tiles, so it never reaches the caller.
+    """
     if Y is None:
         Y = X
     n, d = X.shape
@@ -80,3 +103,46 @@ def pairwise_dist_pallas(
         interpret=interpret,
     )(Xp, Yp)
     return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pairwise_dist_pallas_batch(
+    X: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched self-distance matrices for a stack of datasets.
+
+    Args:
+      X: (b, n, d) float — b independent datasets of n points each.
+      block: square output tile edge (BM = BN); clamped to n.
+      interpret: Pallas interpret mode (CPU correctness path).
+
+    Returns:
+      (b, n, n) float32 — per-dataset Euclidean distance matrices.
+
+    One pallas_call serves the whole stack: the grid grows a leading batch
+    axis, (b, n/BM, n/BN), and every BlockSpec gains a size-1 slab dim
+    indexed by the batch coordinate — the per-tile compute (one MXU matmul
+    + VPU sqrt) is shared with the unbatched kernel, so VMEM per program
+    stays at the unbatched budget regardless of b.
+    """
+    b, n, d = X.shape
+    bm = min(block, max(8, n))
+    n_pad = -(-n // bm) * bm
+    d_pad = -(-d // _LANE) * _LANE
+    Xp = _pad_to(_pad_to(X, n_pad, 1), d_pad, 2)
+
+    out = pl.pallas_call(
+        _pairwise_kernel_batch,
+        grid=(b, n_pad // bm, n_pad // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, d_pad), lambda bi, i, j: (bi, i, 0)),
+            pl.BlockSpec((1, bm, d_pad), lambda bi, i, j: (bi, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bm), lambda bi, i, j: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(Xp, Xp)
+    return out[:, :n, :n]

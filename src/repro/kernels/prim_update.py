@@ -43,7 +43,21 @@ def masked_argmin_pallas(
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ):
-    """(n,), (n,) bool -> (min value, global argmin over unmasked lanes)."""
+    """Fused masked argmin over VMEM blocks.
+
+    Args:
+      vals: (n,) float — candidate values (Prim frontier distances).
+      mask: (n,) bool — True lanes are excluded; padding is masked True
+        so it can never win.
+      block: VMEM tile length (static; clamped to n).
+      interpret: Pallas interpret mode (CPU correctness path).
+
+    Returns:
+      (f32 scalar min, i32 scalar global argmin), first-index
+      tie-breaking across and within blocks (block-local argmin is
+      offset by the block base; the tiny cross-block reduction runs in
+      the jit'd wrapper).
+    """
     n = vals.shape[0]
     bn = min(block, max(8, n))
     n_pad = -(-n // bn) * bn

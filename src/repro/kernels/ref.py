@@ -30,9 +30,46 @@ def pairwise_dist_ref(X: jax.Array, Y: jax.Array | None = None) -> jax.Array:
 def masked_argmin_ref(vals: jax.Array, mask: jax.Array):
     """(min value, argmin index) of vals where mask is False.
 
-    `mask=True` means "excluded" (already selected in Prim's loop).
-    First-index tie-breaking, matching jnp.argmin.
+    Args:
+      vals: (n,) float — candidate values (Prim frontier distances).
+      mask: (n,) bool — True means "excluded" (already selected).
+
+    Returns:
+      (min value: f32 scalar, argmin index: i32 scalar) over unmasked
+      lanes, first-index tie-breaking, matching jnp.argmin.
     """
     masked = jnp.where(mask, jnp.inf, vals.astype(jnp.float32))
     idx = jnp.argmin(masked).astype(jnp.int32)
     return masked[idx], idx
+
+
+def ivat_from_vat_ref(rstar: jax.Array) -> jax.Array:
+    """iVAT geodesic transform — the XLA fallback for kernels/ivat_update.
+
+    Args:
+      rstar: (n, n) float — VAT-ordered dissimilarity matrix.
+
+    Returns:
+      (n, n) float32 — max-min path distance matrix D' (Havens & Bezdek
+      2012 recurrence; see ``core.ivat.ivat_from_vat`` for the math).
+
+    Each fori_loop step is a fully vectorized O(n) row update, but the
+    two ``at[].set`` writes lower to full-matrix dynamic_update_slice
+    copies — the cost the fused Pallas kernel removes by keeping D'
+    resident in VMEM.
+    """
+    n = rstar.shape[0]
+    R = rstar.astype(jnp.float32)
+    idx = jnp.arange(n)
+
+    def body(r, Dp):
+        row = R[r]
+        mask = idx < r
+        j = jnp.argmin(jnp.where(mask, row, jnp.inf))
+        # D'[r,k] = max(R*[r,j], D'[j,k]) for k<r; at k=j, D'[j,j]=0 gives R*[r,j]
+        newrow = jnp.where(mask, jnp.maximum(R[r, j], Dp[j]), 0.0)
+        Dp = Dp.at[r, :].set(newrow)
+        Dp = Dp.at[:, r].set(newrow)
+        return Dp
+
+    return jax.lax.fori_loop(1, n, body, jnp.zeros_like(R))

@@ -1,0 +1,122 @@
+"""Batched VAT engine: one compiled program over a (b, n, d) stack must be
+bit-for-bit the same assessment as b solo runs (ISSUE 2 acceptance), on
+both the XLA and the Pallas-interpret paths."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.api import FastVAT
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_dist import pairwise_dist_pallas_batch
+
+
+def _stack(seed=0, b=8, n=256, d=5):
+    rng = np.random.default_rng(seed)
+    scale = rng.uniform(0.5, 2.0, size=d).astype(np.float32)
+    return jnp.asarray(rng.normal(size=(b, n, d)).astype(np.float32) * scale)
+
+
+def test_vat_batch_bitwise_identical_to_solo():
+    """The ISSUE 2 acceptance stack: (8, 256, d)."""
+    Xb = _stack()
+    bres = core.vat_batch(Xb)
+    for i in range(Xb.shape[0]):
+        solo = core.vat(Xb[i])
+        assert np.array_equal(np.asarray(bres.order[i]),
+                              np.asarray(solo.order))
+        assert np.array_equal(np.asarray(bres.rstar[i]),
+                              np.asarray(solo.rstar))
+
+
+def test_ivat_batch_bitwise_identical_to_solo():
+    Xb = _stack(seed=1)
+    iv_b, bres = core.ivat_batch(Xb)
+    for i in range(Xb.shape[0]):
+        R = ops.pairwise_dist(Xb[i])
+        img, solo = core.ivat(R)
+        assert np.array_equal(np.asarray(bres.order[i]),
+                              np.asarray(solo.order))
+        assert np.array_equal(np.asarray(iv_b[i]), np.asarray(img))
+
+
+@pytest.mark.parametrize("b,n,d", [(3, 17, 2), (2, 130, 7), (8, 64, 128)])
+def test_pairwise_batch_pallas_matches_ref(b, n, d):
+    rng = np.random.default_rng(b * 100 + n + d)
+    X = jnp.asarray(rng.normal(size=(b, n, d)).astype(np.float32))
+    got = pairwise_dist_pallas_batch(X, interpret=True)
+    want = jax.vmap(ref.pairwise_dist_ref)(X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+def test_pairwise_batch_dispatch_zero_diag():
+    X = _stack(seed=2, b=3, n=33, d=4)
+    for use_pallas in (False, True):
+        R = ops.pairwise_dist_batch(X, use_pallas=use_pallas)
+        assert R.shape == (3, 33, 33)
+        assert np.allclose(np.asarray(jnp.diagonal(R, axis1=1, axis2=2)), 0.0)
+
+
+def test_ivat_batch_from_dist_matches_solo():
+    """The precomputed-distances entry point mirrors solo ``ivat(R)``."""
+    Xb = _stack(seed=6, b=3, n=48, d=3)
+    Rb = ops.pairwise_dist_batch(Xb)
+    iv_b, bres = core.ivat_batch_from_dist(Rb)
+    for i in range(3):
+        img, solo = core.ivat(Rb[i])
+        assert np.array_equal(np.asarray(bres.order[i]),
+                              np.asarray(solo.order))
+        assert np.array_equal(np.asarray(iv_b[i]), np.asarray(img))
+
+
+def test_fit_many_pallas_matches_xla():
+    """use_pallas reaches both the distance grid and the fused iVAT kernel
+    through the facade (solo fit and fit_many alike)."""
+    Xs = np.asarray(_stack(seed=7, b=2, n=40, d=3))
+    a = FastVAT(method="ivat").fit_many(Xs)
+    b = FastVAT(method="ivat", use_pallas=True).fit_many(Xs)
+    assert np.array_equal(a.order(), b.order())
+    np.testing.assert_allclose(a.image(), b.image(), atol=5e-3)
+    sa = FastVAT(method="ivat").fit(Xs[0])
+    sb = FastVAT(method="ivat", use_pallas=True).fit(Xs[0])
+    assert np.array_equal(sa.order(), sb.order())
+    np.testing.assert_allclose(sa.image(), sb.image(), atol=5e-3)
+
+
+def test_vat_batch_pallas_orders_match_xla():
+    Xb = _stack(seed=3, b=4, n=96, d=6)
+    a = core.vat_batch(Xb)
+    b_ = core.vat_batch(Xb, use_pallas=True)
+    assert np.array_equal(np.asarray(a.order), np.asarray(b_.order))
+
+
+# ---------------------------------------------------------- facade ----
+
+def test_fit_many_matches_solo_fits():
+    Xs = np.asarray(_stack(seed=4, b=4, n=80, d=3))
+    fv = FastVAT(method="ivat").fit_many(Xs)
+    assert fv.order().shape == (4, 80)
+    assert fv.image().shape == (4, 80, 80)
+    reps = fv.assess()
+    assert len(reps) == 4
+    for i, rep in enumerate(reps):
+        solo = FastVAT(method="ivat").fit(Xs[i])
+        assert np.array_equal(fv.order()[i], solo.order())
+        srep = solo.assess()
+        assert rep["batch_index"] == i
+        # block structure is a deterministic function of rstar — exact;
+        # hopkins draws per-dataset keys, so only sanity-check its range
+        for key in ("block_score", "k_est"):
+            assert rep[key] == srep[key], key
+        assert 0.0 < rep["hopkins"] < 1.0
+
+
+def test_fit_many_auto_resolves_and_guards():
+    Xs = np.asarray(_stack(seed=5, b=2, n=32, d=2))
+    fv = FastVAT().fit_many(Xs)
+    assert fv.method_resolved == "vat" and fv.batched
+    with pytest.raises(ValueError, match="svat"):
+        FastVAT(method="svat").fit_many(Xs)
+    with pytest.raises(ValueError, match="stack"):
+        FastVAT().fit_many(Xs[0])

@@ -1,0 +1,89 @@
+"""iVAT correctness against a brute-force minimax-path oracle.
+
+The iVAT image is, mathematically, the matrix of *minimax path distances*
+(a.k.a. max-min / bottleneck geodesics) over the complete graph: the cost
+of a path is its largest edge, and D'[i, j] is the cheapest such cost over
+all i -> j paths.  The Havens & Bezdek recurrence computes this in O(n^2)
+but only along a VAT ordering — the oracle here is an ordering-free
+Floyd–Warshall variant (min-max instead of plus-min), so agreement checks
+the recurrence itself, not a reimplementation of it."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.kernels import ops
+from repro.kernels.ivat_update import ivat_from_vat_pallas
+
+
+def minimax_path_brute(R: np.ndarray) -> np.ndarray:
+    """Floyd–Warshall for bottleneck shortest paths: O(n^3), any ordering."""
+    D = np.array(R, np.float64)
+    n = D.shape[0]
+    for k in range(n):
+        D = np.minimum(D, np.maximum(D[:, k:k + 1], D[k:k + 1, :]))
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+def _rstar(seed, n, d):
+    rng = np.random.default_rng(seed)
+    X = (rng.normal(size=(n, d)) * rng.uniform(0.5, 2.0, size=d)
+         ).astype(np.float32)
+    return core.vat(jnp.asarray(X)).rstar
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 40),
+       d=st.integers(1, 6))
+def test_ivat_recurrence_equals_minimax_oracle(seed, n, d):
+    rstar = _rstar(seed, n, d)
+    want = minimax_path_brute(np.asarray(rstar))
+    got = np.asarray(core.ivat_from_vat(rstar))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 40))
+def test_ivat_pallas_kernel_equals_minimax_oracle(seed, n):
+    rstar = _rstar(seed, n, 3)
+    want = minimax_path_brute(np.asarray(rstar))
+    got = np.asarray(ivat_from_vat_pallas(rstar, interpret=True))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [2, 3, 17, 130])
+def test_ivat_pallas_matches_xla_exactly(n):
+    rstar = _rstar(n, n, 4)
+    a = np.asarray(ops.ivat_from_vat(rstar))
+    b = np.asarray(ops.ivat_from_vat(rstar, use_pallas=True))
+    assert np.array_equal(a, b)
+
+
+def test_ivat_pallas_batched_matches_per_matrix():
+    rstars = jnp.stack([_rstar(s, 48, 3) for s in range(5)])
+    got = np.asarray(ops.ivat_from_vat(rstars, use_pallas=True))
+    for i in range(5):
+        want = np.asarray(ops.ivat_from_vat(rstars[i]))
+        assert np.array_equal(got[i], want)
+
+
+def test_ivat_trivial_sizes():
+    one = jnp.zeros((1, 1))
+    assert np.asarray(ivat_from_vat_pallas(one, interpret=True)).shape == (1, 1)
+    two = jnp.asarray([[0.0, 3.0], [3.0, 0.0]])
+    out = np.asarray(ivat_from_vat_pallas(two, interpret=True))
+    np.testing.assert_allclose(out, np.asarray(two))
+
+
+def test_ivat_fallback_above_vmem_ceiling():
+    """n > MAX_FUSED_N must silently take the XLA path (no Pallas VMEM blowup)."""
+    from repro.kernels.ivat_update import MAX_FUSED_N
+    n = MAX_FUSED_N + 1
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 2)).astype(np.float32)
+    rstar = core.vat(jnp.asarray(X)).rstar
+    a = ops.ivat_from_vat(rstar, use_pallas=True)   # falls back
+    b = ops.ivat_from_vat(rstar)
+    assert np.array_equal(np.asarray(a), np.asarray(b))

@@ -36,3 +36,21 @@ def test_absorption_keeps_counts():
     sv.update(np.array([[0.001]] * 5))            # near-duplicates absorbed
     assert len(sv.pts) == 4
     assert sv.counts.sum() == 9
+
+
+def test_absorption_running_mean_exact():
+    """Regression: the absorb path must weight the slot mean by the OLD
+    multiplicity (the pre-fix code incremented counts first, so a slot
+    that had absorbed c points averaged as if it held c+1 — every absorbed
+    point was under-weighted and the slot drifted toward its first value)."""
+    sv = StreamingVAT(cap=2, d=1)
+    sv.update(np.array([[0.0], [8.0]]))           # reservoir full, sep = 8
+    sv.update(np.array([[2.0]]))                  # absorbed into slot 0
+    assert sv.counts[0] == 2
+    np.testing.assert_allclose(sv.pts[0], [1.0])  # mean of {0, 2}
+    sv.update(np.array([[4.0]]))                  # absorbed again (|1-4|<7)
+    assert sv.counts[0] == 3
+    np.testing.assert_allclose(sv.pts[0], [2.0])  # mean of {0, 2, 4}
+    # slot 1 untouched throughout
+    np.testing.assert_allclose(sv.pts[1], [8.0])
+    assert sv.counts[1] == 1
