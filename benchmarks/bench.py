@@ -12,6 +12,12 @@ benchmarks/README.md), adding two tables the paper doesn't have:
             (interpret mode on CPU — correctness-grade timing; compiled
             numbers belong on TPU hardware, the ``mode`` field says
             which you are looking at).
+  metrics — the metric-dispatched pairwise kernel (ISSUE 3): XLA vs
+            Pallas-interpret per metric, so each metric's tile variant
+            is on the perf record from day one.
+
+Every row records the ``metric`` it was measured under (schema v2);
+tables predating metric pluggability are euclidean throughout.
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
@@ -34,13 +40,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-TABLES = ("table1", "table4", "batched", "ivat")
+TABLES = ("table1", "table4", "batched", "ivat", "metrics")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
 _BATCH_WORKLOADS_SMOKE = ((4, 128, 8),)
 _IVAT_SIZES = (512, 1024)
 _IVAT_SIZES_SMOKE = (192,)
+_METRIC_SHAPE = (1024, 64)
+_METRIC_SHAPE_SMOKE = (256, 16)
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -54,8 +62,9 @@ def _time(fn, *args, reps: int = 3) -> float:
     return best
 
 
-def _row(table: str, name: str, seconds: float, **derived) -> dict:
-    return {"table": table, "name": f"{table}/{name}",
+def _row(table: str, name: str, seconds: float, *,
+         metric: str = "euclidean", **derived) -> dict:
+    return {"table": table, "name": f"{table}/{name}", "metric": metric,
             "us_per_call": seconds * 1e6, "derived": derived}
 
 
@@ -134,8 +143,32 @@ def bench_ivat(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
+def bench_metrics(smoke: bool, reps: int) -> list[dict]:
+    from repro.kernels import ops
+    from repro.kernels.ref import METRICS
+    mode = "interpret" if jax.default_backend() == "cpu" else "compiled"
+    n, d = _METRIC_SHAPE_SMOKE if smoke else _METRIC_SHAPE
+    rng = np.random.default_rng(n)
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    rows = []
+    for metric in METRICS:
+        t_xla = _time(lambda A: ops.pairwise_dist(A, metric=metric),
+                      X, reps=reps)
+        t_pal = _time(
+            lambda A: ops.pairwise_dist(A, metric=metric, use_pallas=True),
+            X, reps=reps)
+        tag = f"n{n}xd{d}/{metric}"
+        rows.append(_row("metrics", f"{tag}/xla", t_xla, metric=metric,
+                         mode="xla"))
+        rows.append(_row("metrics", f"{tag}/pallas", t_pal, metric=metric,
+                         mode=mode,
+                         speedup_vs_xla=round(t_xla / t_pal, 3)))
+    return rows
+
+
 _BENCHES = {"table1": bench_table1, "table4": bench_table4,
-            "batched": bench_batched, "ivat": bench_ivat}
+            "batched": bench_batched, "ivat": bench_ivat,
+            "metrics": bench_metrics}
 assert set(_BENCHES) == set(TABLES)
 
 
@@ -148,7 +181,7 @@ def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
         print(f"# bench: {t} ...", file=sys.stderr)
         rows.extend(_BENCHES[t](smoke, reps))
     return {
-        "schema_version": 1,
+        "schema_version": 2,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {
             "platform": platform.platform(),

@@ -12,12 +12,12 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
 _CONFIG_KEYS = {"smoke", "reps", "tables"}
-_ROW_KEYS = {"table", "name", "us_per_call", "derived"}
+_ROW_KEYS = {"table", "name", "metric", "us_per_call", "derived"}
 
 
 def _fail(msg: str):
@@ -74,6 +74,9 @@ def validate(doc: dict) -> dict:
             _fail(f"{where}.us_per_call must be a number >= 0")
         if not isinstance(row["derived"], dict):
             _fail(f"{where}.derived must be an object")
+        if not isinstance(row["metric"], str) or not row["metric"]:
+            _fail(f"{where}.metric must be a non-empty string (the "
+                  "dissimilarity metric the row was measured under)")
     return doc
 
 

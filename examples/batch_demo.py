@@ -13,7 +13,7 @@ import numpy as np
 
 import jax
 
-from repro.api import FastVAT
+from repro import FastVAT
 
 
 def make_stack(b: int = 8, n: int = 256, d: int = 8, seed: int = 0):
@@ -39,12 +39,12 @@ def main():
     fv = FastVAT(method="ivat").fit_many(Xs)        # warmup absorbs compile
     t0 = time.perf_counter()
     fv = FastVAT(method="ivat").fit_many(Xs)
-    jax.block_until_ready(fv.result[0].rstar)
+    jax.block_until_ready(fv.result.rstar)
     t_batch = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     solos = [FastVAT(method="ivat").fit(Xs[i]) for i in range(b)]
-    jax.block_until_ready(solos[-1].result[0].rstar)
+    jax.block_until_ready(solos[-1].result.rstar)
     t_loop = time.perf_counter() - t0
 
     orders = fv.order()                             # (b, n)

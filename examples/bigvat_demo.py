@@ -13,7 +13,7 @@ import time
 
 import numpy as np
 
-from repro.api import FastVAT
+from repro import FastVAT
 from repro.data.synth import make_big_blobs
 
 N = 100_000

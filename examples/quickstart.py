@@ -52,9 +52,16 @@ def main():
     h = core.hopkins(Xj, jax.random.PRNGKey(0))
     score, k_est = core.block_structure_score(res.rstar)
 
+    # the same pipeline through the facade — every rung returns one
+    # TendencyResult, and any metric (or a precomputed matrix) plugs in
+    from repro import FastVAT
+    rep = FastVAT(metric="manhattan").fit(X).assess()
+    rep_pre = FastVAT(metric="precomputed").fit(np.asarray(res.dist)).assess()
+    assert rep_pre["k_est"] == int(k_est)    # same matrix, same verdict
+
     print(ascii_image(res.rstar))
     print(f"\nhopkins={float(h):.3f}  block_score={float(score):.3f} "
-          f"k_est={int(k_est)}")
+          f"k_est={int(k_est)}  (manhattan k_est={rep['k_est']})")
     print(f"naive python (n=300): {t_naive*1e3:.1f} ms   "
           f"jax (n={len(X)}): {t_jax*1e3:.1f} ms")
     n_scale = (len(X) / 300) ** 2

@@ -1,0 +1,31 @@
+"""repro — Fast-VAT reproduction, rebuilt for accelerators.
+
+The supported import surface lives at the package root:
+
+>>> from repro import FastVAT, assess_tendency, TendencyResult
+
+Submodules (``repro.core``, ``repro.kernels``, ...) remain importable as
+documented library layers; the names below are the stable public API.
+Attribute access is lazy (PEP 562) so ``import repro`` stays cheap for
+consumers that only want a submodule.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "FastVAT", "assess_tendency",
+    "TendencyResult", "TendencyReport", "ResultMeta",
+    "METRICS", "select_method",
+]
+
+_API_NAMES = frozenset(__all__)
+
+
+def __getattr__(name: str):
+    if name in _API_NAMES:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _API_NAMES)

@@ -1,0 +1,33 @@
+"""Public API package — and the compatibility shim for the old ``api.py``.
+
+The old import spellings (``from repro.api import FastVAT,
+assess_tendency, select_method, SMALL_N, MEDIUM_N, METHODS``) keep
+working.  Behavior note: ``FastVAT.result`` is now always a
+``TendencyResult`` — code that poked the old per-method shapes (e.g.
+``fv.result[0].rstar`` after an ivat fit) reads the uniform fields
+instead (``fv.result.rstar``); the migration table in ``docs/api.md``
+maps every old attribute to its new home.  The module is now a package:
+
+  facade.py    FastVAT / assess_tendency — thin, branch-free dispatch
+  result.py    TendencyResult (the uniform pytree every rung returns),
+               ResultMeta (single seed source), TendencyReport
+  registry.py  Rung entries + capability flags; select_method; the
+               extension point third-party rungs register into
+  metrics.py   metric names ("euclidean" ... "precomputed") + validation
+
+Most callers want the package root instead: ``from repro import FastVAT``.
+"""
+from repro.api import registry
+from repro.api.facade import METHODS, FastVAT, assess_tendency
+from repro.api.metrics import COMPUTED_METRICS, METRICS, validate_metric
+from repro.api.registry import (MEDIUM_N, SMALL_N, Rung, RungOptions,
+                                get_rung, register, select_method)
+from repro.api.result import (ResultMeta, TendencyReport, TendencyResult)
+
+__all__ = [
+    "FastVAT", "assess_tendency",
+    "TendencyResult", "TendencyReport", "ResultMeta",
+    "METRICS", "COMPUTED_METRICS", "validate_metric",
+    "Rung", "RungOptions", "register", "get_rung", "registry",
+    "select_method", "METHODS", "SMALL_N", "MEDIUM_N",
+]

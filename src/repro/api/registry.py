@@ -1,0 +1,286 @@
+"""The rung registry: method names -> fitters + capability flags.
+
+``FastVAT`` is pure data-driven dispatch over this table — it never
+branches on a method name.  Each ``Rung`` entry owns:
+
+  * ``fit`` / ``fit_batch``: adapters that run a ``repro.core`` rung and
+    wrap its output into the uniform ``TendencyResult``,
+  * capability flags (``supports_batch`` via ``fit_batch``,
+    ``supports_precomputed``, ``max_n``, an optional ``check`` hook for
+    environment requirements like dvat's device count),
+  * the auto-selection threshold (``auto_threshold``; None = opt-in
+    only, ``inf`` = the unbounded fallback rung).
+
+Third-party rungs (a ConiVAT-style constrained VAT, a DeepVAT embedding
+pipeline) register here and immediately work through ``FastVAT`` and
+``select_method`` without touching the facade:
+
+>>> from repro.api import registry
+>>> sorted(registry.registered())
+['bigvat', 'dvat', 'ivat', 'svat', 'vat']
+>>> registry.select_method(100), registry.select_method(10_000)
+('vat', 'svat')
+>>> registry.get_rung("bigvat").supports_batch
+False
+>>> registry.get_rung("vat").supports_precomputed
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.api.result import SALT_FIT, ResultMeta, TendencyResult
+
+#: Auto-selection thresholds (see docs/scaling.md): exact below SMALL_N,
+#: sVAT to MEDIUM_N, Big-VAT beyond (the only rung with no O(n^2) object).
+SMALL_N = 2_048
+MEDIUM_N = 20_000
+
+
+class RungOptions(NamedTuple):
+    """Facade knobs forwarded to a fitter (metric/seed/pallas ride on
+    ``ResultMeta``)."""
+    sample_size: int = 256
+    block: int = 4096
+
+
+Fitter = Callable[[Any, ResultMeta, RungOptions], TendencyResult]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One registered VAT method.
+
+    Attributes:
+      name: the ``method=`` string.
+      fit: solo fitter — (X_or_D, meta, options) -> TendencyResult.
+      fit_batch: batched fitter over a (b, n, d) stack (or (b, n, n)
+        precomputed stack); None means the rung doesn't batch.
+      supports_precomputed: accepts metric="precomputed" input.
+      auto_threshold: largest n ``select_method`` hands this rung
+        (math.inf = unbounded fallback); None = never auto-selected.
+      max_n: hard cap enforced at fit time; None = uncapped.
+      check: optional environment validation hook, called with n before
+        fitting (e.g. dvat's device-count requirements).
+      description: one-liner for docs/tooling.
+    """
+
+    name: str
+    fit: Fitter
+    fit_batch: Fitter | None = None
+    supports_precomputed: bool = False
+    auto_threshold: float | None = None
+    max_n: int | None = None
+    check: Callable[[int], None] | None = None
+    description: str = ""
+
+    @property
+    def supports_batch(self) -> bool:
+        return self.fit_batch is not None
+
+
+_REGISTRY: dict[str, Rung] = {}
+
+
+def register(rung: Rung, *, overwrite: bool = False) -> Rung:
+    """Add a rung; its name becomes a valid ``FastVAT(method=...)``.
+
+    Args:
+      rung: the entry to add. ``name`` must not be "auto".
+      overwrite: allow replacing an existing entry of the same name.
+
+    Returns:
+      The registered rung (for decorator-ish chaining).
+    """
+    if rung.name == "auto" or not rung.name:
+        raise ValueError(f"invalid rung name {rung.name!r}")
+    if rung.name in _REGISTRY and not overwrite:
+        raise ValueError(f"rung {rung.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[rung.name] = rung
+    return rung
+
+
+def get_rung(name: str) -> Rung:
+    """Look up a registered rung by method name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown method {name!r}; registered: "
+                       f"{registered()}") from None
+
+
+def registered() -> tuple[str, ...]:
+    """Names of every registered rung (live — includes third-party)."""
+    return tuple(_REGISTRY)
+
+
+def methods() -> tuple[str, ...]:
+    """Everything ``FastVAT(method=...)`` accepts: "auto" + the rungs."""
+    return ("auto",) + registered()
+
+
+def select_method(n: int, *, precomputed: bool = False,
+                  batched: bool = False, strict: bool = False) -> str:
+    """The auto-selection policy, data-driven over rung capabilities.
+
+    Args:
+      n: points per dataset.
+      precomputed: restrict to rungs accepting metric="precomputed".
+      batched: restrict to rungs with a batched fitter.
+      strict: raise LookupError when no candidate's threshold covers n
+        instead of falling back to the largest-threshold candidate (the
+        fallback serves precomputed input, where the O(n^2) matrix
+        already exists so the exact rung stays the right answer).
+
+    Returns:
+      The selected method name.
+    """
+    cands = [r for r in _REGISTRY.values() if r.auto_threshold is not None]
+    if precomputed:
+        cands = [r for r in cands if r.supports_precomputed]
+    if batched:
+        cands = [r for r in cands if r.supports_batch]
+    cands.sort(key=lambda r: r.auto_threshold)
+    if not cands:
+        raise LookupError("no auto-selectable rung matches "
+                          f"(precomputed={precomputed}, batched={batched})")
+    for r in cands:
+        if n <= r.auto_threshold:
+            return r.name
+    if strict:
+        raise LookupError(f"no auto-selectable rung covers n={n}")
+    return cands[-1].name
+
+
+# ---------------------------------------------------------------------
+# Built-in rung fitters: run a repro.core rung, wrap into TendencyResult.
+# ---------------------------------------------------------------------
+
+def _as_f32(X) -> jax.Array:
+    return X if isinstance(X, jax.Array) else jnp.asarray(
+        np.asarray(X, np.float32))
+
+
+def _vat_result(data, meta: ResultMeta) -> core.VATResult:
+    if meta.metric == "precomputed":
+        return core.vat_from_dist(_as_f32(data))
+    return core.vat(_as_f32(data), use_pallas=meta.use_pallas,
+                    metric=meta.metric)
+
+
+def _vat_result_batch(data, meta: ResultMeta) -> core.VATResult:
+    if meta.metric == "precomputed":
+        return core.vat_batch_from_dist(_as_f32(data))
+    return core.vat_batch(_as_f32(data), use_pallas=meta.use_pallas,
+                          metric=meta.metric)
+
+
+def _fit_vat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    res = _vat_result(data, meta)
+    return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=None,
+                          sample_idx=None, extension_labels=None, meta=meta)
+
+
+def _fit_vat_batch(data, meta: ResultMeta,
+                   opts: RungOptions) -> TendencyResult:
+    res = _vat_result_batch(data, meta)
+    return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=None,
+                          sample_idx=None, extension_labels=None, meta=meta)
+
+
+def _fit_ivat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    res = _vat_result(data, meta)
+    iv = core.ivat_from_vat(res.rstar, use_pallas=meta.use_pallas)
+    return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=iv,
+                          sample_idx=None, extension_labels=None, meta=meta)
+
+
+def _fit_ivat_batch(data, meta: ResultMeta,
+                    opts: RungOptions) -> TendencyResult:
+    res = _vat_result_batch(data, meta)
+    iv = core.ivat_from_vat(res.rstar, use_pallas=meta.use_pallas)
+    return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=iv,
+                          sample_idx=None, extension_labels=None, meta=meta)
+
+
+def _fit_svat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    res = core.svat(_as_f32(data), meta.jax_key(SALT_FIT),
+                    s=min(opts.sample_size, meta.n),
+                    use_pallas=meta.use_pallas, metric=meta.metric)
+    return TendencyResult(order=res.vat.order, rstar=res.vat.rstar,
+                          ivat_image=None, sample_idx=res.sample_idx,
+                          extension_labels=None, meta=meta)
+
+
+def _fit_bigvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    res = core.bigvat(data, meta.jax_key(SALT_FIT), s=opts.sample_size,
+                      block=opts.block, use_pallas=meta.use_pallas,
+                      metric=meta.metric)
+    return TendencyResult(order=res.order, rstar=res.sample.vat.rstar,
+                          ivat_image=res.ivat,
+                          sample_idx=res.sample.sample_idx,
+                          extension_labels=res.labels, meta=meta,
+                          group_sizes=res.group_sizes)
+
+
+def _check_dvat(n: int):
+    if not core.HAS_DISTRIBUTED:
+        raise RuntimeError(
+            "method='dvat' needs a JAX with shard_map "
+            "(repro.core.HAS_DISTRIBUTED is False; cause: "
+            f"{core.DISTRIBUTED_IMPORT_ERROR})")
+    devs = jax.devices()
+    if len(devs) < 2:
+        raise RuntimeError(
+            f"method='dvat' needs >1 device, found {len(devs)}; "
+            "use 'bigvat' on a single host")
+    if n % len(devs):
+        raise ValueError(
+            f"method='dvat' needs n divisible by the device count "
+            f"({n} % {len(devs)} != 0); pad or truncate X first")
+
+
+def _fit_dvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    Xj = _as_f32(data)
+    dres = core.dvat(Xj, mesh, metric=meta.metric)
+    # a maximin-sample image gives dvat the same assessable rstar every
+    # other rung carries (the full-n ordering stays the headline output).
+    # Cost: one O(n s) maximin pass + an (s, s) VAT at fit time — small
+    # next to dvat's own O(n^2 d / P) exact-start pass, and it buys the
+    # uniform image()/assess() surface without a lazy special case
+    sres = core.svat(Xj, meta.jax_key(SALT_FIT),
+                     s=min(opts.sample_size, meta.n),
+                     use_pallas=meta.use_pallas, metric=meta.metric)
+    return TendencyResult(order=dres.order, rstar=sres.vat.rstar,
+                          ivat_image=None, sample_idx=sres.sample_idx,
+                          extension_labels=None, meta=meta)
+
+
+register(Rung(
+    name="vat", fit=_fit_vat, fit_batch=_fit_vat_batch,
+    supports_precomputed=True, auto_threshold=SMALL_N,
+    description="exact VAT — O(n^2) matrix fits easily"))
+register(Rung(
+    name="ivat", fit=_fit_ivat, fit_batch=_fit_ivat_batch,
+    supports_precomputed=True, auto_threshold=None,
+    description="exact VAT + geodesic (iVAT) image; opt-in"))
+register(Rung(
+    name="svat", fit=_fit_svat, auto_threshold=MEDIUM_N,
+    description="maximin sample VAT, O(ns + s^2)"))
+register(Rung(
+    name="bigvat", fit=_fit_bigvat, auto_threshold=math.inf,
+    description="out-of-core clusiVAT pipeline, no (n, n) object"))
+register(Rung(
+    name="dvat", fit=_fit_dvat, check=_check_dvat, auto_threshold=None,
+    description="matrix-free distributed VAT; needs >1 device"))

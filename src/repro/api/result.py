@@ -1,0 +1,238 @@
+"""The uniform result types every VAT rung returns.
+
+``TendencyResult`` is the one shape the whole public API speaks: every
+rung — vat, ivat, svat, bigvat, dvat, and the batched paths — returns it,
+so downstream code (and third-party extensions like a ConiVAT-style
+constrained rung) reads ``result.order`` / ``result.image()`` without
+knowing which method produced it.  It is an immutable dataclass
+registered as a JAX pytree (arrays are leaves, ``meta`` is static aux
+data), so it moves through ``jax.block_until_ready``, ``jax.device_get``
+and friends like any other pytree.
+
+``ResultMeta`` is the single seed source: every sampling path — JAX-side
+(maximin starts, Hopkins probes) and host-side (the Hopkins subsample's
+numpy rng) — derives from ``meta.seed`` through ``jax_key(salt)`` /
+``host_rng(salt)``, which makes a fit reproducible from its meta alone.
+
+``TendencyReport`` is ``assess()``'s stable shape: the same keys whether
+the fit was solo or batched, with dict-like access kept for backward
+compatibility.
+
+>>> from repro.api.result import TendencyReport
+>>> rep = TendencyReport(method="vat", metric="euclidean", n=100,
+...                      hopkins=0.9, block_score=0.8, k_est=3,
+...                      clustered=True)
+>>> rep["k_est"], rep.k_est            # dict-like and attribute access
+(3, 3)
+>>> sorted(rep.keys())[:3]
+['batch_index', 'block_score', 'clustered']
+>>> dict(rep)["batch_index"] is None   # solo fit: key present, value None
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections.abc import Mapping
+from typing import Any, ClassVar
+
+import numpy as np
+
+import jax
+
+from repro.core.bigvat import expand_image
+from repro.core.ivat import ivat_from_vat
+
+# Salts for deriving independent streams from the one seed on ResultMeta.
+# Fit-time sampling (maximin starts), assessment (Hopkins probe keys) and
+# the host-side Hopkins subsample each get their own stream so no two
+# consumers of the seed are correlated.
+SALT_FIT = 0
+SALT_ASSESS = 1
+SALT_HOPKINS = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ResultMeta:
+    """Static metadata of a fit — the pytree aux data of ``TendencyResult``.
+
+    Attributes:
+      method: resolved rung name, e.g. "svat".
+      metric: dissimilarity metric the fit used ("precomputed" means the
+        caller handed the matrix in).
+      n: points per dataset.
+      batch: batch size after ``fit_many``; None for a solo fit.
+      seed: the single seed every sampling path derives from.
+      sample_size: s for the sampling rungs; None where unused.
+      use_pallas: whether Pallas kernels were requested.
+    """
+
+    method: str
+    metric: str = "euclidean"
+    n: int = 0
+    batch: int | None = None
+    seed: int = 0
+    sample_size: int | None = None
+    use_pallas: bool = False
+
+    def jax_key(self, salt: int = SALT_FIT) -> jax.Array:
+        """PRNG key for device-side sampling, derived from the one seed."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), salt)
+
+    def host_rng(self, salt: int = SALT_FIT) -> np.random.Generator:
+        """numpy Generator for host-side sampling, same seed source.
+
+        Uses ``SeedSequence([seed, salt])`` so the host stream is
+        deterministic in (seed, salt) exactly like ``jax_key`` — the two
+        samplers differ in backend, never in provenance.
+        """
+        return np.random.default_rng(np.random.SeedSequence([self.seed, salt]))
+
+
+@dataclasses.dataclass(frozen=True)
+class TendencyResult:
+    """What every rung returns: ordering + images + extension, one shape.
+
+    Attributes:
+      order: (n,) int32 VAT ordering — all points for vat/ivat/bigvat/
+        dvat, the s sample points for svat; (b, n) after a batched fit.
+      rstar: reordered dissimilarity image — (n, n) for the exact rungs,
+        (s, s) sample image for svat/bigvat/dvat, (b, n, n) batched.
+      ivat_image: geodesic (iVAT) image where the rung computed one
+        (ivat, bigvat), else None; ``image(use_ivat=True)`` derives it on
+        demand from ``rstar`` when absent.
+      sample_idx: dataset rows of the maximin prototypes (svat/bigvat/
+        dvat), else None.
+      extension_labels: (n,) nearest-prototype id per point (bigvat's
+        full-data extension), else None.
+      meta: static fit metadata (method, metric, n, batch, seed, ...).
+      group_sizes: (s,) per-prototype group counts in sample-VAT order
+        (bigvat — drives the smoothed rendering), else None.
+
+    Registered as a JAX pytree: array fields are children, ``meta`` is
+    aux data, so the whole result works with ``jax.block_until_ready``
+    and other tree utilities.
+    """
+
+    order: jax.Array
+    rstar: jax.Array
+    ivat_image: jax.Array | None
+    sample_idx: jax.Array | None
+    extension_labels: jax.Array | None
+    meta: ResultMeta
+    group_sizes: jax.Array | None = None
+
+    _CHILDREN: ClassVar[tuple[str, ...]] = (
+        "order", "rstar", "ivat_image", "sample_idx", "extension_labels",
+        "group_sizes")
+
+    @property
+    def n(self) -> int:
+        return self.meta.n
+
+    @property
+    def is_batched(self) -> bool:
+        return self.meta.batch is not None
+
+    def image(self, *, resolution: int = 256,
+              use_ivat: bool | None = None) -> np.ndarray:
+        """The reordered dissimilarity image (the thing you look at).
+
+        Data-driven, no per-method branching: the geodesic image is used
+        when one was computed (``use_ivat=None``) or demanded
+        (``use_ivat=True`` — derived on demand from ``rstar`` if the rung
+        didn't build one); ``use_ivat=False`` forces the plain reordered
+        dissimilarities.  Results carrying ``group_sizes`` (the bigvat
+        extension) are expanded to ``resolution`` pixels by group size;
+        everything else returns the image at its native size.
+        """
+        want_ivat = (self.ivat_image is not None if use_ivat is None
+                     else bool(use_ivat))
+        if want_ivat:
+            base = (self.ivat_image if self.ivat_image is not None
+                    else ivat_from_vat(self.rstar,
+                                       use_pallas=self.meta.use_pallas))
+        else:
+            base = self.rstar
+        if self.group_sizes is not None:
+            return expand_image(base, self.group_sizes, resolution)
+        return np.asarray(base)
+
+
+def _result_flatten(res: TendencyResult):
+    return tuple(getattr(res, f) for f in TendencyResult._CHILDREN), res.meta
+
+
+def _result_unflatten(meta: ResultMeta, children) -> TendencyResult:
+    return TendencyResult(**dict(zip(TendencyResult._CHILDREN, children)),
+                          meta=meta)
+
+
+jax.tree_util.register_pytree_node(
+    TendencyResult, _result_flatten, _result_unflatten)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TendencyReport(Mapping):
+    """``assess()``'s stable shape — identical keys solo and batched.
+
+    A frozen dataclass that also satisfies the Mapping protocol, so the
+    pre-redesign dict idioms (``rep["k_est"]``, ``dict(rep)``,
+    ``rep.get("hopkins")``) keep working.  Equality treats NaN hopkins
+    values (the precomputed-metric case) as equal, so "same fit, same
+    report" holds for every metric.
+
+    Attributes:
+      method: resolved rung name.
+      metric: dissimilarity metric of the fit.
+      n: points per dataset.
+      hopkins: Hopkins statistic (H > 0.75 => significant structure);
+        NaN when metric="precomputed" (no point coordinates to probe).
+      block_score: [0, 1] diagonal-block contrast of the VAT image.
+      k_est: estimated cluster count from super-diagonal cuts.
+      clustered: the combined verdict (hopkins and block_score bars;
+        block_score alone when hopkins is NaN).
+      batch_index: dataset index after ``fit_many``; None for solo fits.
+    """
+
+    method: str
+    metric: str
+    n: int
+    hopkins: float
+    block_score: float
+    k_est: int
+    clustered: bool
+    batch_index: int | None = None
+
+    _KEYS: ClassVar[tuple[str, ...]] = (
+        "method", "metric", "n", "hopkins", "block_score", "k_est",
+        "clustered", "batch_index")
+
+    def __getitem__(self, key: str) -> Any:
+        if key in self._KEYS:
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
+
+    def __eq__(self, other):
+        if not isinstance(other, TendencyReport):
+            return NotImplemented
+        return all(_field_eq(getattr(self, k), getattr(other, k))
+                   for k in self._KEYS)
+
+    def as_dict(self) -> dict:
+        """Plain-dict copy (e.g. for json.dumps)."""
+        return {k: getattr(self, k) for k in self._KEYS}
+
+
+def _field_eq(a, b) -> bool:
+    """Equality where NaN == NaN (hopkins is NaN for precomputed fits)."""
+    if isinstance(a, float) and isinstance(b, float) \
+            and math.isnan(a) and math.isnan(b):
+        return True
+    return a == b

@@ -65,7 +65,8 @@ class BigVATResult(NamedTuple):
 
 
 def nearest_prototype_assign(X, prototypes, *, block: int = DEFAULT_BLOCK,
-                             use_pallas: bool = False):
+                             use_pallas: bool = False,
+                             metric: str = "euclidean"):
     """Tiled nearest-prototype pass.
 
     Args:
@@ -73,6 +74,7 @@ def nearest_prototype_assign(X, prototypes, *, block: int = DEFAULT_BLOCK,
       prototypes: (s, d) float — the maximin sample.
       block: rows per streamed tile.
       use_pallas: route each (block, s) tile through the Pallas kernel.
+      metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
 
     Returns:
       (labels (n,) int32 nearest-prototype ids, dists (n,) float32
@@ -95,7 +97,8 @@ def nearest_prototype_assign(X, prototypes, *, block: int = DEFAULT_BLOCK,
         blk = X[start:stop]
         if not isinstance(blk, jax.Array):
             blk = jnp.asarray(np.asarray(blk, np.float32))
-        D = kops.pairwise_dist(blk, P, use_pallas=use_pallas)  # (<=block, s)
+        D = kops.pairwise_dist(blk, P, use_pallas=use_pallas,
+                               metric=metric)          # (<=block, s)
         labels[start:stop] = np.asarray(jnp.argmin(D, axis=1), np.int32)
         dists[start:stop] = np.asarray(jnp.min(D, axis=1), np.float32)
     return jnp.asarray(labels), jnp.asarray(dists)
@@ -103,7 +106,8 @@ def nearest_prototype_assign(X, prototypes, *, block: int = DEFAULT_BLOCK,
 
 def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
            block: int = DEFAULT_BLOCK, use_pallas: bool = False,
-           compute_ivat: bool = True) -> BigVATResult:
+           compute_ivat: bool = True,
+           metric: str = "euclidean") -> BigVATResult:
     """clusiVAT-style big-data VAT of X (n, d) without any (n, n) array.
 
     Args:
@@ -112,6 +116,8 @@ def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
       s: prototype count; block: rows per extension tile;
       use_pallas: Pallas distance tiles; compute_ivat: also build the
         (s, s) geodesic image.
+      metric: dissimilarity metric for sampling, the sample VAT and the
+        extension pass, one of ``kernels.ref.METRICS``.
 
     Returns:
       BigVATResult (see the NamedTuple fields above). ``order`` lists all
@@ -127,15 +133,16 @@ def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
 
     # 1+2. maximin prototypes + exact VAT on the (s, s) sample (= sVAT)
     Xj = X if isinstance(X, jax.Array) else jnp.asarray(np.asarray(X, np.float32))
-    sample = svat(Xj, key, s=s, use_pallas=use_pallas)
+    sample = svat(Xj, key, s=s, use_pallas=use_pallas, metric=metric)
     res = sample.vat
     prototypes = Xj[sample.sample_idx]
-    iv = ivat_from_vat(res.rstar) if compute_ivat else None
+    iv = (ivat_from_vat(res.rstar, use_pallas=use_pallas)
+          if compute_ivat else None)
 
     # 3. tiled nearest-prototype extension over all n points (Xj: the
     # device copy already made for sampling — avoids a second transfer)
     labels, proto_dist = nearest_prototype_assign(
-        Xj, prototypes, block=block, use_pallas=use_pallas)
+        Xj, prototypes, block=block, use_pallas=use_pallas, metric=metric)
 
     # rank[p] = position of prototype p in the sample VAT order
     rank = jnp.zeros((s,), jnp.int32).at[res.order].set(
@@ -148,6 +155,31 @@ def bigvat(X, key: jax.Array | None = None, *, s: int = DEFAULT_SAMPLE,
     return BigVATResult(sample=sample, ivat=iv, labels=labels,
                         proto_dist=proto_dist, order=order,
                         group_sizes=group_sizes)
+
+
+def expand_image(base, group_sizes, resolution: int = 256) -> np.ndarray:
+    """Expand an (s, s) sample image to ``resolution`` pixels by group size.
+
+    Args:
+      base: (s, s) array — sample VAT/iVAT image in sample-VAT order.
+      group_sizes: (s,) int — per-prototype group counts, in the same
+        order as ``base``'s rows.
+      resolution: output image edge in pixels.
+
+    Returns:
+      (resolution, resolution) float32 numpy image where each prototype's
+      row/column band spans pixels proportional to its group size — the
+      picture a full n x n VAT image would show, rendered from the
+      (s, s) sample alone.  O(resolution^2) memory, independent of n.
+    """
+    base = np.asarray(base)
+    sizes = np.asarray(group_sizes, np.int64)
+    edges = np.cumsum(sizes)                     # group boundaries in [0, n]
+    n = int(edges[-1])
+    pix = (np.arange(resolution) + 0.5) * n / resolution
+    g = np.searchsorted(edges, pix, side="right")
+    g = np.minimum(g, len(sizes) - 1)
+    return base[np.ix_(g, g)]
 
 
 def smoothed_image(result: BigVATResult, resolution: int = 256,
@@ -172,11 +204,4 @@ def smoothed_image(result: BigVATResult, resolution: int = 256,
         raise ValueError("this BigVATResult was built with compute_ivat="
                          "False; no iVAT image to render")
     base = result.ivat if use_ivat else result.sample.vat.rstar
-    base = np.asarray(base)
-    sizes = np.asarray(result.group_sizes, np.int64)
-    edges = np.cumsum(sizes)                     # group boundaries in [0, n]
-    n = int(edges[-1])
-    pix = (np.arange(resolution) + 0.5) * n / resolution
-    g = np.searchsorted(edges, pix, side="right")
-    g = np.minimum(g, len(sizes) - 1)
-    return base[np.ix_(g, g)]
+    return expand_image(base, result.group_sizes, resolution)

@@ -37,6 +37,7 @@ except ImportError:  # jax 0.4.x / 0.5.x: experimental home
     from jax.experimental.shard_map import shard_map as _shard_map_impl
 
 from repro.kernels import ops as kops
+from repro.kernels.ref import row_dissim_ref
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs, check: bool | None = None):
@@ -69,7 +70,7 @@ def pairwise_dist_sharded(X: jax.Array, mesh: Mesh, axis: str = "data"):
     return fn(X, X)
 
 
-def _dvat_shard(Xl: jax.Array, axis: str, exact_start: bool):
+def _dvat_shard(Xl: jax.Array, axis: str, exact_start: bool, metric: str):
     """Runs on each shard: Xl is the local (n/P, d) slice of the points."""
     p = lax.axis_index(axis)
     Pn = lax.psum(1, axis)
@@ -86,14 +87,13 @@ def _dvat_shard(Xl: jax.Array, axis: str, exact_start: bool):
         return lax.psum(mine, axis)
 
     def dist_to_local(xq):
-        diff = Xl - xq[None, :]
-        return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=1), 0.0))
+        return row_dissim_ref(Xl, xq, metric=metric)
 
     if exact_start:
         # exact VAT start: row of the global max of R (O(n^2 d / P) pass,
         # done in n/P-row chunks against a gathered X)
         Xfull = lax.all_gather(Xl, axis, tiled=True)          # (n, d)
-        Rl = kops.pairwise_dist(Xl, Xfull)                     # (nl, n)
+        Rl = kops.pairwise_dist(Xl, Xfull, metric=metric)      # (nl, n)
         local_max = jnp.max(Rl, axis=1)                        # per local row
         li = jnp.argmax(local_max).astype(jnp.int32)
         vals = lax.all_gather(local_max[li], axis)             # (P,)
@@ -102,7 +102,7 @@ def _dvat_shard(Xl: jax.Array, axis: str, exact_start: bool):
     else:
         # matrix-free start: farthest point from the global mean
         mean = lax.pmean(jnp.mean(Xl, axis=0), axis)
-        dm = jnp.linalg.norm(Xl - mean[None, :], axis=1)
+        dm = row_dissim_ref(Xl, mean, metric=metric)
         li = jnp.argmax(dm).astype(jnp.int32)
         vals = lax.all_gather(dm[li], axis)
         idxs = lax.all_gather(li + offset, axis)
@@ -132,16 +132,20 @@ def _dvat_shard(Xl: jax.Array, axis: str, exact_start: bool):
 
 
 def dvat(X: jax.Array, mesh: Mesh, axis: str = "data", *,
-         exact_start: bool = True) -> DVATResult:
+         exact_start: bool = True,
+         metric: str = "euclidean") -> DVATResult:
     """Matrix-free distributed VAT ordering of X (n, d).
 
     n must be divisible by the mesh axis size (pad upstream otherwise).
     exact_start=False skips the O(n^2 d / P) max-pair pass and starts from
     the point farthest from the mean (block structure is unaffected; the
-    ordering may start in a different cluster).
+    ordering may start in a different cluster).  ``metric`` picks the
+    dissimilarity (one of ``kernels.ref.METRICS``) — every distance row
+    is recomputed from points, so any rowwise-computable metric works.
     """
     fn = _shard_map(
-        functools.partial(_dvat_shard, axis=axis, exact_start=exact_start),
+        functools.partial(_dvat_shard, axis=axis, exact_start=exact_start,
+                          metric=metric),
         mesh=mesh,
         in_specs=(P(axis, None),),
         out_specs=P(),  # order replicated (built from all_gathered data)

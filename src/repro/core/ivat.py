@@ -74,18 +74,19 @@ def ivat(R: jax.Array, *, use_pallas: bool = False
     return ivat_from_vat(res.rstar, use_pallas=use_pallas), res
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def ivat_batch(X: jax.Array, *, use_pallas: bool = False
-               ) -> tuple[jax.Array, VATResult]:
+@functools.partial(jax.jit, static_argnames=("use_pallas", "metric"))
+def ivat_batch(X: jax.Array, *, use_pallas: bool = False,
+               metric: str = "euclidean") -> tuple[jax.Array, VATResult]:
     """Batched iVAT: stack of datasets -> stack of geodesic images.
 
     Args:
       X: (b, n, d) float — b independent datasets of n points each.
         NOTE: raw data, unlike the unbatched ``ivat`` which takes a
-        precomputed dissimilarity matrix — for a (b, n, n) distance
+        precomputed dissimilarity matrix — for a (b, n, n) dissimilarity
         stack use ``ivat_batch_from_dist``.
       use_pallas: batched Pallas distance grid + fused iVAT kernel
         (interpret mode on CPU); default is the batched XLA path.
+      metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
 
     Returns:
       ((b, n, n) float32 iVAT stack, batched VATResult — rstar (b, n, n),
@@ -95,7 +96,7 @@ def ivat_batch(X: jax.Array, *, use_pallas: bool = False
     X[i]: the batch axis is a vmap (XLA) or a leading grid axis (Pallas)
     with no cross-dataset interaction.
     """
-    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas)
+    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas, metric=metric)
     res = vat_batch_from_dist(R)
     return kops.ivat_from_vat(res.rstar, use_pallas=use_pallas), res
 

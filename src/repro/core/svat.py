@@ -20,6 +20,7 @@ from jax import lax
 
 from repro.core.vat import VATResult, vat_from_dist
 from repro.kernels import ops as kops
+from repro.kernels.ref import row_dissim_ref
 
 
 class SVATResult(NamedTuple):
@@ -27,53 +28,60 @@ class SVATResult(NamedTuple):
     sample_idx: jax.Array  # (s,) indices of the distinguished points
 
 
-def maximin_sample(X: jax.Array, s: int, key: jax.Array) -> jax.Array:
+def maximin_sample(X: jax.Array, s: int, key: jax.Array, *,
+                   metric: str = "euclidean") -> jax.Array:
     """Greedy farthest-point (maximin) sampling.
 
     Args:
       X: (n, d) float — data points.
       s: number of distinguished points to pick.
       key: PRNG key for the random start point.
+      metric: dissimilarity used for the frontier updates, one of
+        ``kernels.ref.METRICS`` — sampling under the same metric the VAT
+        image will use keeps the prototypes spread in *that* geometry.
 
     Returns:
-      (s,) int32 indices into X — each pick maximizes the distance to
-      the already-picked set. O(n s) time, O(n) memory.
+      (s,) int32 indices into X — each pick maximizes the dissimilarity
+      to the already-picked set. O(n s) time, O(n) memory.
     """
     n = X.shape[0]
     i0 = jax.random.randint(key, (), 0, n)
     idx0 = jnp.zeros((s,), jnp.int32).at[0].set(i0.astype(jnp.int32))
-    d0 = jnp.linalg.norm(X - X[i0], axis=1)
+    d0 = row_dissim_ref(X, X[i0], metric=metric)
 
     def body(t, carry):
         mind, idx = carry
         q = jnp.argmax(mind).astype(jnp.int32)
         idx = idx.at[t].set(q)
-        dq = jnp.linalg.norm(X - X[q], axis=1)
+        dq = row_dissim_ref(X, X[q], metric=metric)
         return jnp.minimum(mind, dq), idx
 
     _, idx = lax.fori_loop(1, s, body, (d0, idx0))
     return idx
 
 
-@functools.partial(jax.jit, static_argnames=("s", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("s", "use_pallas", "metric"))
 def svat(X: jax.Array, key: jax.Array, *, s: int = 256,
-         use_pallas: bool = False) -> SVATResult:
+         use_pallas: bool = False,
+         metric: str = "euclidean") -> SVATResult:
     """Approximate VAT image of X using s maximin-sampled points.
 
     Args:
       X: (n, d) float — data points.
       key: PRNG key for the maximin start.
       s: sample size (static; clamped to n).
-      use_pallas: route the (s, s) sample distance matrix through the
-        Pallas kernel (interpret mode on CPU; compiled on TPU).
+      use_pallas: route the (s, s) sample dissimilarity matrix through
+        the Pallas kernel (interpret mode on CPU; compiled on TPU).
+      metric: dissimilarity metric for both the maximin sampling and the
+        sample VAT image, one of ``kernels.ref.METRICS``.
 
     Returns:
       SVATResult — ``vat`` is the exact VATResult of the sample,
       ``sample_idx`` the (s,) dataset rows of the distinguished points.
     """
     s = min(s, X.shape[0])
-    idx = maximin_sample(X, s, key)
+    idx = maximin_sample(X, s, key, metric=metric)
     Xs = X[idx]
-    R = kops.pairwise_dist(Xs, use_pallas=use_pallas)
+    R = kops.pairwise_dist(Xs, use_pallas=use_pallas, metric=metric)
     res = vat_from_dist(R)
     return SVATResult(vat=res, sample_idx=idx)

@@ -79,20 +79,24 @@ def reorder(R: jax.Array, order: jax.Array) -> jax.Array:
     return R[order][:, order]
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def vat(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
+@functools.partial(jax.jit, static_argnames=("use_pallas", "metric"))
+def vat(X: jax.Array, *, use_pallas: bool = False,
+        metric: str = "euclidean") -> VATResult:
     """Full VAT on a data matrix.
 
     Args:
       X: (n, d) float — data points.
-      use_pallas: route the distance matrix through the Pallas kernel
-        (interpret mode on CPU; compiled on TPU). Default is the XLA path.
+      use_pallas: route the dissimilarity matrix through the Pallas
+        kernel (interpret mode on CPU; compiled on TPU). Default is the
+        XLA path.
+      metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
+        For an already-computed matrix use ``vat_from_dist`` instead.
 
     Returns:
       VATResult — rstar (n, n) reordered image, order (n,) int32
-      permutation, dist (n, n) original distances.
+      permutation, dist (n, n) original dissimilarities.
     """
-    R = kops.pairwise_dist(X, use_pallas=use_pallas)
+    R = kops.pairwise_dist(X, use_pallas=use_pallas, metric=metric)
     order = vat_order(R)
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
 
@@ -111,8 +115,9 @@ def vat_from_dist(R: jax.Array) -> VATResult:
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def vat_batch(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
+@functools.partial(jax.jit, static_argnames=("use_pallas", "metric"))
+def vat_batch(X: jax.Array, *, use_pallas: bool = False,
+              metric: str = "euclidean") -> VATResult:
     """Batched VAT: assess a stack of datasets in one compiled program.
 
     Args:
@@ -120,6 +125,8 @@ def vat_batch(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
       use_pallas: route distances through the batched-grid Pallas kernel
         (``kernels.pairwise_dist_pallas_batch``); default is the batched
         XLA path.
+      metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
+        For precomputed (b, n, n) stacks use ``vat_batch_from_dist``.
 
     Returns:
       VATResult whose fields carry a leading batch axis: rstar (b, n, n),
@@ -129,7 +136,7 @@ def vat_batch(X: jax.Array, *, use_pallas: bool = False) -> VATResult:
     rows (the vmapped ``vat_order`` runs the same argmin/min-update steps
     per batch lane; no cross-dataset reduction exists anywhere).
     """
-    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas)
+    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas, metric=metric)
     return jax.vmap(vat_from_dist)(R)
 
 

@@ -21,36 +21,43 @@ def _interpret() -> bool:
 
 
 def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
-                  use_pallas: bool = False, block: int = 256) -> jax.Array:
-    """Euclidean distance matrix; Pallas-tiled on request, XLA otherwise.
+                  metric: str = "euclidean", use_pallas: bool = False,
+                  block: int = 256) -> jax.Array:
+    """Pairwise dissimilarity matrix; Pallas-tiled on request, XLA otherwise.
 
     Args:
       X: (n, d) float — query points.
       Y: (m, d) float or None — reference points; None means self-
-        distances (and forces an exactly-zero diagonal).
+        dissimilarities (and forces an exactly-zero diagonal).
+      metric: one of ``kernels.ref.METRICS`` (euclidean | sqeuclidean |
+        manhattan | cosine). "precomputed" is an API-layer concept and
+        never reaches the kernels.
       use_pallas: route through the MXU-tiled Pallas kernel (interpret
-        mode on CPU; compiled on TPU). Default is the XLA Gram-trick path.
+        mode on CPU; compiled on TPU). Default is the XLA reference path.
       block: Pallas output tile edge.
 
     Returns:
-      (n, m) float32 distance matrix ((n, n) when Y is None).
+      (n, m) float32 dissimilarity matrix ((n, n) when Y is None).
     """
     if use_pallas:
-        R = pairwise_dist_pallas(X, Y, block=block, interpret=_interpret())
+        R = pairwise_dist_pallas(X, Y, metric=metric, block=block,
+                                 interpret=_interpret())
     else:
-        R = ref.pairwise_dist_ref(X, Y)
-    if Y is None:  # exact zero diagonal for self-distances
+        R = ref.pairwise_dissim_ref(X, Y, metric=metric)
+    if Y is None:  # exact zero diagonal for self-dissimilarities
         n = R.shape[0]
         R = R * (1.0 - jnp.eye(n, dtype=R.dtype))
     return R
 
 
-def pairwise_dist_batch(X: jax.Array, *, use_pallas: bool = False,
+def pairwise_dist_batch(X: jax.Array, *, metric: str = "euclidean",
+                        use_pallas: bool = False,
                         block: int = 256) -> jax.Array:
-    """Per-dataset self-distance matrices for a (b, n, d) stack.
+    """Per-dataset self-dissimilarity matrices for a (b, n, d) stack.
 
     Args:
       X: (b, n, d) float — b independent datasets.
+      metric: one of ``kernels.ref.METRICS``.
       use_pallas: route through the batched-grid Pallas kernel
         (``pairwise_dist_pallas_batch``); default is a vmap of the XLA
         reference, which lowers to one batched dot_general.
@@ -60,9 +67,11 @@ def pairwise_dist_batch(X: jax.Array, *, use_pallas: bool = False,
       (b, n, n) float32 stack with exactly-zero diagonals.
     """
     if use_pallas:
-        R = pairwise_dist_pallas_batch(X, block=block, interpret=_interpret())
+        R = pairwise_dist_pallas_batch(X, metric=metric, block=block,
+                                       interpret=_interpret())
     else:
-        R = jax.vmap(ref.pairwise_dist_ref)(X)
+        R = jax.vmap(
+            lambda A: ref.pairwise_dissim_ref(A, metric=metric))(X)
     n = R.shape[-1]
     return R * (1.0 - jnp.eye(n, dtype=R.dtype))
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked pairwise Euclidean distance matrix.
+"""Pallas TPU kernel: blocked pairwise dissimilarity matrix, metric-dispatched.
 
 TPU-native replacement for the paper's Cython flattened-loop distance
 computation.  The Cython trick (``R[i*n+j]`` for cache locality) has no TPU
@@ -8,11 +8,32 @@ meaning; the equivalent control over memory is the BlockSpec tiling below:
   * X row-tile (BM, d) and Y row-tile (BN, d) are staged HBM->VMEM by the
     BlockSpec machinery; d is kept fully resident (padded to 128) so the
     cross term is a single (BM, d) x (d, BN) MXU matmul per tile.
-  * accumulation and sqrt in f32 on the VPU; output cast to the requested
-    dtype on the way out.
+  * accumulation in f32 on the VPU; output cast to the requested dtype on
+    the way out.
 
-VMEM budget at the default BM=BN=256, d<=512:
+The per-tile math dispatches on ``metric`` (static, so each variant
+compiles its own kernel):
+
+  euclidean / sqeuclidean — Gram trick, one MXU matmul per tile
+  cosine                  — same matmul + rsqrt row norms on the VPU
+  manhattan               — no matmul form exists; the tile loops over
+                            128-lane feature chunks and reduces a
+                            (BM, BN, 128) |diff| broadcast per chunk
+
+VMEM budget at the default BM=BN=256, d<=512 (matmul metrics):
   2 * 256*512*4B (tiles) + 256*256*4B (out) ~= 1.3 MiB  << 16 MiB VMEM.
+Manhattan's broadcast chunk adds BM*BN*128*4B, so its block is clamped
+to 64: 64*64*128*4B = 2 MiB — still comfortable.
+
+Zero padding is harmless for every metric, for two different reasons:
+padded *features* contribute the reduction identity (0) to dots, squared
+diffs and |diffs| alike, so real-row entries are exact; padded *rows* DO
+produce computed entries (a partial last tile holds real and padded rows
+side by side — e.g. cosine's eps-guard maps zero rows to 1.0), but every
+per-element formula reads only its own row pair, and the final
+``out[:n, :m]`` slice discards all padded-row output.  Any future
+in-kernel reduction *across* a tile must re-prove this (padded rows are
+live inside the tile).
 """
 from __future__ import annotations
 
@@ -22,31 +43,46 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import check_metric
+
 DEFAULT_BLOCK = 256
 _LANE = 128  # MXU/VREG lane width — pad contraction dim to a multiple
+_MANHATTAN_BLOCK = 64  # broadcast-chunk metrics pay BM*BN*_LANE VMEM
 
 
-def _tile_dist(x, y):
-    """(BM, d), (BN, d) -> (BM, BN) Euclidean tile, f32 accumulate."""
-    nx = jnp.sum(x * x, axis=1)                 # (BM,)
-    ny = jnp.sum(y * y, axis=1)                 # (BN,)
+def _tile_dissim(x, y, metric):
+    """(BM, d), (BN, d) -> (BM, BN) dissimilarity tile, f32 accumulate."""
+    if metric == "manhattan":
+        acc = jnp.zeros((x.shape[0], y.shape[0]), jnp.float32)
+        for k0 in range(0, x.shape[1], _LANE):  # d is static: unrolled
+            xc = x[:, k0:k0 + _LANE]
+            yc = y[:, k0:k0 + _LANE]
+            acc += jnp.sum(jnp.abs(xc[:, None, :] - yc[None, :, :]), axis=-1)
+        return acc
     cross = jax.lax.dot_general(                # MXU: (BM, d) x (BN, d)^T
         x, y, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
-    sq = nx[:, None] + ny[None, :] - 2.0 * cross
-    return jnp.sqrt(jnp.maximum(sq, 0.0))
+    if metric == "cosine":
+        nx = jnp.sqrt(jnp.sum(x * x, axis=1))   # (BM,)
+        ny = jnp.sqrt(jnp.sum(y * y, axis=1))   # (BN,)
+        denom = jnp.maximum(nx[:, None] * ny[None, :], 1e-12)
+        return jnp.clip(1.0 - cross / denom, 0.0, 2.0)
+    nx = jnp.sum(x * x, axis=1)                 # (BM,)
+    ny = jnp.sum(y * y, axis=1)                 # (BN,)
+    sq = jnp.maximum(nx[:, None] + ny[None, :] - 2.0 * cross, 0.0)
+    return jnp.sqrt(sq) if metric == "euclidean" else sq
 
 
-def _pairwise_kernel(x_ref, y_ref, o_ref):
+def _pairwise_kernel(x_ref, y_ref, o_ref, *, metric):
     x = x_ref[...].astype(jnp.float32)          # (BM, d)
     y = y_ref[...].astype(jnp.float32)          # (BN, d)
-    o_ref[...] = _tile_dist(x, y).astype(o_ref.dtype)
+    o_ref[...] = _tile_dissim(x, y, metric).astype(o_ref.dtype)
 
 
-def _pairwise_kernel_batch(x_ref, y_ref, o_ref):
+def _pairwise_kernel_batch(x_ref, y_ref, o_ref, *, metric):
     x = x_ref[0].astype(jnp.float32)            # (1, BM, d) slab -> (BM, d)
     y = y_ref[0].astype(jnp.float32)
-    o_ref[0] = _tile_dist(x, y).astype(o_ref.dtype)
+    o_ref[0] = _tile_dissim(x, y, metric).astype(o_ref.dtype)
 
 
 def _pad_to(a: jax.Array, size: int, axis: int) -> jax.Array:
@@ -58,33 +94,45 @@ def _pad_to(a: jax.Array, size: int, axis: int) -> jax.Array:
     return jnp.pad(a, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _clamp_block(block: int, n: int, metric: str) -> int:
+    if metric == "manhattan":
+        block = min(block, _MANHATTAN_BLOCK)
+    return min(block, max(8, n))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block", "interpret"))
 def pairwise_dist_pallas(
     X: jax.Array,
     Y: jax.Array | None = None,
     *,
+    metric: str = "euclidean",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
-    """Blocked Euclidean distance matrix via pallas_call.
+    """Blocked pairwise dissimilarity matrix via pallas_call.
 
     Args:
       X: (n, d) float — query points.
       Y: (m, d) float or None — reference points (None: Y = X).
-      block: output tile edge BM = BN (static; clamped to n/m).
+      metric: one of ``kernels.ref.METRICS`` (static — each metric
+        compiles its own tile; see the module docstring for the math).
+      block: output tile edge BM = BN (static; clamped to n/m, and to
+        ``_MANHATTAN_BLOCK`` for the broadcast-chunk metric).
       interpret: Pallas interpret mode (CPU correctness path).
 
     Returns:
-      (n, m) float32 distance matrix. n, m are padded to the block and d
-      to the 128-lane width internally; padding lives in sliced-off
-      tiles, so it never reaches the caller.
+      (n, m) float32 dissimilarity matrix. n, m are padded to the block
+      and d to the 128-lane width internally; padding lives in sliced-off
+      tiles (rows) or contributes the reduction identity (features), so
+      it never reaches the caller.
     """
+    check_metric(metric)
     if Y is None:
         Y = X
     n, d = X.shape
     m = Y.shape[0]
-    bm = min(block, max(8, n))
-    bn = min(block, max(8, m))
+    bm = _clamp_block(block, n, metric)
+    bn = _clamp_block(block, m, metric)
     n_pad = -(-n // bm) * bm
     m_pad = -(-m // bn) * bn
     d_pad = -(-d // _LANE) * _LANE
@@ -92,7 +140,7 @@ def pairwise_dist_pallas(
     Yp = _pad_to(_pad_to(Y, m_pad, 0), d_pad, 1)
 
     out = pl.pallas_call(
-        _pairwise_kernel,
+        functools.partial(_pairwise_kernel, metric=metric),
         grid=(n_pad // bm, m_pad // bn),
         in_specs=[
             pl.BlockSpec((bm, d_pad), lambda i, j: (i, 0)),
@@ -105,37 +153,41 @@ def pairwise_dist_pallas(
     return out[:n, :m]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("metric", "block", "interpret"))
 def pairwise_dist_pallas_batch(
     X: jax.Array,
     *,
+    metric: str = "euclidean",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
-    """Batched self-distance matrices for a stack of datasets.
+    """Batched self-dissimilarity matrices for a stack of datasets.
 
     Args:
       X: (b, n, d) float — b independent datasets of n points each.
-      block: square output tile edge (BM = BN); clamped to n.
+      metric: one of ``kernels.ref.METRICS`` (static).
+      block: square output tile edge (BM = BN); clamped to n (and to
+        ``_MANHATTAN_BLOCK`` for the broadcast-chunk metric).
       interpret: Pallas interpret mode (CPU correctness path).
 
     Returns:
-      (b, n, n) float32 — per-dataset Euclidean distance matrices.
+      (b, n, n) float32 — per-dataset dissimilarity matrices.
 
     One pallas_call serves the whole stack: the grid grows a leading batch
     axis, (b, n/BM, n/BN), and every BlockSpec gains a size-1 slab dim
-    indexed by the batch coordinate — the per-tile compute (one MXU matmul
-    + VPU sqrt) is shared with the unbatched kernel, so VMEM per program
-    stays at the unbatched budget regardless of b.
+    indexed by the batch coordinate — the per-tile compute is shared with
+    the unbatched kernel, so VMEM per program stays at the unbatched
+    budget regardless of b.
     """
+    check_metric(metric)
     b, n, d = X.shape
-    bm = min(block, max(8, n))
+    bm = _clamp_block(block, n, metric)
     n_pad = -(-n // bm) * bm
     d_pad = -(-d // _LANE) * _LANE
     Xp = _pad_to(_pad_to(X, n_pad, 1), d_pad, 2)
 
     out = pl.pallas_call(
-        _pairwise_kernel_batch,
+        functools.partial(_pairwise_kernel_batch, metric=metric),
         grid=(b, n_pad // bm, n_pad // bm),
         in_specs=[
             pl.BlockSpec((1, bm, d_pad), lambda bi, i, j: (bi, i, 0)),

@@ -3,28 +3,114 @@
 These are the correctness references the kernel tests sweep against, and
 also the production XLA fallback path (they jit and shard fine — the
 Pallas kernels exist to beat them on TPU, not to replace them).
+
+Metric support: VAT is defined on an arbitrary pairwise *dissimilarity*
+matrix, so the distance oracles are metric-dispatched.  ``METRICS`` is
+the canonical tuple of computable metrics; ``"precomputed"`` (the user
+hands the matrix in directly) is an API-layer concept and never reaches
+this module.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+#: Metrics every pairwise path (XLA ref + Pallas tile) implements.
+METRICS = ("euclidean", "sqeuclidean", "manhattan", "cosine")
 
-def pairwise_dist_ref(X: jax.Array, Y: jax.Array | None = None) -> jax.Array:
-    """Euclidean distance matrix via the Gram trick.
 
-    ||xi - yj||^2 = ||xi||^2 + ||yj||^2 - 2 xi.yj  — the cross term is one
-    matmul, which is what makes this MXU-friendly (and is the exact
-    decomposition the Pallas kernel tiles).
+def check_metric(metric: str):
+    """Raise ValueError unless ``metric`` names a computable metric.
+
+    The one canonical check every pairwise path (refs and Pallas
+    wrappers) shares — keep error wording and the accepted set here.
     """
+    if metric not in METRICS:
+        raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+
+
+def pairwise_dissim_ref(X: jax.Array, Y: jax.Array | None = None, *,
+                        metric: str = "euclidean") -> jax.Array:
+    """Metric-dispatched pairwise dissimilarity matrix.
+
+    Args:
+      X: (n, d) float — query points.
+      Y: (m, d) float or None — reference points (None: Y = X).
+      metric: one of ``METRICS``.
+        euclidean    ||xi - yj||_2          (Gram trick, one MXU matmul)
+        sqeuclidean  ||xi - yj||_2^2        (same, no sqrt)
+        manhattan    sum_k |xik - yjk|      (broadcast |diff| reduce)
+        cosine       1 - xi.yj/(|xi||yj|)   (in [0, 2]; zero-norm rows
+                                             get an eps-guarded denom)
+
+    Returns:
+      (n, m) float32 dissimilarity matrix.
+    """
+    check_metric(metric)
     if Y is None:
         Y = X
     Xf = X.astype(jnp.float32)
     Yf = Y.astype(jnp.float32)
-    nx = jnp.sum(Xf * Xf, axis=-1)
-    ny = jnp.sum(Yf * Yf, axis=-1)
-    sq = nx[:, None] + ny[None, :] - 2.0 * (Xf @ Yf.T)
-    return jnp.sqrt(jnp.maximum(sq, 0.0))
+    if metric in ("euclidean", "sqeuclidean"):
+        # ||xi - yj||^2 = ||xi||^2 + ||yj||^2 - 2 xi.yj — the cross term is
+        # one matmul, which is what makes this MXU-friendly (and is the
+        # exact decomposition the Pallas kernel tiles).
+        nx = jnp.sum(Xf * Xf, axis=-1)
+        ny = jnp.sum(Yf * Yf, axis=-1)
+        sq = jnp.maximum(nx[:, None] + ny[None, :] - 2.0 * (Xf @ Yf.T), 0.0)
+        return jnp.sqrt(sq) if metric == "euclidean" else sq
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(Xf[:, None, :] - Yf[None, :, :]), axis=-1)
+    # cosine
+    cross = Xf @ Yf.T
+    nx = jnp.sqrt(jnp.sum(Xf * Xf, axis=-1))
+    ny = jnp.sqrt(jnp.sum(Yf * Yf, axis=-1))
+    denom = jnp.maximum(nx[:, None] * ny[None, :], 1e-12)
+    return jnp.clip(1.0 - cross / denom, 0.0, 2.0)
+
+
+def pairwise_dist_ref(X: jax.Array, Y: jax.Array | None = None) -> jax.Array:
+    """Euclidean distance matrix via the Gram trick (legacy name).
+
+    Kept as the stable spelling older call sites and tests use;
+    ``pairwise_dissim_ref`` is the metric-dispatched front door.
+    """
+    return pairwise_dissim_ref(X, Y, metric="euclidean")
+
+
+def row_dissim_ref(X: jax.Array, x: jax.Array, *,
+                   metric: str = "euclidean") -> jax.Array:
+    """Dissimilarity of every row of X to a single point x.
+
+    The O(n) building block the matrix-free paths use (maximin sampling's
+    frontier update, dvat's recomputed distance rows) — no (n, n) or even
+    (n, m) intermediate.
+
+    Args:
+      X: (n, d) float — data points.
+      x: (d,) float — the probe point.
+      metric: one of ``METRICS``.
+
+    Returns:
+      (n,) float32 dissimilarities, matching ``pairwise_dissim_ref``'s
+      column for the same point up to f32 rounding (this path computes
+      differences directly instead of the Gram trick, which is the more
+      accurate formula — do not mix the two inside one bitwise contract).
+    """
+    check_metric(metric)
+    Xf = X.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    diff = Xf - xf[None, :]
+    if metric == "euclidean":
+        return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    if metric == "sqeuclidean":
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(diff), axis=-1)
+    nx = jnp.sqrt(jnp.sum(Xf * Xf, axis=-1))
+    nq = jnp.sqrt(jnp.sum(xf * xf))
+    denom = jnp.maximum(nx * nq, 1e-12)
+    return jnp.clip(1.0 - (Xf @ xf) / denom, 0.0, 2.0)
 
 
 def masked_argmin_ref(vals: jax.Array, mask: jax.Array):

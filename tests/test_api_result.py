@@ -1,0 +1,252 @@
+"""The unified API (ISSUE 3 tentpole): every rung returns the same
+``TendencyResult`` pytree, the registry drives dispatch, ``assess()``
+has one stable shape, and the single seed source pins repeatability."""
+import doctest
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.api import (FastVAT, MEDIUM_N, METHODS, METRICS, SMALL_N,
+                       ResultMeta, Rung, TendencyReport, TendencyResult,
+                       assess_tendency, registry, select_method)
+
+
+def _blobs(n=120, k=2, d=3, seed=0, sep=9.0):
+    rng = np.random.default_rng(seed)
+    centers = (sep * rng.normal(size=(k, d))).astype(np.float32)
+    lab = rng.integers(0, k, size=n)
+    return (centers[lab] + rng.normal(size=(n, d))).astype(np.float32)
+
+
+# ----------------------------------------------- uniform result shape ----
+
+@pytest.mark.parametrize("method", ["vat", "ivat", "svat", "bigvat"])
+def test_every_rung_returns_tendency_result(method):
+    X = _blobs()
+    fv = FastVAT(method=method, sample_size=32).fit(X)
+    res = fv.result
+    assert isinstance(res, TendencyResult)
+    assert res.meta.method == method and res.meta.batch is None
+    assert res.meta.n == len(X)
+    # branch-free queries work on every rung
+    order = fv.order()
+    assert order.ndim == 1 and len(set(order.tolist())) == len(order)
+    img = fv.image()
+    assert img.ndim == 2 and img.shape[0] == img.shape[1]
+    rep = fv.assess()
+    assert isinstance(rep, TendencyReport) and rep["method"] == method
+
+
+@pytest.mark.parametrize("method", ["vat", "ivat"])
+def test_batched_rungs_return_tendency_result(method):
+    Xs = np.stack([_blobs(60, seed=s) for s in range(3)])
+    fv = FastVAT(method=method).fit_many(Xs)
+    res = fv.result
+    assert isinstance(res, TendencyResult)
+    assert res.meta.batch == 3 and fv.batched
+    assert fv.order().shape == (3, 60)
+    assert fv.image().shape == (3, 60, 60)
+    reps = fv.assess()
+    assert [r["batch_index"] for r in reps] == [0, 1, 2]
+
+
+DVAT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.api import FastVAT, TendencyResult
+    rng = np.random.default_rng(1)
+    X = np.concatenate([rng.normal(size=(32, 4)),
+                        rng.normal(size=(32, 4)) + 8]).astype(np.float32)
+    fv = FastVAT(method="dvat", sample_size=16).fit(X)
+    assert isinstance(fv.result, TendencyResult), type(fv.result)
+    assert sorted(fv.order().tolist()) == list(range(64))
+    assert fv.image().shape == (16, 16)          # maximin-sample image
+    rep = fv.assess()
+    assert rep["method"] == "dvat" and rep["k_est"] == 2, dict(rep)
+    print("DVAT_RESULT_OK")
+""")
+
+
+def test_dvat_returns_tendency_result_subprocess():
+    r = subprocess.run([sys.executable, "-c", DVAT_SCRIPT],
+                       capture_output=True, text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert "DVAT_RESULT_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_tendency_result_is_a_pytree():
+    fv = FastVAT(method="bigvat", sample_size=16).fit(_blobs(200))
+    res = fv.result
+    leaves = jax.tree_util.tree_leaves(res)
+    assert leaves and all(hasattr(x, "shape") for x in leaves)
+    # round-trips through tree_map with meta (aux data) intact
+    mapped = jax.tree_util.tree_map(lambda x: x, res)
+    assert isinstance(mapped, TendencyResult)
+    assert mapped.meta == res.meta
+    assert jax.block_until_ready(res) is res or True  # no crash
+
+
+def test_image_use_ivat_contract():
+    X = _blobs()
+    fv = FastVAT(method="vat").fit(X)
+    assert fv.result.ivat_image is None
+    iv = fv.image(use_ivat=True)       # derived on demand from rstar
+    assert np.all(iv <= fv.image(use_ivat=False) + 1e-4)
+    fi = FastVAT(method="ivat").fit(X)
+    assert fi.result.ivat_image is not None
+    np.testing.assert_array_equal(fi.image(), np.asarray(fi.result.ivat_image))
+
+
+# ------------------------------------------------------ assess shape ----
+
+def test_assess_stable_shape_and_dict_compat():
+    X = _blobs()
+    rep = FastVAT().fit(X).assess()
+    reps = FastVAT().fit_many(np.stack([X, X])).assess()
+    # identical keys solo and batched (the old dict had batch_index only
+    # in the batched flavor)
+    assert tuple(rep.keys()) == tuple(reps[0].keys())
+    assert rep["batch_index"] is None and reps[1]["batch_index"] == 1
+    # dict-like access idioms all work
+    assert rep["method"] == rep.method == dict(rep)["method"]
+    assert rep.get("nope", 42) == 42
+    assert "hopkins" in rep and len(rep) == 8
+    assert isinstance(rep.as_dict(), dict)
+    with pytest.raises(KeyError):
+        rep["no_such_key"]
+
+
+def test_precomputed_reports_compare_equal_despite_nan_hopkins():
+    """Regression: dataclass equality must not be NaN-poisoned — two
+    identical precomputed fits (hopkins=nan) report equal."""
+    from repro.kernels import ops
+    X = _blobs(40)
+    D = np.asarray(ops.pairwise_dist(jnp.asarray(X)))
+    a = FastVAT(metric="precomputed").fit(D).assess()
+    b = FastVAT(metric="precomputed").fit(D).assess()
+    assert np.isnan(a["hopkins"]) and a == b
+    assert a != FastVAT().fit(X).assess()
+
+
+def test_assess_tendency_oneshot_returns_report():
+    rep = assess_tendency(_blobs(seed=3))
+    assert isinstance(rep, TendencyReport)
+    assert rep["clustered"] and rep["metric"] == "euclidean"
+
+
+# ------------------------------------------------- single seed source ----
+
+def test_seed_repeatability_pinned():
+    """ISSUE 3 satellite: host-side (Hopkins subsample) and device-side
+    sampling both derive from ResultMeta.seed — same seed, same report,
+    bit for bit; the subsample rng no longer free-rides on global numpy
+    state."""
+    X = _blobs(n=3_000, seed=5)        # n > hopkins cap => subsample path
+    a = FastVAT(method="svat", sample_size=32, seed=7).fit(X).assess()
+    b = FastVAT(method="svat", sample_size=32, seed=7).fit(X).assess()
+    assert a == b                      # dataclass equality: every field
+    c = FastVAT(method="svat", sample_size=32, seed=8).fit(X).assess()
+    assert a["hopkins"] != c["hopkins"]
+
+
+def test_result_meta_seed_derivation():
+    m = ResultMeta(method="vat", seed=3)
+    assert np.array_equal(m.jax_key(1), m.jax_key(1))
+    assert not np.array_equal(m.jax_key(1), m.jax_key(2))
+    assert m.host_rng(1).integers(1 << 30) == m.host_rng(1).integers(1 << 30)
+    assert (m.host_rng(1).integers(1 << 30)
+            != m.host_rng(2).integers(1 << 30))
+    # jax- and host-side streams share the seed *source*, not the values
+    m2 = ResultMeta(method="vat", seed=4)
+    assert m.host_rng(1).integers(1 << 30) != m2.host_rng(1).integers(1 << 30)
+
+
+# ------------------------------------------------------------ registry ----
+
+def test_registry_drives_dispatch_and_extension():
+    """A third-party rung registers and immediately works through the
+    facade — no facade edits (the ConiVAT/DeepVAT extension path)."""
+    def toy_fit(X, meta, opts):
+        from repro import core
+        res = core.vat(jnp.asarray(np.asarray(X, np.float32)),
+                       metric=meta.metric)
+        return TendencyResult(order=res.order, rstar=res.rstar,
+                              ivat_image=None, sample_idx=None,
+                              extension_labels=None, meta=meta)
+
+    rung = Rung(name="toyvat", fit=toy_fit, supports_precomputed=False)
+    registry.register(rung)
+    try:
+        assert "toyvat" in registry.methods()
+        fv = FastVAT(method="toyvat").fit(_blobs())
+        assert isinstance(fv.result, TendencyResult)
+        assert fv.assess()["method"] == "toyvat"
+        with pytest.raises(ValueError, match="already registered"):
+            registry.register(rung)
+        registry.register(rung, overwrite=True)   # idempotent replace
+    finally:
+        del registry._REGISTRY["toyvat"]
+
+
+def test_select_method_is_capability_driven():
+    assert select_method(SMALL_N) == "vat"
+    assert select_method(SMALL_N + 1) == "svat"
+    assert select_method(MEDIUM_N) == "svat"
+    assert select_method(MEDIUM_N + 1) == "bigvat"
+    assert select_method(100, batched=True) == "vat"
+    with pytest.raises(LookupError):
+        select_method(SMALL_N + 1, batched=True, strict=True)
+
+
+def test_rung_capability_flags():
+    assert registry.get_rung("vat").supports_batch
+    assert registry.get_rung("ivat").supports_precomputed
+    assert not registry.get_rung("bigvat").supports_batch
+    assert not registry.get_rung("svat").supports_precomputed
+    assert registry.get_rung("dvat").check is not None
+    with pytest.raises(KeyError, match="registered"):
+        registry.get_rung("nope")
+
+
+# ------------------------------------------------- public API surface ----
+
+#: The documented public surface (docs/api.md) — every name must import.
+PUBLIC_ROOT = ("FastVAT", "assess_tendency", "TendencyResult",
+               "TendencyReport", "ResultMeta", "METRICS", "select_method")
+PUBLIC_API = PUBLIC_ROOT + ("Rung", "RungOptions", "register", "get_rung",
+                            "registry", "METHODS", "SMALL_N", "MEDIUM_N",
+                            "COMPUTED_METRICS", "validate_metric")
+
+
+def test_api_stability_every_documented_name_imports():
+    for name in PUBLIC_ROOT:
+        assert getattr(repro, name) is not None, name
+    import repro.api as api_pkg
+    for name in PUBLIC_API:
+        assert getattr(api_pkg, name) is not None, name
+    assert set(PUBLIC_ROOT) == set(repro.__all__)
+    assert set(PUBLIC_API) <= set(api_pkg.__all__)
+    # the legacy import spelling keeps working
+    from repro.api import FastVAT as F2  # noqa: F401
+    assert "auto" in METHODS and "precomputed" in METRICS
+
+
+def test_api_doctests_pass():
+    """The tier-1 gate runs the api package doctests even without the
+    --doctest-modules flag CI adds."""
+    import repro.api.facade
+    import repro.api.metrics
+    import repro.api.registry
+    import repro.api.result
+    for mod in (repro.api.facade, repro.api.metrics, repro.api.registry,
+                repro.api.result, repro):
+        result = doctest.testmod(mod)
+        assert result.failed == 0, mod.__name__

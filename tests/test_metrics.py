@@ -1,0 +1,226 @@
+"""Metric pluggability (ISSUE 3): per-metric correctness properties,
+Pallas-vs-XLA-ref agreement, brute-force ordering oracles, and the
+precomputed-dissimilarity round trip."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import FastVAT
+from repro.core.naive import vat_order_naive
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_dist import (pairwise_dist_pallas,
+                                         pairwise_dist_pallas_batch)
+
+METRICS = ref.METRICS
+TRIANGLE_METRICS = ("euclidean", "manhattan")  # true metrics; sqeuclidean
+                                               # and 1-cos are not
+
+
+def _numpy_dissim(X, Y, metric):
+    """Independent numpy oracle — direct broadcast formulas, no Gram trick."""
+    X = np.asarray(X, np.float64)
+    Y = np.asarray(Y, np.float64)
+    diff = X[:, None, :] - Y[None, :, :]
+    if metric == "euclidean":
+        return np.sqrt(np.sum(diff * diff, -1))
+    if metric == "sqeuclidean":
+        return np.sum(diff * diff, -1)
+    if metric == "manhattan":
+        return np.sum(np.abs(diff), -1)
+    nx = np.linalg.norm(X, axis=-1)
+    ny = np.linalg.norm(Y, axis=-1)
+    denom = np.maximum(nx[:, None] * ny[None, :], 1e-12)
+    return np.clip(1.0 - (X @ Y.T) / denom, 0.0, 2.0)
+
+
+def _points(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) + 0.5)
+
+
+# ------------------------------------------------------- properties ----
+
+@pytest.mark.parametrize("metric", METRICS)
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 60), d=st.integers(1, 9))
+def test_metric_properties(metric, seed, n, d):
+    """Symmetry, zero diagonal, non-negativity — for every metric, on
+    both dispatch paths."""
+    X = _points(seed, n, d)
+    for use_pallas in (False, True):
+        R = np.asarray(ops.pairwise_dist(X, metric=metric,
+                                         use_pallas=use_pallas))
+        np.testing.assert_allclose(R, R.T, atol=1e-5)
+        np.testing.assert_allclose(np.diag(R), 0.0, atol=1e-6)
+        assert R.min() >= 0.0
+
+
+@pytest.mark.parametrize("metric", TRIANGLE_METRICS)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(3, 30))
+def test_triangle_inequality(metric, seed, n):
+    """d(i,k) <= d(i,j) + d(j,k) for the true metrics, all triples."""
+    X = _points(seed, n, 4)
+    R = np.asarray(ops.pairwise_dist(X, metric=metric), np.float64)
+    lhs = R[:, None, :]                       # d(i, k)
+    rhs = R[:, :, None] + R[None, :, :]       # d(i, j) + d(j, k)
+    assert np.all(lhs <= rhs + 1e-4)
+
+
+def test_metric_matches_independent_numpy_oracle():
+    """The XLA refs agree with direct float64 broadcast formulas — so the
+    Gram-trick decomposition can't hide a shared misunderstanding."""
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(40, 6)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(23, 6)).astype(np.float32))
+    for metric in METRICS:
+        got = np.asarray(ref.pairwise_dissim_ref(X, Y, metric=metric))
+        want = _numpy_dissim(X, Y, metric)
+        np.testing.assert_allclose(got, want, atol=5e-4)
+
+
+# ------------------------------------------- pallas vs ref, per metric ----
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n,m,d", [(17, 9, 3), (64, 64, 4), (100, 37, 130)])
+def test_pairwise_pallas_matches_ref_per_metric(metric, n, m, d):
+    rng = np.random.default_rng(n * 100 + m + d)
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    got = pairwise_dist_pallas(X, Y, metric=metric, interpret=True)
+    want = ref.pairwise_dissim_ref(X, Y, metric=metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_pairwise_batch_pallas_matches_ref_per_metric(metric):
+    rng = np.random.default_rng(7)
+    X = jnp.asarray(rng.normal(size=(3, 33, 5)).astype(np.float32))
+    got = pairwise_dist_pallas_batch(X, metric=metric, interpret=True)
+    want = jax.vmap(
+        lambda A: ref.pairwise_dissim_ref(A, metric=metric))(X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_facade_pallas_ordering_matches_xla_per_metric(metric):
+    """Acceptance: Pallas and XLA paths agree per metric through FastVAT."""
+    rng = np.random.default_rng(11)
+    X = np.concatenate([rng.normal(size=(25, 4)),
+                        rng.normal(size=(25, 4)) + 6]).astype(np.float32)
+    a = FastVAT(metric=metric).fit(X)
+    b = FastVAT(metric=metric, use_pallas=True).fit(X)
+    assert np.array_equal(a.order(), b.order())
+
+
+# ------------------------------------------- brute-force order oracles ----
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_facade_ordering_pinned_against_naive_prim(metric):
+    """Acceptance: FastVAT(metric=...).fit(X) reproduces the pure-Python
+    Prim oracle run on the same dissimilarity matrix, bitwise."""
+    rng = np.random.default_rng(13)
+    X = np.concatenate([rng.normal(size=(20, 3)),
+                        rng.normal(size=(20, 3)) + 7]).astype(np.float32)
+    R = np.asarray(ops.pairwise_dist(jnp.asarray(X), metric=metric),
+                   np.float64)
+    want = vat_order_naive(R.tolist())
+    got = FastVAT(metric=metric).fit(X).order()
+    assert got.tolist() == want
+
+
+# --------------------------------------------------- precomputed input ----
+
+def test_precomputed_round_trip_bitwise():
+    """Acceptance: fit(squareform(pdist(X))) reproduces fit(X)'s ordering
+    bitwise.  The matrix handed in is the exact f32 matrix the euclidean
+    fit computes internally, so the Prim pass must visit identically."""
+    rng = np.random.default_rng(17)
+    X = np.concatenate([rng.normal(size=(40, 5)),
+                        rng.normal(size=(40, 5)) + 9]).astype(np.float32)
+    direct = FastVAT().fit(X)
+    D = np.asarray(ops.pairwise_dist(jnp.asarray(X)))
+    via_matrix = FastVAT(metric="precomputed").fit(D)
+    assert np.array_equal(via_matrix.order(), direct.order())
+    np.testing.assert_array_equal(
+        via_matrix.image(use_ivat=False), direct.image(use_ivat=False))
+    scipy = pytest.importorskip("scipy.spatial.distance")
+    D2 = scipy.squareform(scipy.pdist(X)).astype(np.float32)
+    via_scipy = FastVAT(metric="precomputed").fit(D2)
+    assert np.array_equal(via_scipy.order(), direct.order())
+
+
+def test_precomputed_batched_round_trip():
+    rng = np.random.default_rng(19)
+    Xs = rng.normal(size=(3, 30, 4)).astype(np.float32)
+    direct = FastVAT(method="ivat").fit_many(Xs)
+    Ds = np.asarray(ops.pairwise_dist_batch(jnp.asarray(Xs)))
+    via = FastVAT(method="ivat", metric="precomputed").fit_many(Ds)
+    assert np.array_equal(via.order(), direct.order())
+    np.testing.assert_array_equal(via.image(), direct.image())
+    reps = via.assess()
+    assert len(reps) == 3 and all(np.isnan(r["hopkins"]) for r in reps)
+
+
+def test_precomputed_validation():
+    fv = FastVAT(metric="precomputed")
+    with pytest.raises(ValueError, match="square"):
+        fv.fit(np.zeros((4, 5), np.float32))
+    asym = np.triu(np.ones((5, 5), np.float32), 1)
+    with pytest.raises(ValueError, match="symmetric"):
+        fv.fit(asym)
+    hot_diag = np.ones((5, 5), np.float32)
+    with pytest.raises(ValueError, match="diagonal"):
+        fv.fit(hot_diag)
+    with pytest.raises(ValueError, match="precomputed"):
+        FastVAT(method="svat", metric="precomputed").fit(
+            np.zeros((6, 6), np.float32))
+
+
+def test_precomputed_auto_falls_back_to_exact_rung():
+    """Auto-selection with a precomputed matrix picks the exact rung even
+    past SMALL_N — the O(n^2) object already exists. Holds for fit_many
+    too (strict batching only applies to raw-data input)."""
+    from repro.api import SMALL_N, select_method
+    assert select_method(SMALL_N * 2, precomputed=True) == "vat"
+    assert select_method(SMALL_N * 2, precomputed=True,
+                         batched=True) == "vat"
+    n = 80
+    rng = np.random.default_rng(31)
+    Xs = rng.normal(size=(2, n, 3)).astype(np.float32)
+    Ds = np.asarray(ops.pairwise_dist_batch(jnp.asarray(Xs)))
+    fv = FastVAT(metric="precomputed").fit_many(Ds)   # auto resolves
+    assert fv.method_resolved == "vat" and fv.order().shape == (2, n)
+
+
+def test_metric_validation():
+    with pytest.raises(ValueError, match="metric"):
+        FastVAT(metric="hamming")
+    with pytest.raises(ValueError, match="metric"):
+        ops.pairwise_dist(jnp.zeros((3, 2)), metric="precomputed")
+
+
+def test_manhattan_finds_translated_blobs():
+    rng = np.random.default_rng(23)
+    X = np.concatenate([rng.normal(size=(30, 6)),
+                        rng.normal(size=(30, 6)) + 10]).astype(np.float32)
+    rep = FastVAT(metric="manhattan").fit(X).assess()
+    assert rep["k_est"] == 2 and rep["metric"] == "manhattan"
+
+
+def test_cosine_finds_directional_clusters():
+    """Cosine sees *direction*: two clusters along orthogonal axes are
+    separated even though their radii overlap completely."""
+    rng = np.random.default_rng(29)
+    r = rng.uniform(1.0, 10.0, size=(60, 1))
+    axis = np.zeros((60, 4), np.float32)
+    axis[:30, 0] = 1.0
+    axis[30:, 1] = 1.0
+    X = (r * (axis + 0.05 * rng.normal(size=(60, 4)))).astype(np.float32)
+    rep = FastVAT(metric="cosine").fit(X).assess()
+    assert rep["k_est"] == 2 and rep["metric"] == "cosine"
+    # euclidean can't: the radial spread drowns the angular gap
+    rep_e = FastVAT(metric="euclidean").fit(X).assess()
+    assert rep_e["block_score"] < rep["block_score"]
