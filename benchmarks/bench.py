@@ -15,9 +15,15 @@ benchmarks/README.md), adding two tables the paper doesn't have:
   metrics — the metric-dispatched pairwise kernel (ISSUE 3): XLA vs
             Pallas-interpret per metric, so each metric's tile variant
             is on the perf record from day one.
+  flash   — materialized exact VAT vs the matrix-free Flash-VAT engine
+            (ISSUE 4): wall time AND peak working-set bytes from XLA's
+            compiled-program memory accounting, the table that shows the
+            O(n^2) -> O(n·d) memory drop buys exact VAT at bigvat sizes.
 
-Every row records the ``metric`` it was measured under (schema v2);
-tables predating metric pluggability are euclidean throughout.
+Every row records the ``metric`` it was measured under and (schema v3)
+its ``peak_bytes`` — XLA temp + output allocation of the measured
+program, or null where memory was not profiled; tables predating metric
+pluggability are euclidean throughout.
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
@@ -40,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-TABLES = ("table1", "table4", "batched", "ivat", "metrics")
+TABLES = ("table1", "table4", "batched", "ivat", "metrics", "flash")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
@@ -49,6 +55,11 @@ _IVAT_SIZES = (512, 1024)
 _IVAT_SIZES_SMOKE = (192,)
 _METRIC_SHAPE = (1024, 64)
 _METRIC_SHAPE_SMOKE = (256, 16)
+_FLASH_SIZES = (2_048, 8_192)
+# smoke must stay big enough that the streamed seed pass's (br, n) tile
+# (br caps at 1024) is a strict subset of the matrix — below ~2k the
+# row records no memory win and can't catch a regression
+_FLASH_SIZES_SMOKE = (4_096,)
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -62,10 +73,26 @@ def _time(fn, *args, reps: int = 3) -> float:
     return best
 
 
+def _peak_bytes(fn, *args):
+    """Peak working set of the compiled program: XLA temp + output bytes.
+
+    Arguments (the inputs the caller already holds, e.g. X itself) are
+    excluded — this measures what the *algorithm* allocates, which is
+    exactly where materialized VAT's O(n^2) shows up and Flash-VAT's
+    doesn't.  Returns None where the backend can't report it.
+    """
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(ma.temp_size_in_bytes) + int(ma.output_size_in_bytes)
+    except Exception:
+        return None
+
+
 def _row(table: str, name: str, seconds: float, *,
-         metric: str = "euclidean", **derived) -> dict:
+         metric: str = "euclidean", peak_bytes=None, **derived) -> dict:
     return {"table": table, "name": f"{table}/{name}", "metric": metric,
-            "us_per_call": seconds * 1e6, "derived": derived}
+            "us_per_call": seconds * 1e6, "peak_bytes": peak_bytes,
+            "derived": derived}
 
 
 # ------------------------------------------------------------ tables ----
@@ -166,9 +193,39 @@ def bench_metrics(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
+def bench_flash(smoke: bool, reps: int) -> list[dict]:
+    """Materialized exact VAT vs matrix-free Flash-VAT: time + memory.
+
+    Both columns produce bitwise-identical orderings (pinned in
+    tests/test_flashvat.py); the table records what that equivalence
+    costs — the matrix-free engine trades MXU-batched O(n^2) matmul
+    throughput for an O(n·d) working set, which is the trade that lets
+    exact VAT past the materialized rungs' memory wall.
+    """
+    from repro import core
+    rows = []
+    for n in (_FLASH_SIZES_SMOKE if smoke else _FLASH_SIZES):
+        rng = np.random.default_rng(n)
+        X = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+
+        t_mat = _time(lambda A: core.vat(A).order, X, reps=reps)
+        pb_mat = _peak_bytes(lambda A: core.vat(A), X)
+        t_mf = _time(lambda A: core.vat_matrix_free(A).order, X, reps=reps)
+        pb_mf = _peak_bytes(lambda A: core.vat_matrix_free(A), X)
+
+        rows.append(_row("flash", f"n{n}/materialized", t_mat,
+                         peak_bytes=pb_mat, nn_bytes=n * n * 4))
+        derived = {"time_vs_materialized": round(t_mf / t_mat, 3)}
+        if pb_mat and pb_mf:
+            derived["mem_shrink_vs_materialized"] = round(pb_mat / pb_mf, 1)
+        rows.append(_row("flash", f"n{n}/matrix_free", t_mf,
+                         peak_bytes=pb_mf, **derived))
+    return rows
+
+
 _BENCHES = {"table1": bench_table1, "table4": bench_table4,
             "batched": bench_batched, "ivat": bench_ivat,
-            "metrics": bench_metrics}
+            "metrics": bench_metrics, "flash": bench_flash}
 assert set(_BENCHES) == set(TABLES)
 
 
@@ -181,7 +238,7 @@ def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
         print(f"# bench: {t} ...", file=sys.stderr)
         rows.extend(_BENCHES[t](smoke, reps))
     return {
-        "schema_version": 2,
+        "schema_version": 3,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {
             "platform": platform.platform(),

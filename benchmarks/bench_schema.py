@@ -12,12 +12,17 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+#: Older snapshot versions this validator still accepts (the committed
+#: BENCH_*.json trajectory must keep validating as the schema grows).
+ACCEPTED_VERSIONS = (2, 3)
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
 _CONFIG_KEYS = {"smoke", "reps", "tables"}
 _ROW_KEYS = {"table", "name", "metric", "us_per_call", "derived"}
+# v3 adds per-row peak working-set accounting (null where not profiled)
+_ROW_KEYS_V3 = _ROW_KEYS | {"peak_bytes"}
 
 
 def _fail(msg: str):
@@ -40,9 +45,11 @@ def validate(doc: dict) -> dict:
         _fail(f"top level must be an object, got {type(doc).__name__}")
     if missing := _TOP_KEYS - doc.keys():
         _fail(f"missing top-level keys {sorted(missing)}")
-    if doc["schema_version"] != SCHEMA_VERSION:
-        _fail(f"schema_version must be {SCHEMA_VERSION}, "
+    if doc["schema_version"] not in ACCEPTED_VERSIONS:
+        _fail(f"schema_version must be one of {ACCEPTED_VERSIONS}, "
               f"got {doc['schema_version']!r}")
+    version = doc["schema_version"]
+    row_keys = _ROW_KEYS_V3 if version >= 3 else _ROW_KEYS
     if not isinstance(doc["created_utc"], str) or "T" not in doc["created_utc"]:
         _fail("created_utc must be an ISO-8601 UTC string")
 
@@ -61,8 +68,8 @@ def validate(doc: dict) -> dict:
         _fail("rows must be a non-empty list")
     for i, row in enumerate(rows):
         where = f"rows[{i}]"
-        if not isinstance(row, dict) or (m := _ROW_KEYS - row.keys()):
-            _fail(f"{where} must have keys {sorted(_ROW_KEYS)}")
+        if not isinstance(row, dict) or (m := row_keys - row.keys()):
+            _fail(f"{where} must have keys {sorted(row_keys)}")
         if not isinstance(row["table"], str) or not row["table"]:
             _fail(f"{where}.table must be a non-empty string")
         if not isinstance(row["name"], str) or \
@@ -77,6 +84,11 @@ def validate(doc: dict) -> dict:
         if not isinstance(row["metric"], str) or not row["metric"]:
             _fail(f"{where}.metric must be a non-empty string (the "
                   "dissimilarity metric the row was measured under)")
+        if version >= 3:
+            pb = row["peak_bytes"]
+            if pb is not None and (not isinstance(pb, (int, float))
+                                   or isinstance(pb, bool) or pb < 0):
+                _fail(f"{where}.peak_bytes must be a number >= 0 or null")
     return doc
 
 

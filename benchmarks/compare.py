@@ -1,0 +1,110 @@
+"""Diff two BENCH_*.json snapshots — the perf-trajectory regression gate.
+
+Rows are matched by their unique ``name``; for every match the wall-time
+delta is reported per table, and the process exits non-zero when any
+matched row regressed by more than ``--threshold`` (default 20%).  Rows
+present in only one snapshot are listed as added/removed but never fail
+the gate (new tables land all the time; the gate is for the rows both
+snapshots measured).  ``peak_bytes`` deltas (schema v3) are reported the
+same way but are informational only — memory accounting is deterministic
+per build, so a real change there shows up in review, not as flake.
+
+CLI:
+  PYTHONPATH=src python -m benchmarks.compare BASELINE.json NEW.json
+  PYTHONPATH=src python -m benchmarks.compare old.json new.json --threshold 0.5
+
+CI runs this against the committed smoke baseline
+(``benchmarks/BENCH_smoke_baseline.json``) after every smoke-bench job —
+see .github/workflows/ci.yml.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.bench_schema import validate_file
+
+
+def diff(base: dict, new: dict, *, threshold: float = 0.20) -> dict:
+    """Compare two validated BENCH documents.
+
+    Args:
+      base: the older snapshot (the reference the gate protects).
+      new: the fresh snapshot under test.
+      threshold: relative wall-time growth that counts as a regression
+        (0.20 = new row is >20% slower than baseline).
+
+    Returns:
+      {"tables": {table: [row-delta dicts]}, "regressions": [...],
+       "added": [names], "removed": [names]} — each row-delta dict has
+      name, base_us, new_us, ratio (new/base) and the peak_bytes pair
+      when both sides carry one.
+    """
+    brows = {r["name"]: r for r in base["rows"]}
+    nrows = {r["name"]: r for r in new["rows"]}
+    tables: dict[str, list[dict]] = {}
+    regressions = []
+    for name in (k for k in brows if k in nrows):
+        b, n = brows[name], nrows[name]
+        ratio = (n["us_per_call"] / b["us_per_call"]
+                 if b["us_per_call"] > 0 else float("inf"))
+        d = {"name": name, "base_us": b["us_per_call"],
+             "new_us": n["us_per_call"], "ratio": ratio}
+        pb, pn = b.get("peak_bytes"), n.get("peak_bytes")
+        if pb is not None and pn is not None:
+            d["base_peak_bytes"], d["new_peak_bytes"] = pb, pn
+        tables.setdefault(b["table"], []).append(d)
+        if ratio > 1.0 + threshold:
+            regressions.append(d)
+    return {"tables": tables, "regressions": regressions,
+            "added": sorted(set(nrows) - set(brows)),
+            "removed": sorted(set(brows) - set(nrows))}
+
+
+def _fmt_row(d: dict, threshold: float) -> str:
+    pct = (d["ratio"] - 1.0) * 100.0
+    flag = "  << REGRESSION" if d["ratio"] > 1.0 + threshold else ""
+    mem = ""
+    if "base_peak_bytes" in d:
+        mem = f"  peak {d['base_peak_bytes']:>12} -> {d['new_peak_bytes']:>12}B"
+    return (f"  {d['name']:48s} {d['base_us']:>12.1f} -> "
+            f"{d['new_us']:>12.1f} us  {pct:+7.1f}%{mem}{flag}")
+
+
+def report(result: dict, *, threshold: float, out=sys.stdout) -> None:
+    """Human-readable per-table delta report of a ``diff`` result."""
+    for table in sorted(result["tables"]):
+        print(f"# {table}", file=out)
+        for d in sorted(result["tables"][table], key=lambda r: r["name"]):
+            print(_fmt_row(d, threshold), file=out)
+    if result["added"]:
+        print(f"# rows only in NEW ({len(result['added'])}): "
+              + ", ".join(result["added"]), file=out)
+    if result["removed"]:
+        print(f"# rows only in BASELINE ({len(result['removed'])}): "
+              + ", ".join(result["removed"]), file=out)
+    n_reg = len(result["regressions"])
+    matched = sum(len(v) for v in result["tables"].values())
+    verdict = (f"{n_reg} regression(s) past the {threshold:.0%} gate"
+               if n_reg else "no regressions")
+    print(f"# compared {matched} rows: {verdict}", file=out)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("baseline", help="reference BENCH_*.json")
+    p.add_argument("new", help="fresh BENCH_*.json under test")
+    p.add_argument("--threshold", type=float, default=0.20,
+                   help="relative slowdown that fails the gate "
+                        "(default 0.20 = 20%%)")
+    a = p.parse_args(argv)
+
+    base = validate_file(a.baseline)
+    new = validate_file(a.new)
+    result = diff(base, new, threshold=a.threshold)
+    report(result, threshold=a.threshold)
+    return 1 if result["regressions"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,72 @@
+"""Flash-VAT demo: *exact* VAT of n = 100,000 points on a laptop CPU.
+
+Big-VAT (examples/bigvat_demo.py) reaches this n by sampling — the
+ordering it extends is approximate.  Flash-VAT gets the **exact** VAT
+ordering at the same n: the matrix-free fused Prim engine
+(``core.vat_matrix_free``, kernels/prim_stream.py) recomputes each
+pivot's distance row tile-by-tile and reduces it on the fly, so peak
+memory is O(n·d) + O(n) frontier state instead of the 40 GB (n, n)
+float32 matrix exact VAT used to require.  The ordering is
+bitwise-identical to materialized VAT (pinned in tests/test_flashvat.py)
+— no approximation anywhere, just a memory-for-recompute trade.
+
+The demo fits 3 Gaussian blobs through the ``FastVAT`` facade with
+``method="flashvat"`` (auto-selection picks flashvat for
+2_048 < n <= 20_000; at n = 1e5 the default is still the faster,
+approximate bigvat, so we opt in), prints the band-rendered VAT image,
+the tendency report, and the exactness evidence: every ground-truth
+cluster is one contiguous run of the full-n ordering.
+
+Run:  PYTHONPATH=src python examples/flashvat_demo.py
+      (one to three minutes on CPU: exact VAT is O(n^2 d) work — the
+      matrix-free engine changes the memory bound, not the flop count)
+"""
+import time
+
+import numpy as np
+
+from repro import FastVAT
+from repro.data.synth import make_big_blobs
+
+N = 100_000
+K = 3
+
+
+def ascii_image(R, size=40):
+    R = np.asarray(R)
+    idx = np.linspace(0, R.shape[0] - 1, size).astype(int)
+    sub = R[np.ix_(idx, idx)]
+    sub = sub / (sub.max() + 1e-9)
+    chars = " .:-=+*#%@"   # dark blocks = close points
+    return "\n".join("".join(chars[int((1 - v) * (len(chars) - 1))]
+                             for v in row) for row in sub)
+
+
+def main():
+    X, labels = make_big_blobs(n=N, k=K)
+    print(f"n={len(X):,} d={X.shape[1]}  exact, matrix-free "
+          f"(materialized VAT would need a "
+          f"{len(X)**2 * 4 / 1e9:.0f} GB matrix; Flash-VAT holds "
+          f"{len(X) * X.shape[1] * 4 / 1e6:.1f} MB of points + O(n) state)")
+
+    t0 = time.perf_counter()
+    fv = FastVAT(method="flashvat", sample_size=256).fit(X)
+    dt = time.perf_counter() - t0
+
+    report = fv.assess()
+    print(ascii_image(fv.image(resolution=256)))
+    print(f"\nmethod={report['method']}  hopkins={report['hopkins']:.3f}  "
+          f"block_score={report['block_score']:.3f}  k_est={report['k_est']}"
+          f"  (true k={K})")
+    print(f"wall time: {dt:.2f}s")
+
+    # exactness, not approximation: the full-n ordering keeps every
+    # ground-truth blob perfectly contiguous
+    lab_in_order = labels[fv.order()]
+    runs = 1 + int(np.sum(lab_in_order[1:] != lab_in_order[:-1]))
+    print(f"label runs along the n={len(X):,} exact ordering: {runs} "
+          f"(ideal {K})")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,13 +3,14 @@
 Picks the right scaling rung automatically (see ``docs/scaling.md``):
 
   n <= SMALL_N  (2_048)   exact ``vat``   — O(n^2) matrix fits easily
-  n <= MEDIUM_N (20_000)  ``svat``        — maximin sample, O(ns + s^2)
+  n <= MEDIUM_N (20_000)  ``flashvat``    — exact, matrix-free, O(n·d)
   larger                  ``bigvat``      — clusiVAT pipeline, no (n, n)
 
 ``method`` overrides come from the rung registry (``repro.api.registry``)
-— "vat" | "ivat" | "svat" | "bigvat" | "dvat" plus anything third-party
-code registered.  Every rung returns the same ``TendencyResult`` pytree,
-so ``order()`` / ``image()`` / ``assess()`` below are branch-free reads.
+— "vat" | "ivat" | "svat" | "flashvat" | "bigvat" | "dvat" plus anything
+third-party code registered.  Every rung returns the same
+``TendencyResult`` pytree, so ``order()`` / ``image()`` / ``assess()``
+below are branch-free reads.
 
 >>> import numpy as np
 >>> rng = np.random.default_rng(0)
@@ -74,7 +75,8 @@ class FastVAT:
                   "euclidean" | "sqeuclidean" | "manhattan" | "cosine",
                   or "precomputed" to pass ``fit`` an (n, n) matrix
                   directly (exact rungs only).
-    sample_size:  s for svat/bigvat prototypes.
+    sample_size:  s for svat/bigvat prototypes and flashvat's rendered
+                  representative count.
     block:        row-block size of bigvat's tiled assignment pass.
     use_pallas:   route distance/iVAT work through the Pallas kernels
                   (interpret mode on CPU; compiled on TPU).
@@ -164,11 +166,12 @@ class FastVAT:
           and ``assess()`` a list of b per-dataset reports.
 
         Only rungs with a batched fitter batch (built-ins: "vat",
-        "ivat"; "auto" resolves among them and refuses n past the exact
-        rung). Each dataset's ordering is bitwise-identical to a solo
-        ``fit`` — the batch is a vmap / batched Pallas grid, never an
-        approximation. For n past the exact-VAT rung, loop ``fit()`` per
-        dataset instead (svat/bigvat don't vectorize over datasets yet).
+        "ivat", "flashvat"; "auto" resolves among them and refuses n
+        past the largest batch-capable threshold). Each dataset's
+        ordering is bitwise-identical to a solo ``fit`` — the batch is a
+        vmap / batched Pallas grid, never an approximation. For larger n,
+        loop ``fit()`` per dataset instead (svat/bigvat don't vectorize
+        over datasets yet).
         """
         precomputed = self.metric == "precomputed"
         if precomputed:
@@ -187,10 +190,14 @@ class FastVAT:
                 method = select_method(n, precomputed=precomputed,
                                        batched=True, strict=not precomputed)
             except LookupError:
+                cap = max((r.auto_threshold for r in
+                           map(registry.get_rung, registry.registered())
+                           if r.supports_batch and
+                           r.auto_threshold is not None), default=SMALL_N)
                 raise ValueError(
-                    f"fit_many batches the exact rungs only (n <= "
-                    f"{SMALL_N}), got per-dataset n={n}; loop fit() per "
-                    "dataset for the svat/bigvat rungs") from None
+                    f"fit_many batches the exact rungs only (n <= {cap}),"
+                    f" got per-dataset n={n}; loop fit() per dataset for"
+                    " the svat/bigvat rungs") from None
         rung = registry.get_rung(method)
         if not rung.supports_batch:
             batchable = [r for r in registry.registered()

@@ -17,13 +17,15 @@ pipeline) register here and immediately work through ``FastVAT`` and
 
 >>> from repro.api import registry
 >>> sorted(registry.registered())
-['bigvat', 'dvat', 'ivat', 'svat', 'vat']
+['bigvat', 'dvat', 'flashvat', 'ivat', 'svat', 'vat']
 >>> registry.select_method(100), registry.select_method(10_000)
-('vat', 'svat')
+('vat', 'flashvat')
 >>> registry.get_rung("bigvat").supports_batch
 False
 >>> registry.get_rung("vat").supports_precomputed
 True
+>>> registry.get_rung("flashvat").supports_precomputed  # never holds (n,n)
+False
 """
 from __future__ import annotations
 
@@ -38,9 +40,12 @@ import jax.numpy as jnp
 
 from repro import core
 from repro.api.result import SALT_FIT, ResultMeta, TendencyResult
+from repro.kernels import ops as kops
 
-#: Auto-selection thresholds (see docs/scaling.md): exact below SMALL_N,
-#: sVAT to MEDIUM_N, Big-VAT beyond (the only rung with no O(n^2) object).
+#: Auto-selection thresholds (see docs/scaling.md): materialized exact
+#: VAT below SMALL_N, matrix-free exact VAT (flashvat) to MEDIUM_N,
+#: Big-VAT beyond (sVAT — the sampled approximation flashvat obsoletes
+#: in this window — stays registered as an opt-in rung).
 SMALL_N = 2_048
 MEDIUM_N = 20_000
 
@@ -232,6 +237,90 @@ def _fit_bigvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
                           group_sizes=res.group_sizes)
 
 
+def _flash_groups(n: int, m: int):
+    """Partition VAT-order positions 0..n-1 into m contiguous groups.
+
+    Returns (sizes (m,) int64, mids (m,) int64): per-group lengths
+    (remainder spread over the leading groups) and each group's middle
+    position — the representative whose distances render that band.
+    """
+    base, extra = divmod(n, m)
+    sizes = np.full(m, base, np.int64)
+    sizes[:extra] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return sizes, starts + sizes // 2
+
+
+def _rep_ivat(Rrep: jax.Array, use_pallas: bool) -> jax.Array:
+    """iVAT image of a representative matrix, returned in band order.
+
+    The Havens-Bezdek recurrence is only valid along a Prim traversal of
+    the matrix it is applied to, and the band order (representatives
+    sorted by their position in the *full-n* ordering) is generally not
+    one — so the geodesics are computed along the representatives' own
+    Prim order (``vat_from_dist``) and the result is permuted back to
+    band order for rendering.  O(m^2) work on an (m, m) object.
+    """
+    sres = core.vat_from_dist(Rrep)
+    iv_s = core.ivat_from_vat(sres.rstar, use_pallas=use_pallas)
+    m = Rrep.shape[0]
+    rank = jnp.zeros((m,), jnp.int32).at[sres.order].set(
+        jnp.arange(m, dtype=jnp.int32))
+    return iv_s[rank][:, rank]
+
+
+def _fit_flashvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    """Flash-VAT: exact matrix-free ordering + bigvat-style tiled render.
+
+    The ordering is the exact full-n VAT order (bitwise-identical to the
+    materialized path) at O(n·d) memory.  The image reuses bigvat's
+    rendering idea in reverse: m = sample_size representatives are taken
+    at the middle of m contiguous bands of the *exact* ordering, their
+    (m, m) dissimilarity matrix inherits that band order, and
+    ``TendencyResult.image`` expands it by the true band sizes — so the
+    picture shows all n points while only an (m, m) object ever exists.
+    The iVAT companion runs along the representatives' own Prim
+    traversal (see ``_rep_ivat``) and is re-indexed to the same bands.
+    """
+    Xj = _as_f32(data)
+    res = core.vat_matrix_free(Xj, metric=meta.metric,
+                               use_pallas=meta.use_pallas)
+    n, m = meta.n, min(opts.sample_size, meta.n)
+    sizes, mids = _flash_groups(n, m)
+    rep_idx = res.order[jnp.asarray(mids)]
+    Rrep = kops.pairwise_dist(Xj[rep_idx], use_pallas=meta.use_pallas,
+                              metric=meta.metric)
+    iv = _rep_ivat(Rrep, meta.use_pallas)
+    gid = jnp.asarray(np.repeat(np.arange(m, dtype=np.int32), sizes))
+    labels = jnp.zeros((n,), jnp.int32).at[res.order].set(gid)
+    return TendencyResult(order=res.order, rstar=Rrep, ivat_image=iv,
+                          sample_idx=rep_idx, extension_labels=labels,
+                          group_sizes=jnp.asarray(sizes, jnp.int32),
+                          meta=meta)
+
+
+def _fit_flashvat_batch(data, meta: ResultMeta,
+                        opts: RungOptions) -> TendencyResult:
+    """Batched Flash-VAT: one compiled program, per-lane exact orderings."""
+    Xj = _as_f32(data)
+    res = core.vat_matrix_free_batch(Xj, metric=meta.metric,
+                                     use_pallas=meta.use_pallas)
+    n, m = meta.n, min(opts.sample_size, meta.n)
+    sizes, mids = _flash_groups(n, m)
+    rep_idx = res.order[:, jnp.asarray(mids)]                    # (b, m)
+    prot = jnp.take_along_axis(Xj, rep_idx[:, :, None], axis=1)  # (b, m, d)
+    Rrep = kops.pairwise_dist_batch(prot, use_pallas=meta.use_pallas,
+                                    metric=meta.metric)
+    iv = jax.vmap(lambda R: _rep_ivat(R, meta.use_pallas))(Rrep)
+    gid = jnp.asarray(np.repeat(np.arange(m, dtype=np.int32), sizes))
+    labels = jax.vmap(
+        lambda o: jnp.zeros((n,), jnp.int32).at[o].set(gid))(res.order)
+    return TendencyResult(order=res.order, rstar=Rrep, ivat_image=iv,
+                          sample_idx=rep_idx, extension_labels=labels,
+                          group_sizes=jnp.asarray(sizes, jnp.int32),
+                          meta=meta)
+
+
 def _check_dvat(n: int):
     if not core.HAS_DISTRIBUTED:
         raise RuntimeError(
@@ -276,8 +365,14 @@ register(Rung(
     supports_precomputed=True, auto_threshold=None,
     description="exact VAT + geodesic (iVAT) image; opt-in"))
 register(Rung(
-    name="svat", fit=_fit_svat, auto_threshold=MEDIUM_N,
-    description="maximin sample VAT, O(ns + s^2)"))
+    name="svat", fit=_fit_svat, auto_threshold=None,
+    description="maximin sample VAT, O(ns + s^2); opt-in (flashvat "
+                "covers its former auto window exactly)"))
+register(Rung(
+    name="flashvat", fit=_fit_flashvat, fit_batch=_fit_flashvat_batch,
+    auto_threshold=MEDIUM_N,
+    description="matrix-free exact VAT (Flash-VAT): fused streaming "
+                "Prim, O(n·d) memory, no (n, n) object"))
 register(Rung(
     name="bigvat", fit=_fit_bigvat, auto_threshold=math.inf,
     description="out-of-core clusiVAT pipeline, no (n, n) object"))

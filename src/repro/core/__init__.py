@@ -5,7 +5,9 @@ vat -> svat -> bigvat -> dvat -> streaming ladder); the user-facing
 facade with automatic method selection is ``repro.api.FastVAT``.
 """
 from repro.core.vat import (vat, vat_batch, vat_batch_from_dist,
-                            vat_from_dist, vat_order, reorder, VATResult,
+                            vat_from_dist, vat_matrix_free,
+                            vat_matrix_free_batch, vat_order, reorder,
+                            VATResult, FlashVATResult,
                             block_structure_score)
 from repro.core.ivat import (ivat, ivat_batch, ivat_batch_from_dist,
                              ivat_batch_from_vat, ivat_from_vat)
@@ -25,7 +27,8 @@ from repro.core.cluster import kmeans, dbscan, adjusted_rand_index, pca
 
 __all__ = [
     "vat", "vat_batch", "vat_batch_from_dist", "vat_from_dist",
-    "vat_order", "reorder", "VATResult",
+    "vat_matrix_free", "vat_matrix_free_batch", "vat_order", "reorder",
+    "VATResult", "FlashVATResult",
     "block_structure_score", "ivat", "ivat_batch", "ivat_batch_from_dist",
     "ivat_batch_from_vat", "ivat_from_vat", "svat",
     "maximin_sample", "SVATResult", "hopkins", "HAS_DISTRIBUTED",

@@ -161,7 +161,9 @@ def expand_image(base, group_sizes, resolution: int = 256) -> np.ndarray:
     """Expand an (s, s) sample image to ``resolution`` pixels by group size.
 
     Args:
-      base: (s, s) array — sample VAT/iVAT image in sample-VAT order.
+      base: (s, s) array — sample VAT/iVAT image in sample-VAT order; a
+        leading batch axis (b, s, s) passes through (flashvat's batched
+        render shares one group layout across lanes).
       group_sizes: (s,) int — per-prototype group counts, in the same
         order as ``base``'s rows.
       resolution: output image edge in pixels.
@@ -179,7 +181,7 @@ def expand_image(base, group_sizes, resolution: int = 256) -> np.ndarray:
     pix = (np.arange(resolution) + 0.5) * n / resolution
     g = np.searchsorted(edges, pix, side="right")
     g = np.minimum(g, len(sizes) - 1)
-    return base[np.ix_(g, g)]
+    return base[..., g[:, None], g[None, :]]
 
 
 def smoothed_image(result: BigVATResult, resolution: int = 256,

@@ -8,6 +8,11 @@ The paper accelerates three stages; each has a TPU-native counterpart here:
                                 vectorized O(n) min-update + argmin step
   3. matrix reordering       -> one gather, ``reorder``
 
+``vat_matrix_free`` is the Flash-VAT engine: the same exact ordering
+without ever materializing the (n, n) matrix — distance rows are
+recomputed tile-by-tile and reduced on the fly (kernels/prim_stream.py),
+so exact VAT runs at O(n·d) memory and n = 10^5 fits a laptop CPU.
+
 All functions are jit-able and differentiable-safe (no Python side effects).
 """
 from __future__ import annotations
@@ -20,12 +25,19 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.prim_stream import pad_points
 
 
 class VATResult(NamedTuple):
     rstar: jax.Array   # (n, n) reordered dissimilarity matrix
     order: jax.Array   # (n,) int32 permutation
     dist: jax.Array    # (n, n) original dissimilarity matrix
+
+
+class FlashVATResult(NamedTuple):
+    order: jax.Array   # (n,) int32 permutation — exact, same as vat_order
+    edges: jax.Array   # (n,) float32 MST edge weight of each visit; [0]=0
 
 
 def vat_order(R: jax.Array, *, use_pallas_argmin: bool = False) -> jax.Array:
@@ -86,9 +98,10 @@ def vat(X: jax.Array, *, use_pallas: bool = False,
 
     Args:
       X: (n, d) float — data points.
-      use_pallas: route the dissimilarity matrix through the Pallas
-        kernel (interpret mode on CPU; compiled on TPU). Default is the
-        XLA path.
+      use_pallas: route BOTH hot paths through Pallas kernels — the
+        dissimilarity matrix (``kernels/pairwise_dist``) and the per-step
+        masked argmin of the Prim loop (``kernels/prim_update``).
+        Interpret mode on CPU; compiled on TPU.  Default is XLA.
       metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
         For an already-computed matrix use ``vat_from_dist`` instead.
 
@@ -97,21 +110,24 @@ def vat(X: jax.Array, *, use_pallas: bool = False,
       permutation, dist (n, n) original dissimilarities.
     """
     R = kops.pairwise_dist(X, use_pallas=use_pallas, metric=metric)
-    order = vat_order(R)
+    order = vat_order(R, use_pallas_argmin=use_pallas)
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
 
 
-@jax.jit
-def vat_from_dist(R: jax.Array) -> VATResult:
+@functools.partial(jax.jit, static_argnames=("use_pallas_argmin",))
+def vat_from_dist(R: jax.Array, *,
+                  use_pallas_argmin: bool = False) -> VATResult:
     """VAT when the dissimilarity matrix is precomputed (paper step 2+3).
 
     Args:
       R: (n, n) float — symmetric dissimilarity matrix, zero diagonal.
+      use_pallas_argmin: route the Prim loop's masked argmin through the
+        fused ``prim_update`` Pallas kernel (see ``vat_order``).
 
     Returns:
       VATResult with ``dist`` aliasing the input R.
     """
-    order = vat_order(R)
+    order = vat_order(R, use_pallas_argmin=use_pallas_argmin)
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
 
 
@@ -123,8 +139,9 @@ def vat_batch(X: jax.Array, *, use_pallas: bool = False,
     Args:
       X: (b, n, d) float — b independent datasets of n points each.
       use_pallas: route distances through the batched-grid Pallas kernel
-        (``kernels.pairwise_dist_pallas_batch``); default is the batched
-        XLA path.
+        (``kernels.pairwise_dist_pallas_batch``) AND the Prim loop's
+        masked argmin through the vmapped ``prim_update`` kernel;
+        default is the batched XLA path.
       metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
         For precomputed (b, n, n) stacks use ``vat_batch_from_dist``.
 
@@ -137,13 +154,185 @@ def vat_batch(X: jax.Array, *, use_pallas: bool = False,
     per batch lane; no cross-dataset reduction exists anywhere).
     """
     R = kops.pairwise_dist_batch(X, use_pallas=use_pallas, metric=metric)
-    return jax.vmap(vat_from_dist)(R)
+    return jax.vmap(
+        lambda Ri: vat_from_dist(Ri, use_pallas_argmin=use_pallas))(R)
 
 
-@jax.jit
-def vat_batch_from_dist(R: jax.Array) -> VATResult:
+@functools.partial(jax.jit, static_argnames=("use_pallas_argmin",))
+def vat_batch_from_dist(R: jax.Array, *,
+                        use_pallas_argmin: bool = False) -> VATResult:
     """Batched ``vat_from_dist``: (b, n, n) stack -> batched VATResult."""
-    return jax.vmap(vat_from_dist)(R)
+    return jax.vmap(
+        lambda Ri: vat_from_dist(Ri, use_pallas_argmin=use_pallas_argmin)
+    )(R)
+
+
+# ------------------------------------------------------------------------
+# Flash-VAT: matrix-free fused Prim ordering — exact VAT at O(n·d) memory.
+# ------------------------------------------------------------------------
+
+def _streamed_seed_pivot(Xf: jax.Array, *, metric: str) -> jax.Array:
+    """VAT's seed vertex i0 = argmax_i max_j R[i, j], streamed.
+
+    Reproduces ``vat_order``'s seed bitwise without forming R: row
+    blocks of the matrix are recomputed with the *same* oracle the
+    materialized path uses — ``kernels.ref.pairwise_dissim_ref`` on a
+    (br, d) row slice vs all of X produces floats identical to the full
+    matrix's rows, because every per-row reduction it performs is
+    row-independent — then reduced to per-row maxima on the spot and
+    discarded.  Peak intermediate is one (br, n) tile (times d for
+    manhattan's broadcast form), with br auto-clamped to keep it near
+    32 MiB.
+    """
+    n, d = Xf.shape
+    per_row = n * 4 * (d if metric == "manhattan" else 1)
+    br = max(8, min(1024, (32 << 20) // max(per_row, 1), n))
+    n_pad = -(-n // br) * br
+    Xp = jnp.pad(Xf, ((0, n_pad - n), (0, 0)))
+    col = jnp.arange(n)
+
+    def tile_rowmax(start):
+        xb = lax.dynamic_slice_in_dim(Xp, start, br, 0)
+        T = kref.pairwise_dissim_ref(xb, Xf, metric=metric)
+        r = start + jnp.arange(br)
+        T = jnp.where(col[None, :] == r[:, None], 0.0, T)  # exact-zero diag
+        return jnp.max(T, axis=1)
+
+    def body(i, acc):
+        return lax.dynamic_update_slice_in_dim(
+            acc, tile_rowmax(i * br), i * br, 0)
+
+    rowmax = lax.fori_loop(0, n_pad // br, body,
+                           jnp.zeros((n_pad,), jnp.float32))
+    return jnp.argmax(rowmax[:n]).astype(jnp.int32)
+
+
+def _prim_stream_order(Xs, auxs, i0, n, *, metric, use_pallas, block):
+    """Drive n-1 fused Prim steps from seed i0; shared by both paths.
+
+    Args:
+      Xs / auxs: points + metric auxiliary — pre-padded (Pallas path) or
+        raw (XLA path); the step dispatch in ``kernels.ops`` is
+        pad-agnostic because padded lanes arrive masked.
+      i0: i32 scalar seed vertex.
+      n: true (unpadded) point count — sizes the order/edges outputs.
+    """
+    m = Xs.shape[0]
+    mind0 = jnp.full((m,), jnp.inf, jnp.float32)
+    sel0 = (jnp.arange(m) >= n).at[i0].set(True)
+    order0 = jnp.zeros((n,), jnp.int32).at[0].set(i0)
+    edges0 = jnp.zeros((n,), jnp.float32)
+
+    def body(t, carry):
+        mind, sel, order, edges, q = carry
+        mind, ev, nq = kops.prim_stream_step(
+            Xs, auxs, q, mind, sel, metric=metric, use_pallas=use_pallas,
+            block=block)
+        return (mind, sel.at[nq].set(True), order.at[t].set(nq),
+                edges.at[t].set(ev), nq)
+
+    _, _, order, edges, _ = lax.fori_loop(
+        1, n, body, (mind0, sel0, order0, edges0, i0))
+    return FlashVATResult(order=order, edges=edges)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas"))
+def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
+                    block: int = 1024,
+                    use_pallas: bool = False) -> FlashVATResult:
+    """Exact VAT ordering of X without ever materializing the (n, n) matrix.
+
+    The Flash-VAT engine: the seed pivot comes from a streamed row-max
+    pass, then each Prim step recomputes the pivot's distance row
+    tile-by-tile and fuses the frontier min-update with the masked
+    argmin (``kernels/prim_stream.py`` on the Pallas path, the vectorized
+    XLA step otherwise).  Peak memory is O(n·d) for X plus O(n) frontier
+    state — never O(n^2) — so exact VAT scales to n = 10^5+ on a CPU and
+    far beyond on accelerators.
+
+    The ordering is bitwise-identical to ``vat_order`` on the
+    materialized ``kernels.ops.pairwise_dist`` matrix for every metric:
+    the recomputed rows use the same Gram-trick decomposition (see
+    ``kernels.ref.pivot_row_ref``), the same first-index tie-breaking,
+    and the same seed rule.
+
+    Args:
+      X: (n, d) float — data points.
+      metric: dissimilarity metric, one of ``kernels.ref.METRICS``
+        ("precomputed" is meaningless here — the point is to never hold
+        the matrix; use ``vat_from_dist`` if you already have it).
+      block: tile length of the fused Pallas step (static).
+      use_pallas: route the fused step through the Pallas kernel
+        (interpret mode on CPU; compiled on TPU).  Default is the XLA
+        reference step — the production CPU path.
+
+    Returns:
+      FlashVATResult — ``order`` (n,) int32 exact VAT visit order and
+      ``edges`` (n,) float32, the MST edge weight that admitted each
+      vertex (edges[0] = 0; large edges mark cluster boundaries, which
+      is what ``block_structure_score`` reads off a VAT image's
+      super-diagonal).
+    """
+    n = X.shape[0]
+    Xf = X.astype(jnp.float32)
+    aux = kref.metric_aux_ref(Xf, metric=metric)
+    i0 = _streamed_seed_pivot(Xf, metric=metric)
+    if use_pallas:
+        Xs, auxs, _, bn = pad_points(Xf, aux, block=block)
+    else:
+        Xs, auxs, bn = Xf, aux, block
+    return _prim_stream_order(Xs, auxs, i0, n, metric=metric,
+                              use_pallas=use_pallas, block=bn)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas"))
+def vat_matrix_free_batch(X: jax.Array, *, metric: str = "euclidean",
+                          block: int = 1024,
+                          use_pallas: bool = False) -> FlashVATResult:
+    """Batched Flash-VAT: exact matrix-free orderings for a (b, n, d) stack.
+
+    One compiled program serves all b datasets.  The XLA path vmaps the
+    solo engine; the Pallas path drives the batched fused kernel
+    (slab-of-1 grid, ``kernels.prim_stream.prim_stream_step_pallas_batch``)
+    so per-program VMEM stays at the unbatched budget.  Each lane's
+    ordering is bitwise-identical to ``vat_matrix_free`` on that dataset.
+
+    Args:
+      X: (b, n, d) float — b independent datasets.
+      metric / block / use_pallas: as in ``vat_matrix_free``.
+
+    Returns:
+      FlashVATResult with a leading batch axis: order (b, n) int32,
+      edges (b, n) float32.
+    """
+    if not use_pallas:
+        return jax.vmap(functools.partial(
+            vat_matrix_free, metric=metric, block=block))(X)
+    b, n, _ = X.shape
+    Xf = X.astype(jnp.float32)
+    aux = kref.metric_aux_ref(Xf, metric=metric)
+    i0 = jax.vmap(functools.partial(
+        _streamed_seed_pivot, metric=metric))(Xf)
+    Xp, auxp, n_pad, bn = pad_points(Xf, aux, block=block)
+    lane = jnp.arange(b)
+
+    mind0 = jnp.full((b, n_pad), jnp.inf, jnp.float32)
+    sel0 = jnp.broadcast_to(jnp.arange(n_pad) >= n, (b, n_pad))
+    sel0 = sel0.at[lane, i0].set(True)
+    order0 = jnp.zeros((b, n), jnp.int32).at[:, 0].set(i0)
+    edges0 = jnp.zeros((b, n), jnp.float32)
+
+    def body(t, carry):
+        mind, sel, order, edges, q = carry
+        mind, ev, nq = kops.prim_stream_step(
+            Xp, auxp, q, mind, sel, metric=metric, use_pallas=True,
+            block=bn)
+        return (mind, sel.at[lane, nq].set(True),
+                order.at[:, t].set(nq), edges.at[:, t].set(ev), nq)
+
+    _, _, order, edges, _ = lax.fori_loop(
+        1, n, body, (mind0, sel0, order0, edges0, i0))
+    return FlashVATResult(order=order, edges=edges)
 
 
 def block_structure_score(rstar: jax.Array, threshold: float | None = None):

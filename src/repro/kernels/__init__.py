@@ -4,6 +4,9 @@ pairwise_dist — MXU-tiled Euclidean distance matrix (the O(n^2 d) stage
                 the paper's Cython version optimizes with flattened
                 loops), plus the batched (b, n, d)-stack grid variant
 prim_update   — fused masked block-argmin for Prim's greedy selection
+prim_stream   — fused matrix-free Prim step (Flash-VAT): distance-tile
+                recompute + frontier min-update + masked block-argmin
+                in one pass; the (n, n) matrix is never formed
 ivat_update   — fused VMEM-resident iVAT recurrence (Havens & Bezdek
                 row update; replaces the XLA ``at[].set`` copies)
 ops           — jit'd dispatch wrappers (pallas | xla), the only front

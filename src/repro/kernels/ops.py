@@ -13,6 +13,8 @@ from repro.kernels import ref
 from repro.kernels.ivat_update import MAX_FUSED_N, ivat_from_vat_pallas
 from repro.kernels.pairwise_dist import (pairwise_dist_pallas,
                                          pairwise_dist_pallas_batch)
+from repro.kernels.prim_stream import (prim_stream_step_pallas,
+                                       prim_stream_step_pallas_batch)
 from repro.kernels.prim_update import masked_argmin_pallas
 
 
@@ -93,6 +95,49 @@ def masked_argmin(vals: jax.Array, mask: jax.Array, *,
         return masked_argmin_pallas(vals, mask, block=block,
                                     interpret=_interpret())
     return ref.masked_argmin_ref(vals, mask)
+
+
+def prim_stream_step(X: jax.Array, aux: jax.Array, q: jax.Array,
+                     mind: jax.Array, selected: jax.Array, *,
+                     metric: str = "euclidean", use_pallas: bool = False,
+                     block: int = 1024):
+    """One fused matrix-free Prim step (the Flash-VAT hot loop).
+
+    Recomputes pivot q's distance row tile-by-tile, folds it into the
+    frontier min-update, and returns the masked argmin over the updated
+    frontier — the next Prim vertex — without ever forming the (n, n)
+    matrix.  Solo (n,)-state and batched (b, n)-state inputs both work:
+    the batched Pallas path uses the slab-of-1 grid, the batched XLA
+    path a vmap of the reference step.
+
+    Args:
+      X: (n, d) or (b, n, d) float — data points.  The Pallas path wants
+        these pre-padded by ``kernels.prim_stream.pad_points`` (padding
+        per step would copy X n times); the XLA path is pad-agnostic.
+      aux: (n,) or (b, n) float32 — ``ref.metric_aux_ref`` of X.
+      q: i32 scalar or (b,) — pivot(s) selected by the previous step.
+      mind: like aux — frontier distances (padded lanes +inf).
+      selected: bool, like aux — visited mask (padded lanes True).
+      metric: one of ``kernels.ref.METRICS``.
+      use_pallas: fused Pallas kernel vs the XLA reference step.
+      block: Pallas VMEM tile length (must divide the padded n).
+
+    Returns:
+      (new_mind, edge, next) with the input's leading shape — see
+      ``ref.prim_stream_step_ref``.
+    """
+    batched = X.ndim == 3
+    if use_pallas:
+        step = (prim_stream_step_pallas_batch if batched
+                else prim_stream_step_pallas)
+        return step(X, aux, q, mind, selected, metric=metric, block=block,
+                    interpret=_interpret())
+    if batched:
+        return jax.vmap(
+            lambda Xi, ai, qi, mi, si: ref.prim_stream_step_ref(
+                Xi, ai, qi, mi, si, metric=metric)
+        )(X, aux, q, mind, selected)
+    return ref.prim_stream_step_ref(X, aux, q, mind, selected, metric=metric)
 
 
 def ivat_from_vat(rstar: jax.Array, *, use_pallas: bool = False) -> jax.Array:

@@ -113,6 +113,96 @@ def row_dissim_ref(X: jax.Array, x: jax.Array, *,
     return jnp.clip(1.0 - (Xf @ xf) / denom, 0.0, 2.0)
 
 
+def metric_aux_ref(X: jax.Array, *, metric: str = "euclidean") -> jax.Array:
+    """Per-point auxiliary vector the Gram-trick pivot row needs.
+
+    Args:
+      X: (n, d) float — data points (any leading batch axes are fine).
+      metric: one of ``METRICS``.
+
+    Returns:
+      (n,) float32 — squared norms for euclidean/sqeuclidean, norms for
+      cosine, zeros for manhattan (which needs no precomputation).
+      Computed once, it turns every later pivot row into O(n d) work
+      with no per-row norm recomputation.
+    """
+    check_metric(metric)
+    Xf = X.astype(jnp.float32)
+    if metric in ("euclidean", "sqeuclidean"):
+        return jnp.sum(Xf * Xf, axis=-1)
+    if metric == "cosine":
+        return jnp.sqrt(jnp.sum(Xf * Xf, axis=-1))
+    return jnp.zeros(Xf.shape[:-1], jnp.float32)
+
+
+def pivot_row_ref(X: jax.Array, aux: jax.Array, q: jax.Array, *,
+                  metric: str = "euclidean") -> jax.Array:
+    """Row q of the pairwise dissimilarity matrix, never materializing it.
+
+    The matrix-free Prim engine's inner product: one (n, d) x (d,) cross
+    term plus O(n) elementwise work per call.  Unlike ``row_dissim_ref``
+    (direct differences — the more accurate formula), this path uses the
+    *same Gram-trick decomposition as* ``pairwise_dissim_ref``, so its
+    values are bitwise-identical to the materialized matrix's row q —
+    the property ``core.vat.vat_matrix_free`` needs to reproduce
+    ``vat_order``'s ordering exactly.  Do not mix the two row oracles
+    inside one bitwise contract.
+
+    Args:
+      X: (n, d) float — data points.
+      aux: (n,) float32 — ``metric_aux_ref(X, metric=metric)``.
+      q: int scalar (traced ok) — the pivot row index.
+      metric: one of ``METRICS``.
+
+    Returns:
+      (n,) float32 — dissimilarity of every point to point q.  The
+      self-entry [q] is computed, not forced to zero; callers that need
+      the materialized matrix's exact zero diagonal must mask it.
+    """
+    check_metric(metric)
+    Xf = X.astype(jnp.float32)
+    xq = jnp.take(Xf, q, axis=0)
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(Xf - xq[None, :]), axis=-1)
+    cross = Xf @ xq
+    aq = jnp.take(aux, q)
+    if metric == "cosine":
+        denom = jnp.maximum(aux * aq, 1e-12)
+        return jnp.clip(1.0 - cross / denom, 0.0, 2.0)
+    sq = jnp.maximum(aux + aq - 2.0 * cross, 0.0)
+    return jnp.sqrt(sq) if metric == "euclidean" else sq
+
+
+def prim_stream_step_ref(X: jax.Array, aux: jax.Array, q: jax.Array,
+                         mind: jax.Array, selected: jax.Array, *,
+                         metric: str = "euclidean"):
+    """One fused matrix-free Prim step — the XLA oracle for prim_stream.
+
+    Recomputes pivot q's distance row, folds it into the frontier with a
+    min-update, and returns the masked argmin over the *updated* frontier
+    — the next vertex Prim visits.  Chaining n-1 of these reproduces
+    ``core.vat.vat_order`` on the materialized matrix bitwise (the row
+    values are bitwise-identical via ``pivot_row_ref``, and the argmin
+    shares jnp.argmin's first-index tie-breaking).
+
+    Args:
+      X: (n, d) float — data points.
+      aux: (n,) float32 — ``metric_aux_ref`` of X.
+      q: int scalar — the pivot selected by the previous step.
+      mind: (n,) float32 — frontier distances *before* folding in q's row.
+      selected: (n,) bool — True lanes are already in the MST (q included).
+      metric: one of ``METRICS``.
+
+    Returns:
+      (new_mind (n,) f32, edge f32 scalar — the masked min (the MST edge
+      weight of the next vertex), next (i32 scalar) — the next vertex).
+    """
+    row = pivot_row_ref(X, aux, q, metric=metric)
+    new_mind = jnp.minimum(mind, row)
+    edge, nxt = masked_argmin_ref(new_mind, selected)
+    return new_mind, edge, nxt
+
+
 def masked_argmin_ref(vals: jax.Array, mask: jax.Array):
     """(min value, argmin index) of vals where mask is False.
 

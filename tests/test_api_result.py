@@ -26,7 +26,8 @@ def _blobs(n=120, k=2, d=3, seed=0, sep=9.0):
 
 # ----------------------------------------------- uniform result shape ----
 
-@pytest.mark.parametrize("method", ["vat", "ivat", "svat", "bigvat"])
+@pytest.mark.parametrize("method", ["vat", "ivat", "svat", "flashvat",
+                                    "bigvat"])
 def test_every_rung_returns_tendency_result(method):
     X = _blobs()
     fv = FastVAT(method=method, sample_size=32).fit(X)
@@ -198,12 +199,15 @@ def test_registry_drives_dispatch_and_extension():
 
 def test_select_method_is_capability_driven():
     assert select_method(SMALL_N) == "vat"
-    assert select_method(SMALL_N + 1) == "svat"
-    assert select_method(MEDIUM_N) == "svat"
+    # flashvat (exact, matrix-free) owns svat's former auto window
+    assert select_method(SMALL_N + 1) == "flashvat"
+    assert select_method(MEDIUM_N) == "flashvat"
     assert select_method(MEDIUM_N + 1) == "bigvat"
     assert select_method(100, batched=True) == "vat"
+    assert select_method(SMALL_N + 1, batched=True, strict=True) \
+        == "flashvat"
     with pytest.raises(LookupError):
-        select_method(SMALL_N + 1, batched=True, strict=True)
+        select_method(MEDIUM_N + 1, batched=True, strict=True)
 
 
 def test_rung_capability_flags():
@@ -211,6 +215,9 @@ def test_rung_capability_flags():
     assert registry.get_rung("ivat").supports_precomputed
     assert not registry.get_rung("bigvat").supports_batch
     assert not registry.get_rung("svat").supports_precomputed
+    assert registry.get_rung("flashvat").supports_batch
+    assert not registry.get_rung("flashvat").supports_precomputed
+    assert registry.get_rung("svat").auto_threshold is None  # opt-in now
     assert registry.get_rung("dvat").check is not None
     with pytest.raises(KeyError, match="registered"):
         registry.get_rung("nope")

@@ -94,8 +94,8 @@ def test_bigvat_accepts_memmap(tmp_path):
 
 def test_select_method_thresholds():
     assert select_method(SMALL_N) == "vat"
-    assert select_method(SMALL_N + 1) == "svat"
-    assert select_method(MEDIUM_N) == "svat"
+    assert select_method(SMALL_N + 1) == "flashvat"
+    assert select_method(MEDIUM_N) == "flashvat"
     assert select_method(MEDIUM_N + 1) == "bigvat"
 
 
@@ -107,9 +107,20 @@ def test_fastvat_auto_routes_vat():
     assert sorted(fv.order().tolist()) == list(range(400))
 
 
-def test_fastvat_auto_routes_svat():
+def test_fastvat_auto_routes_flashvat():
+    """The mid-size window now gets *exact* matrix-free VAT, not the
+    sampled approximation — the Flash-VAT promotion."""
     X, _ = _blobs(5_000)
     fv = FastVAT(sample_size=64).fit(X)
+    assert fv.method_resolved == "flashvat"
+    assert sorted(fv.order().tolist()) == list(range(5_000))  # full, exact
+    assert fv.image(resolution=128).shape == (128, 128)
+    assert len(fv.sample_indices()) == 64
+
+
+def test_fastvat_explicit_svat_still_works():
+    X, _ = _blobs(5_000)
+    fv = FastVAT(method="svat", sample_size=64).fit(X)
     assert fv.method_resolved == "svat"
     assert fv.image().shape == (64, 64)
     assert len(fv.sample_indices()) == 64

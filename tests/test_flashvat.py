@@ -1,0 +1,209 @@
+"""Flash-VAT: the matrix-free fused Prim engine (ISSUE 4 tentpole).
+
+Pins the whole contract: per-metric *bitwise* ordering agreement with
+``vat_from_dist`` on the materialized matrix, Pallas-vs-XLA fused-step
+equivalence, batched agreement, the no-(n, n)-intermediate property
+(both a compiled memory-analysis bound and a pairwise-dist tripwire,
+mirroring ``tests/test_bigvat.py``), the ``use_pallas`` threading from
+``vat()``/``vat_batch()`` into ``vat_order``'s masked argmin, and the
+n = 100 000 exact-fit-on-CPU acceptance run."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.api import FastVAT
+from repro.kernels import ops as kops
+from repro.kernels.ref import METRICS
+
+
+def _points(n, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def _blobs(n, k=3, d=2, seed=0, sep=40.0):
+    rng = np.random.default_rng(seed)
+    centers = (sep * rng.normal(size=(k, d))).astype(np.float32)
+    lab = rng.integers(0, k, size=n)
+    X = centers[lab] + rng.normal(size=(n, d)).astype(np.float32)
+    return jnp.asarray(X.astype(np.float32)), lab.astype(np.int32)
+
+
+# ------------------------------------------------ bitwise ordering oracle ----
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [64, 257, 1024])
+def test_matrix_free_ordering_bitwise_identical(metric, n):
+    """The acceptance contract: for every metric, the matrix-free order
+    equals ``vat_from_dist`` on the materialized matrix bit for bit —
+    same Gram-trick rows, same seed rule, same tie-breaking."""
+    X = _points(n, d=3 + n % 5, seed=n)
+    R = kops.pairwise_dist(X, metric=metric)
+    want = core.vat_from_dist(R).order
+    got = core.vat_matrix_free(X, metric=metric).order
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_matrix_free_pallas_step_matches_xla(metric):
+    """The fused Pallas kernel (interpret mode on CPU) drives the same
+    ordering as the XLA reference step."""
+    X = _points(257, d=6, seed=11)
+    a = core.vat_matrix_free(X, metric=metric).order
+    b = core.vat_matrix_free(X, metric=metric, use_pallas=True,
+                             block=64).order
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_matrix_free_edges_are_prim_frontier_minima():
+    """edges[t] is the MST edge weight that admitted vertex order[t]:
+    the min dissimilarity to the already-visited prefix."""
+    X = _points(120, d=4, seed=2)
+    R = np.asarray(kops.pairwise_dist(X))
+    res = core.vat_matrix_free(X)
+    order = np.asarray(res.order)
+    edges = np.asarray(res.edges)
+    assert edges[0] == 0.0
+    for t in range(1, len(order)):
+        want = R[order[t], order[:t]].min()
+        assert edges[t] == pytest.approx(want, abs=1e-6)
+
+
+def test_matrix_free_blobs_order_keeps_clusters_contiguous():
+    X, lab = _blobs(900, k=4, seed=3)
+    order = np.asarray(core.vat_matrix_free(X).order)
+    assert sorted(order.tolist()) == list(range(len(lab)))
+    runs = 1 + int(np.sum(lab[order][1:] != lab[order][:-1]))
+    assert runs == 4
+
+
+# ------------------------------------------------------ batched agreement ----
+
+def test_matrix_free_batch_agrees_with_solo():
+    Xb = jnp.stack([_points(150, d=6, seed=s) for s in range(4)])
+    xla = core.vat_matrix_free_batch(Xb)
+    pal = core.vat_matrix_free_batch(Xb, use_pallas=True, block=64)
+    for i in range(4):
+        solo = core.vat_matrix_free(Xb[i])
+        np.testing.assert_array_equal(np.asarray(xla.order[i]),
+                                      np.asarray(solo.order))
+        np.testing.assert_array_equal(np.asarray(pal.order[i]),
+                                      np.asarray(solo.order))
+
+
+# ------------------------------------------- no (n, n) intermediate, ever ----
+
+def test_matrix_free_never_calls_pairwise_dist(monkeypatch):
+    """Tripwire mirroring test_bigvat: the engine must not reach the
+    materializing kernel at all (a fresh shape forces a fresh trace, so
+    the patched function would be captured if it were used)."""
+    def boom(*a, **k):
+        raise AssertionError("vat_matrix_free materialized a matrix")
+    monkeypatch.setattr(kops, "pairwise_dist", boom)
+    monkeypatch.setattr(kops, "pairwise_dist_batch", boom)
+    X = _points(333, d=3, seed=4)
+    order = np.asarray(core.vat_matrix_free(X).order)
+    assert sorted(order.tolist()) == list(range(333))
+
+
+def test_matrix_free_compiled_memory_is_not_quadratic():
+    """Memory-shape assertion on the *compiled* program: XLA's own
+    accounting shows temp + output far below one (n, n) f32 buffer."""
+    n = 32_768
+    X = jnp.zeros((n, 4), jnp.float32)
+    c = jax.jit(lambda A: core.vat_matrix_free(A)).lower(X).compile()
+    ma = c.memory_analysis()
+    nn_bytes = n * n * 4
+    assert ma.temp_size_in_bytes + ma.output_size_in_bytes < nn_bytes // 8, (
+        ma.temp_size_in_bytes, ma.output_size_in_bytes, nn_bytes)
+
+
+def test_flashvat_100k_exact_fit_on_cpu():
+    """The headline acceptance run: an exact n = 100 000 VAT ordering on
+    CPU — a size where the materialized matrix would need 40 GB."""
+    n = 100_000
+    X, lab = _blobs(n, k=3, d=2, seed=5)
+    res = jax.block_until_ready(core.vat_matrix_free(X))
+    order = np.asarray(res.order)
+    assert sorted(order.tolist()) == list(range(n))
+    runs = 1 + int(np.sum(lab[order][1:] != lab[order][:-1]))
+    assert runs == 3          # exact ordering keeps true clusters contiguous
+
+
+# ------------------------------------------------------------ rung surface ----
+
+def test_flashvat_rung_renders_like_bigvat():
+    X, lab = _blobs(3_000, k=3, seed=2)
+    fv = FastVAT(method="flashvat", sample_size=64).fit(np.asarray(X))
+    res = fv.result
+    assert sorted(fv.order().tolist()) == list(range(3_000))
+    assert np.asarray(res.rstar).shape == (64, 64)
+    assert res.ivat_image is not None
+    assert int(np.asarray(res.group_sizes).sum()) == 3_000
+    assert np.asarray(res.extension_labels).shape == (3_000,)
+    img = fv.image(resolution=100)
+    assert img.shape == (100, 100)
+    rep = fv.assess()
+    assert rep["method"] == "flashvat" and rep["k_est"] == 3
+    assert rep["clustered"]
+
+
+def test_flashvat_rejects_precomputed():
+    D = np.zeros((32, 32), np.float32)
+    with pytest.raises(ValueError, match="precomputed"):
+        FastVAT(method="flashvat", metric="precomputed").fit(D)
+
+
+def test_flashvat_fit_many_matches_solo():
+    Xs = np.stack([np.asarray(_blobs(400, seed=s)[0]) for s in (7, 8)])
+    fb = FastVAT(method="flashvat", sample_size=32).fit_many(Xs)
+    assert fb.image().shape[0] == 2
+    for i in range(2):
+        solo = FastVAT(method="flashvat", sample_size=32).fit(Xs[i])
+        np.testing.assert_array_equal(fb.order()[i], solo.order())
+    reps = fb.assess()
+    assert [r["batch_index"] for r in reps] == [0, 1]
+
+
+# ------------------------------- use_pallas threading into vat_order ----
+
+def test_vat_threads_use_pallas_into_argmin(monkeypatch):
+    """ISSUE 4 satellite: vat(use_pallas=True) must reach the fused
+    ``prim_update`` masked-argmin kernel — it used to stop at the
+    distance matrix, leaving the kernel unreachable from the public API."""
+    calls = []
+    real = kops.masked_argmin
+
+    def recording(vals, mask, **kw):
+        calls.append(kw.get("use_pallas", False))
+        return real(vals, mask, **kw)
+
+    monkeypatch.setattr(kops, "masked_argmin", recording)
+    X = _points(97, d=3, seed=9)       # fresh shape => fresh trace
+    core.vat(X, use_pallas=True)
+    assert calls and all(calls)
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+def test_vat_pallas_argmin_ordering_equivalence(metric):
+    """Pallas-vs-XLA ordering equivalence through the public vat()."""
+    X = _points(130, d=4, seed=10)
+    a = core.vat(X, metric=metric)
+    b = core.vat(X, metric=metric, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a.order), np.asarray(b.order))
+
+
+def test_vat_batch_pallas_argmin_ordering_equivalence():
+    Xb = jnp.stack([_points(90, d=3, seed=s) for s in range(3)])
+    a = core.vat_batch(Xb)
+    b = core.vat_batch(Xb, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a.order), np.asarray(b.order))
+
+
+def test_vat_from_dist_pallas_argmin_param():
+    R = kops.pairwise_dist(_points(75, d=3, seed=12))
+    a = core.vat_from_dist(R)
+    b = core.vat_from_dist(R, use_pallas_argmin=True)
+    np.testing.assert_array_equal(np.asarray(a.order), np.asarray(b.order))

@@ -87,3 +87,21 @@ def test_ivat_fallback_above_vmem_ceiling():
     a = ops.ivat_from_vat(rstar, use_pallas=True)   # falls back
     b = ops.ivat_from_vat(rstar)
     assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _seam_sizes():
+    from repro.kernels.ivat_update import MAX_FUSED_N
+    return [MAX_FUSED_N - 1, MAX_FUSED_N, MAX_FUSED_N + 1]
+
+
+@pytest.mark.parametrize("n", _seam_sizes())
+def test_ivat_vmem_seam_bitwise(n):
+    """ISSUE 4 satellite: straddle the fused kernel's VMEM ceiling.
+    At MAX_FUSED_N−1 and MAX_FUSED_N the ``use_pallas=True`` dispatch
+    runs the fused kernel right at its slab budget; at MAX_FUSED_N+1 it
+    silently falls back to XLA — all three must agree with the XLA path
+    bit for bit, so the seam is invisible to callers."""
+    rstar = _rstar(n, n, 3)
+    a = np.asarray(ops.ivat_from_vat(rstar))
+    b = np.asarray(ops.ivat_from_vat(rstar, use_pallas=True))
+    assert np.array_equal(a, b)
