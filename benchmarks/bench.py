@@ -1,9 +1,10 @@
 """Reproducible benchmark harness -> machine-readable BENCH_<stamp>.json.
 
-Where ``benchmarks/run.py`` prints the paper tables as CSV for humans,
-this harness snapshots a run as a schema-versioned JSON document (the
-repo's perf trajectory — see "BENCH_*.json trajectory" in
-benchmarks/README.md), adding two tables the paper doesn't have:
+The ONE benchmark entry point (the legacy CSV printer ``benchmarks/
+run.py`` was folded in here — ISSUE 5 satellite): every paper table plus
+the repo's own engineering tables snapshot into a schema-versioned JSON
+document (the perf trajectory — see "BENCH_*.json trajectory" in
+benchmarks/README.md):
 
   batched — the batched VAT engine: one compiled ``vat_batch`` /
             ``ivat_batch`` program over a (b, n, d) stack vs a Python
@@ -19,6 +20,13 @@ benchmarks/README.md), adding two tables the paper doesn't have:
             (ISSUE 4): wall time AND peak working-set bytes from XLA's
             compiled-program memory accounting, the table that shows the
             O(n^2) -> O(n·d) memory drop buys exact VAT at bigvat sizes.
+  turbo   — the ISSUE 5 headline: the PR-4 stepwise matrix-free engine
+            vs the persistent Turbo engine vs the sharded engine on the
+            same points — wall time, peak_bytes, and the static dispatch
+            census (how many pallas_calls, how many outside any loop)
+            of each engine's Pallas variant.
+  table2/table3 — the paper's Hopkins and clustering-alignment quality
+            tables (us_per_call 0 — they record accuracy, not speed).
 
 Every row records the ``metric`` it was measured under and (schema v3)
 its ``peak_bytes`` — XLA temp + output allocation of the measured
@@ -46,7 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-TABLES = ("table1", "table4", "batched", "ivat", "metrics", "flash")
+TABLES = ("table1", "table2", "table3", "table4", "batched", "ivat",
+          "metrics", "flash", "turbo")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
@@ -60,6 +69,10 @@ _FLASH_SIZES = (2_048, 8_192)
 # (br caps at 1024) is a strict subset of the matrix — below ~2k the
 # row records no memory win and can't catch a regression
 _FLASH_SIZES_SMOKE = (4_096,)
+_TURBO_SIZES = (8_192,)
+_TURBO_SIZES_SMOKE = (2_048,)
+# paper datasets the CI-sized table2/table3 keep (mirrors table1 smoke)
+_QUALITY_DATASETS_SMOKE = ("iris", "blobs")
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -110,6 +123,30 @@ def bench_table1(smoke: bool, reps: int) -> list[dict]:
                          speedup_vs_python=round(r["speedup_jax"], 2)))
         rows.append(_row("table1", f"{r['dataset']}/pallas_interpret",
                          r["pallas_interp_s"], mode="interpret"))
+    return rows
+
+
+def bench_table2(smoke: bool, reps: int) -> list[dict]:
+    from benchmarks import vat_tables as T
+    datasets = _QUALITY_DATASETS_SMOKE if smoke else None
+    return [_row("table2", f"{r['dataset']}/hopkins", 0.0,
+                 hopkins=round(r["hopkins"], 4))
+            for r in T.table2(datasets=datasets)]
+
+
+def bench_table3(smoke: bool, reps: int) -> list[dict]:
+    from benchmarks import vat_tables as T
+    datasets = _QUALITY_DATASETS_SMOKE if smoke else None
+    rows = []
+    for r in T.table3(datasets=datasets):
+        tag = r["dataset"]
+        rows.append(_row("table3", f"{tag}/vat", 0.0,
+                         block_score=round(r["vat_block_score"], 3),
+                         k_est=r["vat_k_est"]))
+        rows.append(_row("table3", f"{tag}/kmeans", 0.0,
+                         ari=round(r["kmeans_ari"], 3)))
+        rows.append(_row("table3", f"{tag}/dbscan", 0.0,
+                         ari=round(r["dbscan_ari"], 3)))
     return rows
 
 
@@ -223,9 +260,81 @@ def bench_flash(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
-_BENCHES = {"table1": bench_table1, "table4": bench_table4,
+def bench_turbo(smoke: bool, reps: int) -> list[dict]:
+    """Stepwise vs persistent vs sharded matrix-free VAT (ISSUE 5).
+
+    All three engines produce bitwise-identical orderings (pinned in
+    tests/test_turbo.py); this table records what the persistent rewrite
+    buys: wall time (XLA engines — the honest CPU numbers; compiled
+    megakernel timings belong on TPU hardware), peak working-set bytes,
+    and the static dispatch census of each engine's Pallas variant —
+    the stepwise engine re-enters a pallas_call every Prim step, the
+    Turbo engine compiles to ONE loop-free pallas_call.
+    """
+    from repro import core
+    from repro.core.vat import _streamed_seed_pivot
+    from repro.kernels import ops as kops
+    rows = []
+    for n in (_TURBO_SIZES_SMOKE if smoke else _TURBO_SIZES):
+        rng = np.random.default_rng(n)
+        X = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+        tag = f"n{n}"
+
+        def stepwise(A):
+            return core.vat_matrix_free(A, turbo=False).order
+
+        def persistent(A):
+            return core.vat_matrix_free(A).order
+
+        # the streamed seed scan is SHARED by both engines (and was
+        # itself sped ~2.5x this PR); measuring it separately lets the
+        # rows report the traversal-only speedup the engine swap buys
+        t_seed = _time(jax.jit(lambda A: _streamed_seed_pivot(
+            A, metric="euclidean")), X, reps=reps)
+
+        t_sw = _time(stepwise, X, reps=reps)
+        pb_sw = _peak_bytes(stepwise, X)
+        d_sw = kops.kernel_dispatch_stats(
+            lambda A: core.vat_matrix_free(A, turbo=False,
+                                           use_pallas=True), X)
+        rows.append(_row("turbo", f"{tag}/stepwise", t_sw, peak_bytes=pb_sw,
+                         seed_us=round(t_seed * 1e6, 1),
+                         pallas_calls=d_sw["pallas_calls"],
+                         persistent_calls=d_sw["persistent"]))
+
+        t_tb = _time(persistent, X, reps=reps)
+        pb_tb = _peak_bytes(persistent, X)
+        d_tb = kops.kernel_dispatch_stats(
+            lambda A: core.vat_matrix_free(A, use_pallas=True), X)
+        rows.append(_row("turbo", f"{tag}/persistent", t_tb,
+                         peak_bytes=pb_tb,
+                         seed_us=round(t_seed * 1e6, 1),
+                         pallas_calls=d_tb["pallas_calls"],
+                         persistent_calls=d_tb["persistent"],
+                         speedup_vs_stepwise=round(t_sw / t_tb, 2),
+                         traversal_speedup_vs_stepwise=round(
+                             (t_sw - t_seed) / max(t_tb - t_seed, 1e-9),
+                             2)))
+
+        if core.HAS_DISTRIBUTED:
+            mesh = jax.make_mesh((1,), ("data",))
+
+            def sharded(A):
+                return core.vat_matrix_free_sharded(A, mesh).order
+
+            t_sh = _time(sharded, X, reps=reps)
+            rows.append(_row("turbo", f"{tag}/sharded_1dev", t_sh,
+                             peak_bytes=_peak_bytes(sharded, X),
+                             devices=len(jax.devices()),
+                             speedup_vs_stepwise=round(t_sw / t_sh, 2)))
+    return rows
+
+
+_BENCHES = {"table1": bench_table1, "table2": bench_table2,
+            "table3": bench_table3, "table4": bench_table4,
             "batched": bench_batched, "ivat": bench_ivat,
-            "metrics": bench_metrics, "flash": bench_flash}
+            "metrics": bench_metrics, "flash": bench_flash,
+            "turbo": bench_turbo}
 assert set(_BENCHES) == set(TABLES)
 
 

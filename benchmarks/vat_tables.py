@@ -75,9 +75,9 @@ def table1(naive_cap: int = 400, datasets=None, reps: int = 3):
     return rows
 
 
-def table2():
+def table2(datasets=None):
     rows = []
-    for name in DATASETS:
+    for name in (datasets or DATASETS):
         X, _ = make_dataset(name)
         h = float(core.hopkins(jnp.asarray(X), jax.random.PRNGKey(0)))
         rows.append({"dataset": name, "hopkins": h})
@@ -117,9 +117,9 @@ def table4(sizes=(20_000, 50_000, 100_000), k_true: int = 5, reps: int = 1):
     return rows
 
 
-def table3():
+def table3(datasets=None):
     rows = []
-    for name in DATASETS:
+    for name in (datasets or DATASETS):
         X, y = make_dataset(name)
         Xj = jnp.asarray(X)
         res = core.vat(Xj)

@@ -12,14 +12,15 @@ bitwise-identical to materialized VAT (pinned in tests/test_flashvat.py)
 
 The demo fits 3 Gaussian blobs through the ``FastVAT`` facade with
 ``method="flashvat"`` (auto-selection picks flashvat for
-2_048 < n <= 20_000; at n = 1e5 the default is still the faster,
+2_048 < n <= 50_000; at n = 1e5 the default is still the faster,
 approximate bigvat, so we opt in), prints the band-rendered VAT image,
 the tendency report, and the exactness evidence: every ground-truth
 cluster is one contiguous run of the full-n ordering.
 
 Run:  PYTHONPATH=src python examples/flashvat_demo.py
-      (one to three minutes on CPU: exact VAT is O(n^2 d) work — the
-      matrix-free engine changes the memory bound, not the flop count)
+      (~1 minute on CPU with the Turbo persistent engine — ISSUE 5 cut
+      the 100-170 s stepwise traversal to ~60 s; exact VAT is still
+      O(n^2 d) work, the engines change the constant, not the bound)
 """
 import time
 

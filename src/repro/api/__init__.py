@@ -20,8 +20,9 @@ Most callers want the package root instead: ``from repro import FastVAT``.
 from repro.api import registry
 from repro.api.facade import METHODS, FastVAT, assess_tendency
 from repro.api.metrics import COMPUTED_METRICS, METRICS, validate_metric
-from repro.api.registry import (MEDIUM_N, SMALL_N, Rung, RungOptions,
-                                get_rung, register, select_method)
+from repro.api.registry import (FLASH_SHARD_MIN_N, MEDIUM_N, SMALL_N, Rung,
+                                RungOptions, get_rung, register,
+                                select_method)
 from repro.api.result import (ResultMeta, TendencyReport, TendencyResult)
 
 __all__ = [
@@ -29,5 +30,5 @@ __all__ = [
     "TendencyResult", "TendencyReport", "ResultMeta",
     "METRICS", "COMPUTED_METRICS", "validate_metric",
     "Rung", "RungOptions", "register", "get_rung", "registry",
-    "select_method", "METHODS", "SMALL_N", "MEDIUM_N",
+    "select_method", "METHODS", "SMALL_N", "MEDIUM_N", "FLASH_SHARD_MIN_N",
 ]

@@ -3,7 +3,9 @@
 Picks the right scaling rung automatically (see ``docs/scaling.md``):
 
   n <= SMALL_N  (2_048)   exact ``vat``   — O(n^2) matrix fits easily
-  n <= MEDIUM_N (20_000)  ``flashvat``    — exact, matrix-free, O(n·d)
+  n <= MEDIUM_N (50_000)  ``flashvat``    — exact, matrix-free, O(n·d),
+                          Turbo persistent engine (auto-sharded on a
+                          multi-device mesh)
   larger                  ``bigvat``      — clusiVAT pipeline, no (n, n)
 
 ``method`` overrides come from the rung registry (``repro.api.registry``)
@@ -80,13 +82,20 @@ class FastVAT:
     block:        row-block size of bigvat's tiled assignment pass.
     use_pallas:   route distance/iVAT work through the Pallas kernels
                   (interpret mode on CPU; compiled on TPU).
+    turbo:        flashvat traversal engine — None (default) auto-selects
+                  the persistent Turbo engine (and the sharded engine on
+                  a multi-device mesh); True forces the solo persistent
+                  engine (opting out of auto-sharding); False pins the
+                  stepwise engine.  Orderings are identical either way;
+                  only the wall clock moves.
     seed:         the single seed every sampling path (device and host
                   side) derives from — see ``ResultMeta``.
     """
 
     def __init__(self, method: str = "auto", *, metric: str = "euclidean",
                  sample_size: int = 256, block: int = DEFAULT_BLOCK,
-                 use_pallas: bool = False, seed: int = 0):
+                 use_pallas: bool = False, turbo: bool | None = None,
+                 seed: int = 0):
         methods = registry.methods()
         if method not in methods:
             raise ValueError(f"method must be one of {methods}, "
@@ -97,6 +106,7 @@ class FastVAT:
         self.sample_size = sample_size
         self.block = block
         self.use_pallas = use_pallas
+        self.turbo = turbo
         self.seed = seed
         self.method_resolved: str | None = None
         self.result: TendencyResult | None = None
@@ -114,7 +124,8 @@ class FastVAT:
                           use_pallas=self.use_pallas)
 
     def _options(self) -> RungOptions:
-        return RungOptions(sample_size=self.sample_size, block=self.block)
+        return RungOptions(sample_size=self.sample_size, block=self.block,
+                           turbo=self.turbo)
 
     # ------------------------------------------------------------- fit ----
 

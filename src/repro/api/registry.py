@@ -45,16 +45,30 @@ from repro.kernels import ops as kops
 #: Auto-selection thresholds (see docs/scaling.md): materialized exact
 #: VAT below SMALL_N, matrix-free exact VAT (flashvat) to MEDIUM_N,
 #: Big-VAT beyond (sVAT — the sampled approximation flashvat obsoletes
-#: in this window — stays registered as an opt-in rung).
+#: in this window — stays registered as an opt-in rung).  The Turbo
+#: persistent engine (ISSUE 5) cut flashvat's per-fit wall time ~4x, so
+#: its practical ceiling rose from 20k to 50k points.
 SMALL_N = 2_048
-MEDIUM_N = 20_000
+MEDIUM_N = 50_000
+
+#: Smallest n the flashvat rung auto-shards over a multi-device mesh;
+#: below it the per-step collectives cost more than they parallelize.
+FLASH_SHARD_MIN_N = 4_096
 
 
 class RungOptions(NamedTuple):
     """Facade knobs forwarded to a fitter (metric/seed/pallas ride on
-    ``ResultMeta``)."""
+    ``ResultMeta``).
+
+    ``turbo`` picks the flashvat traversal engine: None (default) lets
+    the rung auto-select — the persistent Turbo engine solo, the sharded
+    engine when more than one device is visible and n is worth the
+    collectives; True forces the SOLO persistent engine (opting out of
+    auto-sharding); False forces the PR-4 stepwise engine (solo only).
+    """
     sample_size: int = 256
     block: int = 4096
+    turbo: bool | None = None
 
 
 Fitter = Callable[[Any, ResultMeta, RungOptions], TendencyResult]
@@ -269,22 +283,47 @@ def _rep_ivat(Rrep: jax.Array, use_pallas: bool) -> jax.Array:
     return iv_s[rank][:, rank]
 
 
+def _flash_order(Xj, meta: ResultMeta, opts: RungOptions):
+    """The flashvat rung's engine auto-select (ISSUE 5).
+
+    ``opts.turbo`` None (auto) routes the Turbo persistent engine, or —
+    with more than one visible device and n past ``FLASH_SHARD_MIN_N``,
+    where the per-step collectives amortize — the X-row-sharded engine
+    (same orderings bit for bit, per-device memory divided by P).
+    ``turbo=True`` FORCES the solo persistent engine (the documented
+    escape hatch from auto-sharding); ``turbo=False`` pins the PR-4
+    stepwise engine.
+    """
+    devs = jax.devices()
+    if (opts.turbo is None and core.HAS_DISTRIBUTED and len(devs) > 1
+            and meta.n >= FLASH_SHARD_MIN_N):
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(devs), ("data",))
+        return core.vat_matrix_free_sharded(Xj, mesh, metric=meta.metric,
+                                            use_pallas=meta.use_pallas)
+    return core.vat_matrix_free(Xj, metric=meta.metric,
+                                use_pallas=meta.use_pallas,
+                                turbo=True if opts.turbo is None
+                                else opts.turbo)
+
+
 def _fit_flashvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
     """Flash-VAT: exact matrix-free ordering + bigvat-style tiled render.
 
     The ordering is the exact full-n VAT order (bitwise-identical to the
-    materialized path) at O(n·d) memory.  The image reuses bigvat's
-    rendering idea in reverse: m = sample_size representatives are taken
-    at the middle of m contiguous bands of the *exact* ordering, their
-    (m, m) dissimilarity matrix inherits that band order, and
-    ``TendencyResult.image`` expands it by the true band sizes — so the
-    picture shows all n points while only an (m, m) object ever exists.
-    The iVAT companion runs along the representatives' own Prim
-    traversal (see ``_rep_ivat``) and is re-indexed to the same bands.
+    materialized path) at O(n·d) memory — computed by the engine
+    ``_flash_order`` selects (Turbo persistent / sharded / stepwise).
+    The image reuses bigvat's rendering idea in reverse: m = sample_size
+    representatives are taken at the middle of m contiguous bands of the
+    *exact* ordering, their (m, m) dissimilarity matrix inherits that
+    band order, and ``TendencyResult.image`` expands it by the true band
+    sizes — so the picture shows all n points while only an (m, m)
+    object ever exists.  The iVAT companion runs along the
+    representatives' own Prim traversal (see ``_rep_ivat``) and is
+    re-indexed to the same bands.
     """
     Xj = _as_f32(data)
-    res = core.vat_matrix_free(Xj, metric=meta.metric,
-                               use_pallas=meta.use_pallas)
+    res = _flash_order(Xj, meta, opts)
     n, m = meta.n, min(opts.sample_size, meta.n)
     sizes, mids = _flash_groups(n, m)
     rep_idx = res.order[jnp.asarray(mids)]
@@ -303,8 +342,9 @@ def _fit_flashvat_batch(data, meta: ResultMeta,
                         opts: RungOptions) -> TendencyResult:
     """Batched Flash-VAT: one compiled program, per-lane exact orderings."""
     Xj = _as_f32(data)
-    res = core.vat_matrix_free_batch(Xj, metric=meta.metric,
-                                     use_pallas=meta.use_pallas)
+    res = core.vat_matrix_free_batch(
+        Xj, metric=meta.metric, use_pallas=meta.use_pallas,
+        turbo=True if opts.turbo is None else opts.turbo)
     n, m = meta.n, min(opts.sample_size, meta.n)
     sizes, mids = _flash_groups(n, m)
     rep_idx = res.order[:, jnp.asarray(mids)]                    # (b, m)

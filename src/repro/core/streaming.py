@@ -26,6 +26,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vat import vat as batch_vat
+from repro.kernels.ref import check_metric
+
+
+def _np_dissim_to_point(P: np.ndarray, x: np.ndarray,
+                        metric: str) -> np.ndarray:
+    """Host-side ``kernels.ref.row_dissim_ref`` twin: dissimilarity of
+    every reservoir row to one point, in the stream's metric.
+
+    The reservoir maintenance (absorb radius, eviction scoring) runs in
+    numpy on the host — routing these O(cap) probes through jit would
+    cost more in dispatch than they compute — so the metric dispatch is
+    mirrored here, formula for formula.
+    """
+    diff = P - x
+    if metric == "euclidean":
+        return np.sqrt(np.maximum(np.sum(diff * diff, axis=-1), 0.0))
+    if metric == "sqeuclidean":
+        return np.sum(diff * diff, axis=-1)
+    if metric == "manhattan":
+        return np.sum(np.abs(diff), axis=-1)
+    # cosine
+    norms = np.sqrt(np.sum(P * P, axis=-1))
+    nx = np.sqrt(np.sum(x * x))
+    denom = np.maximum(norms * nx, 1e-12)
+    return np.clip(1.0 - (P @ x) / denom, 0.0, 2.0)
+
+
+def _np_pairwise(P: np.ndarray, metric: str) -> np.ndarray:
+    """Host-side all-pairs twin of ``kernels.ref.pairwise_dissim_ref``:
+    one vectorized numpy expression per metric — ``_nn_dists`` runs once
+    per streamed point, so a Python loop over reservoir rows here would
+    dominate the whole ingest path."""
+    if metric in ("euclidean", "sqeuclidean"):
+        d2 = np.sum((P[:, None] - P[None]) ** 2, axis=-1)
+        return np.sqrt(np.maximum(d2, 0.0)) if metric == "euclidean" else d2
+    if metric == "manhattan":
+        return np.sum(np.abs(P[:, None] - P[None]), axis=-1)
+    # cosine
+    norms = np.sqrt(np.sum(P * P, axis=-1))
+    denom = np.maximum(norms[:, None] * norms[None, :], 1e-12)
+    return np.clip(1.0 - (P @ P.T) / denom, 0.0, 2.0)
 
 
 class StreamingVAT:
@@ -34,11 +75,21 @@ class StreamingVAT:
     >>> sv = StreamingVAT(cap=256, d=8)
     >>> for chunk in stream: sv.update(chunk)
     >>> img, order = sv.image(), sv.order()
+
+    ``metric`` threads end-to-end (ISSUE 5 satellite): the reservoir's
+    absorb/evict geometry AND the VAT queries all run in the chosen
+    dissimilarity, so a cosine stream thins by angle, not by L2.  The
+    absorb step still folds into a coordinate running mean — for
+    non-euclidean metrics that mean is the standard centroid surrogate,
+    which preserves counts exactly and perturbs geometry by at most the
+    thinning radius.
     """
 
-    def __init__(self, cap: int, d: int):
+    def __init__(self, cap: int, d: int, *, metric: str = "euclidean"):
+        check_metric(metric)
         self.cap = cap
         self.d = d
+        self.metric = metric
         self.pts = np.empty((0, d), np.float32)
         self.counts = np.empty((0,), np.int64)   # absorbed multiplicity
         self.n_seen = 0
@@ -66,11 +117,11 @@ class StreamingVAT:
             self.pts = np.concatenate([self.pts, x[None]])
             self.counts = np.concatenate([self.counts, [1]])
             return
-        d2 = np.sum((self.pts - x) ** 2, axis=1)
-        j = int(np.argmin(d2))
+        dist = _np_dissim_to_point(self.pts, x, self.metric)
+        j = int(np.argmin(dist))
         # thinning radius: current minimum pairwise separation estimate
         radius = self._min_sep()
-        if d2[j] <= radius ** 2:
+        if dist[j] <= radius:
             # absorb: x is redundant at the current resolution — fold it
             # into the slot's running mean with the OLD multiplicity as
             # the weight (mean_new = (mean * c + x) / (c + 1))
@@ -85,10 +136,9 @@ class StreamingVAT:
         self.counts[k] = 1
 
     def _nn_dists(self) -> np.ndarray:
-        P = self.pts
-        d2 = np.sum((P[:, None] - P[None]) ** 2, axis=-1)
-        np.fill_diagonal(d2, np.inf)
-        return np.sqrt(d2.min(axis=1))
+        D = _np_pairwise(self.pts, self.metric)
+        np.fill_diagonal(D, np.inf)
+        return D.min(axis=1)
 
     def _min_sep(self) -> float:
         return float(self._nn_dists().min())
@@ -97,7 +147,8 @@ class StreamingVAT:
 
     def _vat(self):
         if self._dirty or self._cached is None:
-            self._cached = batch_vat(jnp.asarray(self.pts))
+            self._cached = batch_vat(jnp.asarray(self.pts),
+                                     metric=self.metric)
             self._dirty = False
         return self._cached
 

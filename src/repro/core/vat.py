@@ -10,8 +10,13 @@ The paper accelerates three stages; each has a TPU-native counterpart here:
 
 ``vat_matrix_free`` is the Flash-VAT engine: the same exact ordering
 without ever materializing the (n, n) matrix — distance rows are
-recomputed tile-by-tile and reduced on the fly (kernels/prim_stream.py),
-so exact VAT runs at O(n·d) memory and n = 10^5 fits a laptop CPU.
+recomputed tile-by-tile and reduced on the fly, so exact VAT runs at
+O(n·d) memory and n = 10^5 fits a laptop CPU.  Two traversal engines
+share that contract: the default Turbo persistent engine (ISSUE 5 —
+the whole recurrence in ONE dispatch, ``kernels/prim_persist.py``
+megakernel or its single-scan XLA mirror) and the PR-4 stepwise engine
+(``turbo=False``, n−1 fused ``kernels/prim_stream.py`` steps); the
+mesh-sharded variant lives in ``core.distributed``.
 
 All functions are jit-able and differentiable-safe (no Python side effects).
 """
@@ -171,38 +176,49 @@ def vat_batch_from_dist(R: jax.Array, *,
 # Flash-VAT: matrix-free fused Prim ordering — exact VAT at O(n·d) memory.
 # ------------------------------------------------------------------------
 
-def _streamed_seed_pivot(Xf: jax.Array, *, metric: str) -> jax.Array:
+def _streamed_seed_pivot(Xf: jax.Array, *, metric: str,
+                         use_pallas: bool = False) -> jax.Array:
     """VAT's seed vertex i0 = argmax_i max_j R[i, j], streamed.
 
-    Reproduces ``vat_order``'s seed bitwise without forming R: row
-    blocks of the matrix are recomputed with the *same* oracle the
-    materialized path uses — ``kernels.ref.pairwise_dissim_ref`` on a
-    (br, d) row slice vs all of X produces floats identical to the full
-    matrix's rows, because every per-row reduction it performs is
-    row-independent — then reduced to per-row maxima on the spot and
-    discarded.  Peak intermediate is one (br, n) tile (times d for
-    manhattan's broadcast form), with br auto-clamped to keep it near
-    32 MiB.
+    Reproduces ``vat_order``'s seed bitwise without forming R: (bs, bs)
+    blocks of the matrix are recomputed through the one pairwise front
+    door — ``kernels.ops.pairwise_dist``, so ``use_pallas`` reaches the
+    MXU tile here exactly like everywhere else — and reduced to per-row
+    maxima on the spot.  Every per-entry value depends only on its own
+    (x_i, y_j) pair and f32 ``max`` is exact, so any blocking yields the
+    same row maxima bit for bit.
+
+    Blocks are square and sized to keep each in-flight tile near 4 MiB
+    (times d for manhattan's broadcast form, which shrinks the block):
+    cache-resident tiles let XLA's fused epilogue (diag mask + rowmax)
+    read the matmul output before it spills, ~2.5x over the previous
+    (br, n) strip mining at n = 8192.
     """
     n, d = Xf.shape
-    per_row = n * 4 * (d if metric == "manhattan" else 1)
-    br = max(8, min(1024, (32 << 20) // max(per_row, 1), n))
-    n_pad = -(-n // br) * br
+    per_entry = 4 * (d if metric == "manhattan" else 1)
+    bs = max(8, min(1024, int(((4 << 20) // per_entry) ** 0.5), n))
+    n_pad = -(-n // bs) * bs
     Xp = jnp.pad(Xf, ((0, n_pad - n), (0, 0)))
-    col = jnp.arange(n)
+    nblk = n_pad // bs
+    lane = jnp.arange(bs)
 
-    def tile_rowmax(start):
-        xb = lax.dynamic_slice_in_dim(Xp, start, br, 0)
-        T = kref.pairwise_dissim_ref(xb, Xf, metric=metric)
-        r = start + jnp.arange(br)
-        T = jnp.where(col[None, :] == r[:, None], 0.0, T)  # exact-zero diag
-        return jnp.max(T, axis=1)
+    def row_block(i, acc):
+        xb = lax.dynamic_slice_in_dim(Xp, i * bs, bs, 0)
+        rids = i * bs + lane
 
-    def body(i, acc):
-        return lax.dynamic_update_slice_in_dim(
-            acc, tile_rowmax(i * br), i * br, 0)
+        def col_block(j, rm):
+            yb = lax.dynamic_slice_in_dim(Xp, j * bs, bs, 0)
+            T = kops.pairwise_dist(xb, yb, metric=metric,
+                                   use_pallas=use_pallas)
+            cids = j * bs + lane
+            T = jnp.where(cids[None, :] == rids[:, None], 0.0, T)  # diag
+            T = jnp.where(cids[None, :] < n, T, -jnp.inf)          # padding
+            return jnp.maximum(rm, jnp.max(T, axis=1))
 
-    rowmax = lax.fori_loop(0, n_pad // br, body,
+        rm = lax.fori_loop(0, nblk, col_block, jnp.full((bs,), -jnp.inf))
+        return lax.dynamic_update_slice_in_dim(acc, rm, i * bs, 0)
+
+    rowmax = lax.fori_loop(0, nblk, row_block,
                            jnp.zeros((n_pad,), jnp.float32))
     return jnp.argmax(rowmax[:n]).astype(jnp.int32)
 
@@ -236,35 +252,46 @@ def _prim_stream_order(Xs, auxs, i0, n, *, metric, use_pallas, block):
     return FlashVATResult(order=order, edges=edges)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas",
+                                             "turbo"))
 def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
-                    block: int = 1024,
-                    use_pallas: bool = False) -> FlashVATResult:
+                    block: int = 1024, use_pallas: bool = False,
+                    turbo: bool = True) -> FlashVATResult:
     """Exact VAT ordering of X without ever materializing the (n, n) matrix.
 
     The Flash-VAT engine: the seed pivot comes from a streamed row-max
-    pass, then each Prim step recomputes the pivot's distance row
-    tile-by-tile and fuses the frontier min-update with the masked
-    argmin (``kernels/prim_stream.py`` on the Pallas path, the vectorized
-    XLA step otherwise).  Peak memory is O(n·d) for X plus O(n) frontier
-    state — never O(n^2) — so exact VAT scales to n = 10^5+ on a CPU and
-    far beyond on accelerators.
+    pass, then the Prim traversal runs through one of two engines:
+
+      * ``turbo=True`` (default) — the persistent Turbo engine
+        (``kernels.ops.prim_persist``): the entire n-1 step recurrence
+        in ONE dispatch — the Pallas megakernel with VMEM-resident state
+        and lazy-Prim tile pruning on the ``use_pallas`` path, the
+        single-scan XLA mirror otherwise.  ~4x the stepwise engine at
+        n = 8192 on CPU (benchmarks "turbo" table).
+      * ``turbo=False`` — the PR-4 stepwise engine: n-1 fused steps
+        (``kernels/prim_stream.py`` on the Pallas path, the vectorized
+        XLA step otherwise), each re-entering the runtime.
+
+    Peak memory is O(n·d) for X plus O(n) frontier state either way —
+    never O(n^2) — so exact VAT scales to n = 10^5+ on a CPU and far
+    beyond on accelerators.
 
     The ordering is bitwise-identical to ``vat_order`` on the
-    materialized ``kernels.ops.pairwise_dist`` matrix for every metric:
-    the recomputed rows use the same Gram-trick decomposition (see
-    ``kernels.ref.pivot_row_ref``), the same first-index tie-breaking,
-    and the same seed rule.
+    materialized ``kernels.ops.pairwise_dist`` matrix for every metric
+    and both engines: identical Gram-trick rows (``kernels.ref.
+    pivot_row_ref``), exact f32 min folds, identical first-index
+    tie-breaking, identical seed rule.
 
     Args:
       X: (n, d) float — data points.
       metric: dissimilarity metric, one of ``kernels.ref.METRICS``
         ("precomputed" is meaningless here — the point is to never hold
         the matrix; use ``vat_from_dist`` if you already have it).
-      block: tile length of the fused Pallas step (static).
-      use_pallas: route the fused step through the Pallas kernel
-        (interpret mode on CPU; compiled on TPU).  Default is the XLA
-        reference step — the production CPU path.
+      block: X-tile length of the fused kernels (static).
+      use_pallas: route the traversal (and the seed scan's pairwise
+        tiles) through the Pallas kernels (interpret mode on CPU;
+        compiled on TPU).  Default is XLA — the production CPU path.
+      turbo: persistent engine (True, default) vs stepwise (False).
 
     Returns:
       FlashVATResult — ``order`` (n,) int32 exact VAT visit order and
@@ -276,7 +303,11 @@ def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
     n = X.shape[0]
     Xf = X.astype(jnp.float32)
     aux = kref.metric_aux_ref(Xf, metric=metric)
-    i0 = _streamed_seed_pivot(Xf, metric=metric)
+    i0 = _streamed_seed_pivot(Xf, metric=metric, use_pallas=use_pallas)
+    if turbo:
+        order, edges = kops.prim_persist(Xf, aux, i0, metric=metric,
+                                         block=block, use_pallas=use_pallas)
+        return FlashVATResult(order=order, edges=edges)
     if use_pallas:
         Xs, auxs, _, bn = pad_points(Xf, aux, block=block)
     else:
@@ -285,34 +316,47 @@ def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
                               use_pallas=use_pallas, block=bn)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas",
+                                             "turbo"))
 def vat_matrix_free_batch(X: jax.Array, *, metric: str = "euclidean",
-                          block: int = 1024,
-                          use_pallas: bool = False) -> FlashVATResult:
+                          block: int = 1024, use_pallas: bool = False,
+                          turbo: bool = True) -> FlashVATResult:
     """Batched Flash-VAT: exact matrix-free orderings for a (b, n, d) stack.
 
-    One compiled program serves all b datasets.  The XLA path vmaps the
-    solo engine; the Pallas path drives the batched fused kernel
-    (slab-of-1 grid, ``kernels.prim_stream.prim_stream_step_pallas_batch``)
-    so per-program VMEM stays at the unbatched budget.  Each lane's
-    ordering is bitwise-identical to ``vat_matrix_free`` on that dataset.
+    One compiled program serves all b datasets.  ``turbo=True`` (default)
+    vmaps the persistent single-scan mirror (the megakernel itself is
+    solo-only — its DMA streaming does not batch); ``turbo=False`` keeps
+    the stepwise engines — the XLA path vmaps the solo engine, the
+    Pallas path drives the batched fused kernel (slab-of-1 grid,
+    ``kernels.prim_stream.prim_stream_step_pallas_batch``) so
+    per-program VMEM stays at the unbatched budget.  Each lane's
+    ordering is bitwise-identical to ``vat_matrix_free`` on that dataset
+    under every engine combination.
 
     Args:
       X: (b, n, d) float — b independent datasets.
-      metric / block / use_pallas: as in ``vat_matrix_free``.
+      metric / block / use_pallas / turbo: as in ``vat_matrix_free``.
 
     Returns:
       FlashVATResult with a leading batch axis: order (b, n) int32,
       edges (b, n) float32.
     """
+    if turbo:
+        Xf = X.astype(jnp.float32)
+        aux = kref.metric_aux_ref(Xf, metric=metric)
+        i0 = jax.vmap(functools.partial(
+            _streamed_seed_pivot, metric=metric, use_pallas=use_pallas))(Xf)
+        order, edges = kops.prim_persist(Xf, aux, i0, metric=metric,
+                                         block=block, use_pallas=use_pallas)
+        return FlashVATResult(order=order, edges=edges)
     if not use_pallas:
         return jax.vmap(functools.partial(
-            vat_matrix_free, metric=metric, block=block))(X)
+            vat_matrix_free, metric=metric, block=block, turbo=False))(X)
     b, n, _ = X.shape
     Xf = X.astype(jnp.float32)
     aux = kref.metric_aux_ref(Xf, metric=metric)
     i0 = jax.vmap(functools.partial(
-        _streamed_seed_pivot, metric=metric))(Xf)
+        _streamed_seed_pivot, metric=metric, use_pallas=True))(Xf)
     Xp, auxp, n_pad, bn = pad_points(Xf, aux, block=block)
     lane = jnp.arange(b)
 

@@ -6,6 +6,8 @@ while the default production path on CPU is the XLA reference in ref.py.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -13,7 +15,10 @@ from repro.kernels import ref
 from repro.kernels.ivat_update import MAX_FUSED_N, ivat_from_vat_pallas
 from repro.kernels.pairwise_dist import (pairwise_dist_pallas,
                                          pairwise_dist_pallas_batch)
-from repro.kernels.prim_stream import (prim_stream_step_pallas,
+from repro.kernels.prim_persist import (persist_supported,
+                                        prim_persist_pallas)
+from repro.kernels.prim_stream import (prim_frontier_step_pallas,
+                                       prim_stream_step_pallas,
                                        prim_stream_step_pallas_batch)
 from repro.kernels.prim_update import masked_argmin_pallas
 
@@ -138,6 +143,123 @@ def prim_stream_step(X: jax.Array, aux: jax.Array, q: jax.Array,
                 Xi, ai, qi, mi, si, metric=metric)
         )(X, aux, q, mind, selected)
     return ref.prim_stream_step_ref(X, aux, q, mind, selected, metric=metric)
+
+
+def prim_persist(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
+                 metric: str = "euclidean", block: int = 1024,
+                 use_pallas: bool = False):
+    """The whole Prim traversal in one dispatch (the Turbo engine).
+
+    Solo (n, d) input runs the persistent path: the Pallas megakernel
+    (``kernels/prim_persist.py`` — one pallas_call, VMEM-resident state,
+    lazy-Prim tile pruning) when requested AND its resident state fits
+    ``PERSIST_VMEM_BUDGET``, else the single-scan XLA mirror
+    (``ref.prim_persist_ref``).  The fallback is always the *persistent*
+    mirror — the stepwise engine is never silently substituted (pinned
+    by tests/test_turbo.py).  Batched (b, n, d) input vmaps the mirror:
+    the megakernel is deliberately solo-only (its DMA streaming does not
+    batch; per-lane orderings are identical either way).
+
+    Args:
+      X: (n, d) or (b, n, d) float — data points (unpadded).
+      aux: (n,) or (b, n) float32 — ``ref.metric_aux_ref`` of X.
+      i0: i32 scalar or (b,) — seed vertex per dataset.
+      metric: one of ``kernels.ref.METRICS``.
+      block: megakernel X-tile length.
+      use_pallas: megakernel vs the XLA mirror (solo only).
+
+    Returns:
+      (order, edges) with the input's leading shape — (n,)/(b, n) i32
+      and f32; bitwise-identical across every path for every metric.
+    """
+    if X.ndim == 3:
+        return jax.vmap(lambda Xi, ai, ii: ref.prim_persist_ref(
+            Xi, ai, ii, metric=metric))(X, aux, i0)
+    if use_pallas and persist_supported(X.shape[0], X.shape[1], block=block):
+        order, edges, _ = prim_persist_pallas(X, aux, i0, metric=metric,
+                                              block=block,
+                                              interpret=_interpret())
+        return order, edges
+    return ref.prim_persist_ref(X, aux, i0, metric=metric)
+
+
+def prim_frontier_step(X: jax.Array, aux: jax.Array, xq: jax.Array,
+                       auxq: jax.Array, mind: jax.Array, *,
+                       metric: str = "euclidean", use_pallas: bool = False,
+                       block: int = 1024):
+    """Fused frontier fold + masked argmin, pivot passed by value.
+
+    The per-device body of the sharded matrix-free engine
+    (``core.distributed.vat_matrix_free_sharded``): the pivot row arrives
+    by collective broadcast, the device folds it into its local frontier
+    and emits the local (min, argmin) pair for the cross-device
+    reduction.  Selected/padded lanes are carried *in-band* as
+    ``mind = +inf`` (see ``ref.prim_frontier_step_ref``); the Pallas
+    path derives its mask from that and re-masks the folded frontier so
+    the in-band encoding survives the kernel.
+
+    Args:
+      X: (n, d) float — local points (Pallas path: pre-padded, with
+        ``block`` dividing n).
+      aux: (n,) float32 — ``ref.metric_aux_ref`` of X.
+      xq: (d,) float — the pivot point.
+      auxq: f32 scalar — the pivot's aux entry.
+      mind: (n,) float32 — in-band frontier (+inf = selected/padding).
+      metric: one of ``kernels.ref.METRICS``.
+      use_pallas: fused Pallas tile kernel vs the XLA reference.
+      block: Pallas VMEM tile length.
+
+    Returns:
+      (new_mind (n,) f32, value f32 scalar, idx i32 scalar) — first-index
+      tie-breaking, identical across both paths.
+    """
+    if use_pallas:
+        selected = jnp.isinf(mind)
+        new_mind, value, idx = prim_frontier_step_pallas(
+            X, aux, xq, auxq, mind, selected, metric=metric, block=block,
+            interpret=_interpret())
+        return jnp.where(selected, jnp.inf, new_mind), value, idx
+    return ref.prim_frontier_step_ref(X, aux, xq, auxq, mind, metric=metric)
+
+
+def kernel_dispatch_stats(fn, *args, **kwargs) -> dict:
+    """Static dispatch census of a jittable function: how many
+    ``pallas_call`` equations its jaxpr holds, and how many sit OUTSIDE
+    any loop (while/scan) — i.e. run exactly once per invocation.
+
+    The persistent-engine regression gate reads this: the Turbo path
+    must show one loop-free pallas_call (the megakernel), while the
+    stepwise engine's kernel lives under the Prim while-loop and
+    re-dispatches every step.
+
+    Args:
+      fn: the function to trace (positional ``args`` / keyword
+        ``kwargs`` forwarded to ``jax.make_jaxpr``).
+
+    Returns:
+      {"pallas_calls": total count, "persistent": count outside loops}.
+    """
+    jaxpr = jax.make_jaxpr(functools.partial(fn, **kwargs))(*args).jaxpr
+
+    def walk(jx, in_loop):
+        total = persistent = 0
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name == "pallas_call":
+                total += 1
+                persistent += 0 if in_loop else 1
+            looped = in_loop or name in ("while", "scan")
+            for v in eqn.params.values():
+                for u in (v if isinstance(v, (list, tuple)) else (v,)):
+                    sub = getattr(u, "jaxpr", u)
+                    if hasattr(sub, "eqns"):
+                        t, p = walk(sub, looped)
+                        total += t
+                        persistent += p
+        return total, persistent
+
+    total, persistent = walk(jaxpr, False)
+    return {"pallas_calls": total, "persistent": persistent}
 
 
 def ivat_from_vat(rstar: jax.Array, *, use_pallas: bool = False) -> jax.Array:

@@ -1,0 +1,394 @@
+"""Pallas TPU megakernel: the ENTIRE Prim traversal in one pallas_call.
+
+The stepwise Flash-VAT engine (``kernels/prim_stream.py``) removed the
+O(n^2) memory wall but kept a time wall: n-1 separate ``pallas_call``
+dispatches, each round-tripping the O(n) frontier state through HBM.
+This module is the Turbo layer — ONE persistent kernel that:
+
+  * keeps every piece of traversal state VMEM-resident for the whole
+    run: the frontier ``mind`` (selected lanes in-band as +inf), the
+    ``order``/``edges`` outputs, and the per-tile pruning state
+    (``tmin``/``pend_lb``/``nfold``).  At n = 100k the f32 state is
+    ~2 MB — far under the 16 MiB core;
+  * streams X tiles HBM->VMEM on demand with explicit DMA (X lives in
+    ``ANY`` memory space; only one (block, d_pad) tile plus one pivot row
+    is ever resident), so VMEM stays O(n + block·d);
+  * prunes with per-tile frontier lower bounds (lazy Prim): a tile whose
+    bound provably exceeds the best exact candidate skips its distance
+    recompute — and its DMA — entirely this step.  On clustered data
+    most steps touch ~1 of n/block tiles, a data-dependent ~(n/block)x
+    HBM-traffic cut over the eager stepwise engine.
+
+Lazy-fold exactness argument (why pruning cannot change the ordering):
+
+  * f32 ``min`` is exact (no rounding), so folding pivot rows into a
+    tile in any order — or arbitrarily late — produces bitwise-identical
+    frontier values; per-(pivot, lane) row values come from the same
+    Gram-trick formula as ``ref.pivot_row_ref``.
+  * per tile T the kernel tracks ``tmin[T]`` (min of its stored, possibly
+    stale frontier lanes) and ``pend_lb[T]`` (a lower bound on every
+    pending, unfolded pivot's distance to any lane of T, from the tile's
+    centroid + radius via the triangle inequality — both computed in the
+    direct difference form — shrunk by ``_LB_MARGIN`` against relative
+    f32 rounding AND debited ``_LB_SLACK_ULPS·eps·max‖x‖²`` against the
+    ABSOLUTE cancellation error of the Gram-trick rows it is compared
+    with).  ``min(tmin, pend_lb)`` lower-bounds T's computed frontier
+    min.
+  * per step, tiles are folded in ascending-bound order until every
+    unfolded tile's bound strictly exceeds the best exact candidate.
+    Stale lanes then provably exceed the winner too (stale >= true >
+    best), so the global first-index argmin over the stored frontier is
+    exactly the eager argmin — ties included.
+
+Metric geometry of the bound: euclidean/manhattan are metrics, so
+``d(q, x) >= d(q, c_T) - r_T`` directly; sqeuclidean bounds in euclidean
+space and squares; cosine is not a metric here, so its radius is +inf
+and the bound degrades to 0 — correct, just never prunes.
+
+Scalar state (loop carries, DMA indices) stays in registers/SMEM; the
+seed vertex arrives via an SMEM (1,) block.  Padded lanes (from
+``prim_stream.pad_points``) are +inf in-band from step 0 and can never
+win; padded tail columns of X are zeros, which contribute exact 0.0
+terms to every dot product.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.prim_stream import (_LANE, DEFAULT_BLOCK, _tile_pivot_row,
+                                       pad_points)
+from repro.kernels.ref import UNSEEN, check_metric
+
+#: VMEM the persistent kernel may plan for (bytes).  Conservative slice
+#: of the ~16 MiB core: leaves room for compiler temporaries and the
+#: double-buffering headroom the DMA pipeline wants.
+PERSIST_VMEM_BUDGET = 12 * 1024 * 1024
+
+#: Relative safety factor applied to every pruning lower bound.  The
+#: bound math (direct-form centroid distance minus radius) carries a few
+#: ulp of f32 rounding; shrinking it 1e-3 relative keeps it a true lower
+#: bound with ~100x margin while costing no measurable pruning power (a
+#: tile within 0.1% of the winner would be folded next step anyway).
+_LB_MARGIN = 0.999
+
+#: Absolute-error allowance for the GRAM-TRICK side of the comparison.
+#: The frontier values the bound is checked against come from
+#: ``_tile_pivot_row``'s aux + aux_q - 2·cross decomposition, whose
+#: cancellation error is ABSOLUTE — up to ~C·eps·max‖x‖² regardless of
+#: how small the distance is — so a relative margin alone is unsound on
+#: uncentered data (coordinates offset far from the origin).  The
+#: kernel therefore subtracts ``_LB_SLACK_ULPS · eps · max(aux)`` in
+#: squared-distance units from every bound (its sqrt in euclidean
+#: units).  64 covers the decomposition's 3 same-magnitude terms with
+#: >10x headroom; on origin-centered data the slack is far below any
+#: inter-cluster gap and pruning is unaffected.
+_LB_SLACK_ULPS = 64.0
+_F32_EPS = float(jnp.finfo(jnp.float32).eps)
+
+
+def persist_state_bytes(n: int, d: int, *, block: int = DEFAULT_BLOCK) -> int:
+    """VMEM bytes the persistent kernel keeps resident for an (n, d) run.
+
+    Mirrors ``prim_stream.pad_points`` padding arithmetic.  Counted:
+    the in-band frontier + aux + an iota temporary (3 f32 lanes per
+    padded point), order/edges outputs, per-tile pruning state and
+    centroids, and the X-tile + pivot-row DMA scratch.  X itself is NOT
+    counted — it stays in ANY/HBM and is streamed tile-by-tile.
+
+    Args:
+      n: real point count.
+      d: feature count.
+      block: tile length the kernel will use.
+
+    Returns:
+      bytes — compare against ``PERSIST_VMEM_BUDGET``.
+    """
+    bn = min(block, max(8, n))
+    n_pad = -(-n // bn) * bn
+    d_pad = -(-d // _LANE) * _LANE
+    nblk = n_pad // bn
+    per_point = 3 * 4 * n_pad          # mind + aux + iota (f32/i32)
+    outputs = 2 * 4 * n                # order + edges
+    per_tile = nblk * (d_pad * 4 + 5 * 4)  # centroid row + caux/rad/tmin/pend/nfold
+    scratch = (bn * d_pad + d_pad) * 4     # X tile + pivot row
+    return per_point + outputs + per_tile + scratch
+
+
+def persist_supported(n: int, d: int, *, block: int = DEFAULT_BLOCK) -> bool:
+    """True when the resident state fits ``PERSIST_VMEM_BUDGET``.
+
+    The dispatch guard ``kernels.ops.prim_persist`` consults; above the
+    seam the XLA mirror (``ref.prim_persist_ref``) — never the stepwise
+    engine — takes over.
+    """
+    return persist_state_bytes(n, d, block=block) <= PERSIST_VMEM_BUDGET
+
+
+def persist_tile_bounds(Xp: jax.Array, n: int, *, metric: str,
+                        block: int):
+    """Per-tile (centroid, radius) for the pruning bounds.
+
+    Args:
+      Xp: (n_pad, d_pad) f32 — points padded by ``pad_points``.
+      n: real point count (padded lanes are excluded from the geometry).
+      metric: one of ``kernels.ref.METRICS``.
+      block: tile length (must divide n_pad).
+
+    Returns:
+      (cent (nblk, d_pad) f32, rad (nblk,) f32): per-tile mean point and
+      tile radius in the bound's geometry — euclidean for
+      euclidean/sqeuclidean, L1 for manhattan, +inf for cosine (which
+      disables pruning; cosine dissimilarity has no triangle inequality
+      to lean on).  Both sides are computed in the DIRECT difference
+      form, so their errors are relative and the kernel's _LB_MARGIN
+      covers them.
+    """
+    check_metric(metric)
+    n_pad, d_pad = Xp.shape
+    nblk = n_pad // block
+    tiles = Xp.reshape(nblk, block, d_pad)
+    real = (jnp.arange(n_pad).reshape(nblk, block) < n)
+    cnt = jnp.maximum(jnp.sum(real, axis=1), 1).astype(jnp.float32)
+    cent = jnp.sum(tiles * real[..., None], axis=1) / cnt[:, None]
+    if metric == "cosine":
+        rad = jnp.full((nblk,), jnp.inf, jnp.float32)
+    elif metric == "manhattan":
+        dist = jnp.sum(jnp.abs(tiles - cent[:, None, :]), axis=-1)
+        rad = jnp.max(jnp.where(real, dist, -jnp.inf), axis=1)
+    else:
+        diff = tiles - cent[:, None, :]
+        dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+        rad = jnp.max(jnp.where(real, dist, -jnp.inf), axis=1)
+    return cent, jnp.maximum(rad, 0.0)
+
+
+def _persist_kernel(i0_ref, aux_ref, cent_ref, rad_ref, x_ref,
+                    order_ref, edges_ref, stats_ref, tile_ref, row_ref,
+                    sem_t, sem_r, *, n, metric, block, prune):
+    n_pad = aux_ref.shape[0]
+    nblk = n_pad // block
+    aux = aux_ref[...]
+    cent = cent_ref[...]
+    rad = rad_ref[...]
+    iota = lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0)[:, 0]
+    blk_iota = lax.broadcasted_iota(jnp.int32, (nblk, 1), 0)[:, 0]
+    i0 = i0_ref[0]
+    inf = jnp.float32(jnp.inf)
+
+    def fetch_row(p):
+        """DMA point p's (padded) row HBM->VMEM; returns it (1, d_pad)."""
+        cp = pltpu.make_async_copy(x_ref.at[pl.ds(p, 1)], row_ref, sem_r)
+        cp.start()
+        cp.wait()
+        return row_ref[...]
+
+    # row-side Gram-cancellation allowance, squared-distance units (the
+    # module constants explain why a relative margin alone is unsound)
+    slack_sq = jnp.float32(_LB_SLACK_ULPS * _F32_EPS) * jnp.max(aux)
+
+    def tile_lb(xq):
+        """Lower bound on d(q, any lane of tile T) for every T: triangle
+        inequality off the tile centroid — DIRECT-form centroid distance
+        (relative error only, matching the radius computation), shrunk
+        by _LB_MARGIN and debited the Gram slack.  xq is (1, d_pad)."""
+        diff = cent - xq
+        if metric == "manhattan":
+            dq = jnp.sum(jnp.abs(diff), axis=-1)
+        else:
+            dq = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+        e = jnp.maximum(dq - rad, 0.0) * jnp.float32(_LB_MARGIN)
+        if metric == "euclidean":
+            lb = jnp.maximum(e - jnp.sqrt(slack_sq), 0.0)
+        elif metric == "sqeuclidean":
+            lb = jnp.maximum(e * e - slack_sq, 0.0)
+        else:               # manhattan: direct |diff| sums both sides —
+            lb = e          # no cancellation, margin alone covers it
+        if not prune:       # pruning disabled: bound 0 folds every tile
+            lb = lb * 0.0
+        return lb
+
+    # frontier init: +inf = selected or padding, UNSEEN = no fold yet
+    mind0 = jnp.where((iota >= n) | (iota == i0), inf, jnp.float32(UNSEEN))
+    tmin0 = jnp.min(mind0.reshape(nblk, block), axis=1)
+    pend0 = jnp.full((nblk,), inf)
+    nfold0 = jnp.zeros((nblk,), jnp.int32)
+    order0 = jnp.where(lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0] == 0,
+                       i0, 0).astype(jnp.int32)
+    edges0 = jnp.zeros((n,), jnp.float32)
+
+    def fold_tile(T, t, mind, tmin, pend, nfold, order, stats):
+        """Fold every pending pivot (order[nfold[T]:t]) into tile T."""
+        start = T * block
+        cp = pltpu.make_async_copy(x_ref.at[pl.ds(start, block)], tile_ref,
+                                   sem_t)
+        cp.start()
+        cp.wait()
+        tile = tile_ref[...]
+        aux_t = lax.dynamic_slice(aux, (start,), (block,))
+        mt = lax.dynamic_slice(mind, (start,), (block,))
+        k0 = lax.dynamic_slice(nfold, (T,), (1,))[0]
+
+        def fold_one(k, mt):
+            p = lax.dynamic_slice(order, (k,), (1,))[0]
+            xp = fetch_row(p)                               # (1, d_pad)
+            ap = lax.dynamic_slice(aux, (p,), (1,))         # (1,)
+            # the stream kernel's own tile formula — term-for-term (and
+            # dot-shape-for-dot-shape) identical rows across both Pallas
+            # engines, so near-tie metrics cannot flip between them on
+            # 1-ulp dot-lowering differences
+            row = _tile_pivot_row(tile, xp, aux_t, ap, metric)
+            return jnp.where(jnp.isinf(mt), inf, jnp.minimum(mt, row))
+
+        mt = lax.fori_loop(k0, t, fold_one, mt)
+        mnew = jnp.min(mt)
+        mind = lax.dynamic_update_slice(mind, mt, (start,))
+        tmin = lax.dynamic_update_slice(tmin, mnew[None], (T,))
+        # a traced +inf (a (1,) constant would be captured; mnew*0 would
+        # make NaN when the tile is fully selected and mnew is +inf)
+        pend = lax.dynamic_update_slice(pend, jnp.maximum(mnew, inf)[None],
+                                        (T,))
+        nfold = lax.dynamic_update_slice(nfold, t[None], (T,))
+        stats = stats + jnp.stack([jnp.int32(1), (t - k0).astype(jnp.int32)])
+        return mind, tmin, pend, nfold, stats
+
+    def step(t, carry):
+        mind, tmin, pend, nfold, order, edges, stats, q = carry
+        xq = fetch_row(q)                                   # (1, d_pad)
+        pend = jnp.minimum(pend, tile_lb(xq))
+
+        # lazy-fold loop: fold ascending-bound tiles until every unfolded
+        # tile provably exceeds the best exact candidate (<= keeps ties
+        # exact; fuel bounds the loop — each pass folds one tile).  Dead
+        # tiles (tmin == +inf: every lane selected/padding, forever) are
+        # excluded outright — their stored lanes can never win, and
+        # without the mask their pend bound keeps shrinking toward an
+        # active pivot and re-fetches the tile every step for nothing
+        def fold_bound(tmin, pend, nfold):
+            foldable = (nfold < t) & (tmin < inf)
+            return jnp.where(foldable, jnp.minimum(tmin, pend), inf)
+
+        def fold_cond(s):
+            fuel, mind, tmin, pend, nfold, stats = s
+            bound = fold_bound(tmin, pend, nfold)
+            best_exact = jnp.min(jnp.where(nfold == t, tmin, inf))
+            return (fuel < nblk) & (jnp.min(bound) <= best_exact)
+
+        def fold_body(s):
+            fuel, mind, tmin, pend, nfold, stats = s
+            bound = fold_bound(tmin, pend, nfold)
+            bmin = jnp.min(bound)
+            T = jnp.min(jnp.where(bound == bmin, blk_iota, nblk))
+            mind, tmin, pend, nfold, stats = fold_tile(
+                T, t, mind, tmin, pend, nfold, order, stats)
+            return fuel + 1, mind, tmin, pend, nfold, stats
+
+        _, mind, tmin, pend, nfold, stats = lax.while_loop(
+            fold_cond, fold_body,
+            (jnp.int32(0), mind, tmin, pend, nfold, stats))
+
+        best = jnp.min(jnp.where(nfold == t, tmin, inf))
+        winner = jnp.min(jnp.where(mind == best, iota, n_pad)).astype(
+            jnp.int32)
+        mind = lax.dynamic_update_slice(mind, jnp.maximum(best, inf)[None],
+                                        (winner,))
+        Tw = winner // block
+        mw = lax.dynamic_slice(mind, (Tw * block,), (block,))
+        tmin = lax.dynamic_update_slice(tmin, jnp.min(mw)[None], (Tw,))
+        order = lax.dynamic_update_slice(order, winner[None], (t,))
+        edges = lax.dynamic_update_slice(edges, best[None], (t,))
+        return mind, tmin, pend, nfold, order, edges, stats, winner
+
+    stats0 = jnp.zeros((2,), jnp.int32)
+    carry = lax.fori_loop(
+        1, n, step, (mind0, tmin0, pend0, nfold0, order0, edges0, stats0, i0))
+    order_ref[...] = carry[4]
+    edges_ref[...] = carry[5]
+    stats_ref[...] = carry[6]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block", "interpret",
+                                             "prune"))
+def prim_persist_pallas(
+    X: jax.Array,
+    aux: jax.Array,
+    i0: jax.Array,
+    *,
+    metric: str = "euclidean",
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+    prune: bool = True,
+):
+    """Exact VAT ordering of X in ONE persistent pallas_call.
+
+    Pads X once (``prim_stream.pad_points``), precomputes the per-tile
+    pruning geometry, and hands everything to the megakernel: the whole
+    n-1 step Prim recurrence runs inside the kernel with the frontier
+    VMEM-resident and X streamed tile-by-tile from ANY/HBM.
+
+    Args:
+      X: (n, d) float — data points (unpadded; padding is internal).
+      aux: (n,) float32 — ``kernels.ref.metric_aux_ref`` of X.
+      i0: i32 scalar — seed vertex (``core.vat._streamed_seed_pivot``).
+      metric: one of ``kernels.ref.METRICS`` (static).
+      block: X tile length (static); clamped like ``pad_points``.
+      interpret: Pallas interpret mode (the CPU correctness path).
+      prune: lazy-Prim tile pruning (static).  False forces the eager
+        fold-everything schedule — same outputs bit for bit (the pin
+        tests/test_turbo.py holds the pruning proof to), only more DMA.
+
+    Returns:
+      (order (n,) i32, edges (n,) f32, stats (2,) i32) — the exact
+      ordering/edge trace plus the traffic census [tile fetches, pivot
+      row folds].  Eager folding costs (n-1)·nblk tile fetches; the gap
+      to ``stats[0]`` is what pruning saved.  Orderings are
+      bitwise-identical to ``ref.prim_persist_ref`` for every metric
+      (near-tie caveat: under heavy Gram-trick cancellation — e.g.
+      cosine between near-parallel points — 1-ulp differences between
+      this kernel's dot lowering and other engines' can flip exact ties;
+      the two Pallas engines share one tile formula so they never flip
+      against each other).
+
+    Callers must keep ``persist_supported(n, d, block=block)`` true —
+    ``kernels.ops.prim_persist`` owns that guard.
+    """
+    check_metric(metric)
+    n = X.shape[0]
+    Xp, auxp, n_pad, bn = pad_points(X.astype(jnp.float32), aux, block=block)
+    cent, rad = persist_tile_bounds(Xp, n, metric=metric, block=bn)
+    d_pad = Xp.shape[1]
+
+    order, edges, stats = pl.pallas_call(
+        functools.partial(_persist_kernel, n=n, metric=metric, block=bn,
+                          prune=prune),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # i0
+            pl.BlockSpec((n_pad,), lambda: (0,)),           # aux
+            pl.BlockSpec((n_pad // bn, d_pad), lambda: (0, 0)),  # cent
+            pl.BlockSpec((n_pad // bn,), lambda: (0,)),     # rad
+            pl.BlockSpec(memory_space=pltpu.ANY),           # X (streamed)
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((2,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, d_pad), jnp.float32),   # streamed X tile
+            pltpu.VMEM((1, d_pad), jnp.float32),    # pivot row
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(jnp.asarray(i0, jnp.int32)[None], auxp, cent, rad, Xp)
+    return order, edges, stats

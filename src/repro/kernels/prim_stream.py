@@ -124,6 +124,85 @@ def pad_points(X: jax.Array, aux: jax.Array, *, block: int = DEFAULT_BLOCK):
     return Xp, auxp, n_pad, bn
 
 
+def _stream_call(Xp, xq, auxp, auxq, mind, selected, *, metric, block,
+                 interpret):
+    """Shared pallas_call of the solo fused step: pivot passed by value.
+
+    Both front doors use it — ``prim_stream_step_pallas`` (pivot given as
+    an index into Xp, the stepwise Flash-VAT engine) and
+    ``prim_frontier_step_pallas`` (pivot given as a point, the sharded
+    engine where the pivot row arrives by collective broadcast).
+    """
+    n_pad, d_pad = Xp.shape
+    nblk = n_pad // block
+    new_mind, minv, mini = pl.pallas_call(
+        functools.partial(_prim_stream_kernel, metric=metric),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((block, d_pad), lambda b: (b, 0)),
+            pl.BlockSpec((1, d_pad), lambda b: (0, 0)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+            jax.ShapeDtypeStruct((nblk,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Xp, xq, auxp, auxq, mind, selected)
+    best = jnp.argmin(minv)         # (nblk,) cross-block pass, negligible
+    return new_mind, minv[best], mini[best]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "block", "interpret"))
+def prim_frontier_step_pallas(
+    Xp: jax.Array,
+    auxp: jax.Array,
+    xq: jax.Array,
+    auxq: jax.Array,
+    mind: jax.Array,
+    selected: jax.Array,
+    *,
+    metric: str = "euclidean",
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """The fused step with the pivot passed by VALUE instead of index.
+
+    The sharded matrix-free engine's per-device kernel: the pivot row
+    usually lives on another device and arrives via a psum broadcast, so
+    there is no local index to gather.  Same kernel, same tile math,
+    same first-index tie-breaking as ``prim_stream_step_pallas``.
+
+    Args:
+      Xp: (n_pad, d_pad) f32 — the device's padded local points.
+      auxp: (n_pad,) f32 — padded local auxiliary vector.
+      xq: (d_pad,) f32 — the (padded) pivot point.
+      auxq: f32 scalar — the pivot's ``metric_aux_ref`` entry.
+      mind / selected / metric / block / interpret: as in
+        ``prim_stream_step_pallas``.
+
+    Returns:
+      (new_mind (n_pad,) f32, value f32, idx i32) — the folded frontier
+      (selected lanes carry ``min(mind, row)`` like the stepwise kernel;
+      in-band callers re-mask, see ``kernels.ops.prim_frontier_step``)
+      and its masked (min, argmin) pair.
+    """
+    check_metric(metric)
+    return _stream_call(Xp, xq.reshape(1, -1), auxp, auxq.reshape(1),
+                        mind, selected, metric=metric, block=block,
+                        interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("metric", "block", "interpret"))
 def prim_stream_step_pallas(
@@ -161,36 +240,10 @@ def prim_stream_step_pallas(
       within blocks).
     """
     check_metric(metric)
-    n_pad, d_pad = Xp.shape
-    nblk = n_pad // block
     xq = jax.lax.dynamic_slice_in_dim(Xp, q, 1, axis=0)        # (1, d_pad)
     auxq = jax.lax.dynamic_slice_in_dim(auxp, q, 1, axis=0)    # (1,)
-
-    new_mind, minv, mini = pl.pallas_call(
-        functools.partial(_prim_stream_kernel, metric=metric),
-        grid=(nblk,),
-        in_specs=[
-            pl.BlockSpec((block, d_pad), lambda b: (b, 0)),
-            pl.BlockSpec((1, d_pad), lambda b: (0, 0)),
-            pl.BlockSpec((block,), lambda b: (b,)),
-            pl.BlockSpec((1,), lambda b: (0,)),
-            pl.BlockSpec((block,), lambda b: (b,)),
-            pl.BlockSpec((block,), lambda b: (b,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda b: (b,)),
-            pl.BlockSpec((1,), lambda b: (b,)),
-            pl.BlockSpec((1,), lambda b: (b,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
-            jax.ShapeDtypeStruct((nblk,), jnp.float32),
-            jax.ShapeDtypeStruct((nblk,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(Xp, xq, auxp, auxq, mind, selected)
-    best = jnp.argmin(minv)         # (nblk,) cross-block pass, negligible
-    return new_mind, minv[best], mini[best]
+    return _stream_call(Xp, xq, auxp, auxq, mind, selected, metric=metric,
+                        block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit,

@@ -173,6 +173,155 @@ def pivot_row_ref(X: jax.Array, aux: jax.Array, q: jax.Array, *,
     return jnp.sqrt(sq) if metric == "euclidean" else sq
 
 
+def pivot_row_from_point_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
+                             auxq: jax.Array, *,
+                             metric: str = "euclidean") -> jax.Array:
+    """``pivot_row_ref`` when the pivot's (point, aux) are already in hand.
+
+    The building block of the sharded matrix-free engine: the pivot
+    usually lives on another device, so its row x_q arrives by collective
+    broadcast rather than a local gather.  The formula is *identical* to
+    ``pivot_row_ref`` term for term (same Gram decomposition, same
+    clamps), so a shard's slice of this row is bitwise-equal to the solo
+    path's row restricted to the shard — the property the sharded
+    ordering contract rests on.
+
+    Args:
+      X: (n, d) float — data points (a device's local shard is fine).
+      aux: (n,) float32 — ``metric_aux_ref`` of X.
+      xq: (d,) float — the pivot point.
+      auxq: float32 scalar — the pivot's ``metric_aux_ref`` entry.
+      metric: one of ``METRICS``.
+
+    Returns:
+      (n,) float32 dissimilarity of every row of X to xq.
+    """
+    check_metric(metric)
+    Xf = X.astype(jnp.float32)
+    xqf = xq.astype(jnp.float32)
+    if metric == "manhattan":
+        return jnp.sum(jnp.abs(Xf - xqf[None, :]), axis=-1)
+    cross = Xf @ xqf
+    if metric == "cosine":
+        denom = jnp.maximum(aux * auxq, 1e-12)
+        return jnp.clip(1.0 - cross / denom, 0.0, 2.0)
+    sq = jnp.maximum(aux + auxq - 2.0 * cross, 0.0)
+    return jnp.sqrt(sq) if metric == "euclidean" else sq
+
+
+def prim_frontier_step_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
+                           auxq: jax.Array, mind: jax.Array, *,
+                           metric: str = "euclidean"):
+    """Fused frontier fold + masked argmin with the pivot passed by value.
+
+    The per-device body of ``core.distributed.vat_matrix_free_sharded``:
+    fold the broadcast pivot's distance row into the local frontier and
+    emit the local (min, argmin) pair for the cross-device reduction.
+
+    Selected lanes are encoded *in-band* as ``mind = +inf`` (the
+    persistent engine's convention — see ``prim_persist_ref``): the fold
+    keeps +inf lanes +inf, so no separate ``selected`` mask ships through
+    the loop.  Bitwise contract: folds are f32 ``min`` (exact, so fold
+    order never matters) over rows identical to ``pivot_row_ref``.
+
+    Args:
+      X: (n, d) float — local points.
+      aux: (n,) float32 — ``metric_aux_ref`` of X.
+      xq: (d,) float — the pivot point (broadcast from its owner).
+      auxq: f32 scalar — the pivot's aux entry.
+      mind: (n,) float32 — frontier; +inf lanes are selected/padding.
+      metric: one of ``METRICS``.
+
+    Returns:
+      (new_mind (n,) f32, value f32 scalar, idx i32 scalar) — the updated
+      frontier and its min with first-index tie-breaking.
+    """
+    row = pivot_row_from_point_ref(X, aux, xq, auxq, metric=metric)
+    new_mind = jnp.where(jnp.isinf(mind), jnp.inf, jnp.minimum(mind, row))
+    value = jnp.min(new_mind)
+    n = new_mind.shape[0]
+    idx = jnp.min(jnp.where(new_mind == value,
+                            jnp.arange(n, dtype=jnp.int32), n)).astype(
+                                jnp.int32)
+    return new_mind, value, idx
+
+
+#: "No distance folded yet" sentinel of the persistent engine's in-band
+#: frontier encoding (+inf = selected).  Any real dissimilarity folds
+#: below it; it can only win the argmin on pathological (inf/nan) input,
+#: which no metric here produces from finite points.
+UNSEEN = float(jnp.finfo(jnp.float32).max)
+
+
+def prim_persist_ref(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
+                     metric: str = "euclidean", unroll: int = 4):
+    """The whole Prim traversal in one call — the persistent engine's
+    XLA mirror (Turbo Flash-VAT).
+
+    Where the stepwise path (``prim_stream_step_ref`` driven by
+    ``core.vat``'s fori_loop) re-enters the runtime every step, this
+    mirror keeps the entire n-1 step recurrence inside a single scan and
+    strips the per-step op count to the bone:
+
+      * selected lanes live *in-band* as ``mind = +inf`` (one carried
+        vector instead of mind + selected + per-step masking),
+      * the masked argmin is a vectorized ``min`` + index-min over
+        ``where(mind == min, iota, n)`` — XLA:CPU lowers ``jnp.argmin``'s
+        variadic reduce to a scalar loop, and replacing it is worth ~3x
+        on the whole traversal at n = 8192,
+      * order/edges are carried (n,) buffers updated in place by
+        ``dynamic_update_slice`` — scan ys would need a concatenate for
+        the seed slot, which blocks XLA's in-place ys accumulation and
+        costs ~2x the whole loop,
+      * the scan is unrolled to amortize loop bookkeeping.
+
+    Bitwise contract with ``core.vat.vat_order`` / the stepwise engine:
+    rows come from ``pivot_row_ref`` (the shared Gram-trick oracle), f32
+    ``min`` folds are exact so fold scheduling can't change values, and
+    the index-min reduction reproduces ``jnp.argmin``'s first-index
+    tie-breaking (the winner set {mind == min} is exact equality on
+    identical floats).
+
+    Args:
+      X: (n, d) float — data points.
+      aux: (n,) float32 — ``metric_aux_ref`` of X.
+      i0: i32 scalar — the seed vertex (``core.vat._streamed_seed_pivot``).
+      metric: one of ``METRICS``.
+      unroll: scan unroll factor (static; perf only).
+
+    Returns:
+      (order (n,) i32, edges (n,) f32) — the exact VAT visit order and
+      each visit's MST edge weight (edges[0] = 0), matching the stepwise
+      engine bitwise.
+    """
+    check_metric(metric)
+    n = X.shape[0]
+    Xf = X.astype(jnp.float32)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    q0 = jnp.asarray(i0, jnp.int32)
+    mind0 = jnp.where(iota == q0, jnp.inf, jnp.float32(UNSEEN))
+    order0 = jnp.zeros((n,), jnp.int32).at[0].set(q0)
+    edges0 = jnp.zeros((n,), jnp.float32)
+    if n == 1:
+        return order0, edges0
+
+    def step(carry, t):
+        mind, q, order, edges = carry
+        row = pivot_row_ref(Xf, aux, q, metric=metric)
+        mind = jnp.where(jnp.isinf(mind), jnp.inf, jnp.minimum(mind, row))
+        ev = jnp.min(mind)
+        nq = jnp.min(jnp.where(mind == ev, iota, n)).astype(jnp.int32)
+        mind = jax.lax.dynamic_update_slice(
+            mind, jnp.reshape(ev * 0 + jnp.inf, (1,)), (nq,))
+        order = jax.lax.dynamic_update_slice(order, nq[None], (t,))
+        edges = jax.lax.dynamic_update_slice(edges, ev[None], (t,))
+        return (mind, nq, order, edges), None
+
+    (_, _, order, edges), _ = jax.lax.scan(
+        step, (mind0, q0, order0, edges0), jnp.arange(1, n), unroll=unroll)
+    return order, edges
+
+
 def prim_stream_step_ref(X: jax.Array, aux: jax.Array, q: jax.Array,
                          mind: jax.Array, selected: jax.Array, *,
                          metric: str = "euclidean"):

@@ -127,12 +127,15 @@ def test_fastvat_explicit_svat_still_works():
 
 
 def test_fastvat_auto_routes_bigvat():
-    X, lab = _blobs(25_000, k=3)
+    # just past the flashvat auto window (MEDIUM_N rose to 50k when the
+    # Turbo engine raised exact VAT's practical ceiling — ISSUE 5)
+    n = MEDIUM_N + 1_000
+    X, lab = _blobs(n, k=3)
     fv = FastVAT(sample_size=64, block=8_192).fit(X)
     assert fv.method_resolved == "bigvat"
     assert fv.image(resolution=100).shape == (100, 100)
     order = fv.order()
-    assert sorted(order.tolist()) == list(range(25_000))
+    assert sorted(order.tolist()) == list(range(n))
     rep = fv.assess()
     assert rep["method"] == "bigvat" and rep["k_est"] == 3
     assert rep["clustered"]

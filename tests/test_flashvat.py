@@ -48,12 +48,14 @@ def test_matrix_free_ordering_bitwise_identical(metric, n):
 
 @pytest.mark.parametrize("metric", METRICS)
 def test_matrix_free_pallas_step_matches_xla(metric):
-    """The fused Pallas kernel (interpret mode on CPU) drives the same
-    ordering as the XLA reference step."""
+    """The fused stepwise Pallas kernel (interpret mode on CPU) drives
+    the same ordering as the XLA reference step.  turbo=False pins the
+    PR-4 stepwise engine explicitly now that the persistent Turbo engine
+    is the default (tests/test_turbo.py owns the Turbo contract)."""
     X = _points(257, d=6, seed=11)
-    a = core.vat_matrix_free(X, metric=metric).order
+    a = core.vat_matrix_free(X, metric=metric, turbo=False).order
     b = core.vat_matrix_free(X, metric=metric, use_pallas=True,
-                             block=64).order
+                             turbo=False, block=64).order
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -82,9 +84,13 @@ def test_matrix_free_blobs_order_keeps_clusters_contiguous():
 # ------------------------------------------------------ batched agreement ----
 
 def test_matrix_free_batch_agrees_with_solo():
+    """Stepwise batched engines (XLA vmap + batched slab-of-1 Pallas
+    kernel) vs the solo default; turbo batched agreement lives in
+    tests/test_turbo.py."""
     Xb = jnp.stack([_points(150, d=6, seed=s) for s in range(4)])
-    xla = core.vat_matrix_free_batch(Xb)
-    pal = core.vat_matrix_free_batch(Xb, use_pallas=True, block=64)
+    xla = core.vat_matrix_free_batch(Xb, turbo=False)
+    pal = core.vat_matrix_free_batch(Xb, use_pallas=True, turbo=False,
+                                     block=64)
     for i in range(4):
         solo = core.vat_matrix_free(Xb[i])
         np.testing.assert_array_equal(np.asarray(xla.order[i]),
@@ -95,17 +101,31 @@ def test_matrix_free_batch_agrees_with_solo():
 
 # ------------------------------------------- no (n, n) intermediate, ever ----
 
-def test_matrix_free_never_calls_pairwise_dist(monkeypatch):
-    """Tripwire mirroring test_bigvat: the engine must not reach the
-    materializing kernel at all (a fresh shape forces a fresh trace, so
-    the patched function would be captured if it were used)."""
+def test_matrix_free_never_materializes_pairwise(monkeypatch):
+    """Tripwire mirroring test_bigvat: the engine must never form an
+    (n, n)-scale object.  The seed scan legitimately streams bounded
+    SQUARE TILES through the pairwise front door (ISSUE 5 satellite:
+    ``kernels.ops.pairwise_dist`` so use_pallas reaches the MXU tile),
+    so the tripwire admits strict row/column blocks and booms on any
+    self-dissimilarity call or full-size operand pair."""
+    real = kops.pairwise_dist
+    n = 2_333
+
+    def guarded(X, Y=None, **kw):
+        if Y is None or (X.shape[0] >= n and Y.shape[0] >= n):
+            raise AssertionError("vat_matrix_free materialized a matrix")
+        assert X.shape[0] < n and Y.shape[0] < n
+        return real(X, Y, **kw)
+
     def boom(*a, **k):
-        raise AssertionError("vat_matrix_free materialized a matrix")
-    monkeypatch.setattr(kops, "pairwise_dist", boom)
+        raise AssertionError("vat_matrix_free materialized a batch matrix")
+
+    # core.vat imports the ops MODULE, so the module attr patch is seen
+    monkeypatch.setattr(kops, "pairwise_dist", guarded)
     monkeypatch.setattr(kops, "pairwise_dist_batch", boom)
-    X = _points(333, d=3, seed=4)
+    X = _points(n, d=3, seed=4)
     order = np.asarray(core.vat_matrix_free(X).order)
-    assert sorted(order.tolist()) == list(range(333))
+    assert sorted(order.tolist()) == list(range(n))
 
 
 def test_matrix_free_compiled_memory_is_not_quadratic():

@@ -54,3 +54,54 @@ def test_absorption_running_mean_exact():
     # slot 1 untouched throughout
     np.testing.assert_allclose(sv.pts[1], [8.0])
     assert sv.counts[1] == 1
+
+
+# ---------------------------- metric threading (ISSUE 5 satellite) ----
+
+import pytest  # noqa: E402
+
+from repro.kernels.ref import METRICS  # noqa: E402
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_streaming_metric_threads_end_to_end(metric):
+    """The reservoir's VAT queries run in the stream's metric: order()
+    equals batch VAT of the reservoir under the SAME metric, and (for
+    any non-euclidean metric) generally differs from the euclidean
+    ordering of the same points."""
+    rng = np.random.default_rng(7)
+    sv = StreamingVAT(cap=48, d=4, metric=metric)
+    for _ in range(6):
+        sv.update(rng.normal(size=(40, 4)) + rng.integers(0, 3) * 5.0)
+    assert len(sv.pts) == 48
+    batch = core.vat(jnp.asarray(sv.pts), metric=metric)
+    assert np.array_equal(sv.order(), np.asarray(batch.order))
+
+
+def test_streaming_metric_shapes_reservoir_geometry():
+    """A cosine stream must thin by ANGLE: rays at the same angle but
+    wildly different radii are near-duplicates for cosine (absorbed),
+    while the euclidean reservoir keeps them apart."""
+    rng = np.random.default_rng(3)
+    angles = rng.uniform(0, 2 * np.pi, size=400)
+    radii = rng.uniform(0.5, 20.0, size=400)
+    X = np.stack([radii * np.cos(angles), radii * np.sin(angles)], 1)
+    cos_sv = StreamingVAT(cap=32, d=2, metric="cosine")
+    euc_sv = StreamingVAT(cap=32, d=2, metric="euclidean")
+    cos_sv.update(X)
+    euc_sv.update(X)
+    # the cosine reservoir absorbs same-direction points regardless of
+    # radius, so it folds far more of the stream into running means than
+    # the euclidean one (evictions reset a slot's count, so sums stay
+    # below n_seen for both)
+    assert cos_sv.counts.sum() > euc_sv.counts.sum()
+    cos_angles = np.sort(np.arctan2(cos_sv.pts[:, 1], cos_sv.pts[:, 0]))
+    # the cosine reservoir covers the circle: no angular gap should be
+    # grossly larger than uniform spacing
+    gaps = np.diff(np.concatenate([cos_angles, cos_angles[:1] + 2 * np.pi]))
+    assert gaps.max() < 6 * (2 * np.pi / 32)
+
+
+def test_streaming_rejects_unknown_metric():
+    with pytest.raises(ValueError, match="metric"):
+        StreamingVAT(cap=8, d=2, metric="chebyshev")

@@ -1,0 +1,391 @@
+"""Turbo Flash-VAT (ISSUE 5): persistent Prim megakernel + sharded engine.
+
+Pins the tentpole contract end to end:
+
+* bitwise ordering identity of the persistent engine (XLA mirror AND
+  Pallas megakernel) with ``vat_from_dist`` on the materialized matrix
+  and with the PR-4 stepwise engine — per metric, at n in {64, 257,
+  1024}, solo + batched + sharded-on-1-device;
+* lazy-Prim pruning soundness: prune=True vs prune=False inside the SAME
+  kernel are bitwise-equal while the traffic census shrinks;
+* the dispatch-count regression gate: the Turbo path compiles to ONE
+  loop-free pallas_call, the stepwise path to zero, and the persistent
+  path is never silently swapped for the stepwise engine;
+* VMEM-seam routing at the state-size guard boundary (+/-1 byte);
+* the sharded engine's multi-device bitwise identity (8 fake CPU
+  devices, divisible and non-divisible n) via subprocess.
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.api import FastVAT
+from repro.kernels import ops as kops
+from repro.kernels import prim_persist as kpp
+from repro.kernels import ref as kref
+from repro.kernels.ref import METRICS
+from repro.core.vat import _streamed_seed_pivot
+
+
+def _points(n, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def _contig_blobs(n, k=4, d=3, seed=1, sep=40.0):
+    """Cluster-contiguous layout: same-cluster points occupy adjacent
+    indices, so megakernel tiles are spatially coherent and pruning has
+    something to prune."""
+    rng = np.random.default_rng(seed)
+    centers = (sep * rng.normal(size=(k, d))).astype(np.float32)
+    lab = np.sort(rng.integers(0, k, size=n))
+    X = centers[lab] + rng.normal(size=(n, d)).astype(np.float32)
+    return jnp.asarray(X.astype(np.float32))
+
+
+# ------------------------------------------------ bitwise ordering oracle ----
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [64, 257, 1024])
+def test_persistent_bitwise_vs_materialized_and_stepwise(metric, n):
+    """The acceptance contract: persistent == vat_from_dist on the
+    materialized matrix == the PR-4 stepwise engine, bit for bit."""
+    X = _points(n, d=3 + n % 5, seed=n)
+    R = kops.pairwise_dist(X, metric=metric)
+    want = core.vat_from_dist(R).order
+    turbo = core.vat_matrix_free(X, metric=metric)
+    stepw = core.vat_matrix_free(X, metric=metric, turbo=False)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(turbo.order))
+    np.testing.assert_array_equal(np.asarray(stepw.order),
+                                  np.asarray(turbo.order))
+    np.testing.assert_array_equal(np.asarray(stepw.edges),
+                                  np.asarray(turbo.edges))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [64, 257, 1024])
+def test_megakernel_matches_mirror(metric, n):
+    """The Pallas megakernel (interpret mode, block=64 => multi-tile +
+    padding at 257/1024) drives the same ordering as the XLA mirror."""
+    X = _points(n, d=6, seed=n + 1)
+    a = core.vat_matrix_free(X, metric=metric)
+    b = core.vat_matrix_free(X, metric=metric, use_pallas=True, block=64)
+    np.testing.assert_array_equal(np.asarray(a.order), np.asarray(b.order))
+    # edge VALUES cross a lowering boundary (the kernel's lane-padded dot
+    # vs the mirror's unpadded dot) — ulp-close, not bitwise; the bitwise
+    # edge contract holds among same-lowering engines (mirror/stepwise/
+    # sharded, pinned elsewhere in this file)
+    np.testing.assert_allclose(np.asarray(a.edges), np.asarray(b.edges),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_persistent_batched_matches_solo():
+    Xb = jnp.stack([_points(150, d=6, seed=s) for s in range(4)])
+    bt = core.vat_matrix_free_batch(Xb)
+    bp = core.vat_matrix_free_batch(Xb, use_pallas=True, block=64)
+    for i in range(4):
+        solo = core.vat_matrix_free(Xb[i])
+        np.testing.assert_array_equal(np.asarray(bt.order[i]),
+                                      np.asarray(solo.order))
+        np.testing.assert_array_equal(np.asarray(bp.order[i]),
+                                      np.asarray(solo.order))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n", [64, 257])
+def test_sharded_one_device_bitwise(metric, n):
+    """Sharded-on-1-device == solo, orderings AND edges, every metric
+    (n=257 exercises the internal pad-to-axis-size path trivially)."""
+    X = _points(n, d=4, seed=n + 2)
+    mesh = jax.make_mesh((1,), ("data",))
+    solo = core.vat_matrix_free(X, metric=metric)
+    sh = core.vat_matrix_free_sharded(X, mesh, metric=metric)
+    np.testing.assert_array_equal(np.asarray(solo.order),
+                                  np.asarray(sh.order))
+    np.testing.assert_array_equal(np.asarray(solo.edges),
+                                  np.asarray(sh.edges))
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+def test_sharded_pallas_step_matches_solo(metric):
+    """The sharded engine's Pallas route: the local frontier state is
+    padded once to the step kernel's block (here 64, with nl=201 not a
+    multiple — the divisibility seam), and the ordering still matches
+    the solo engine."""
+    X = _points(201, d=5, seed=31)
+    mesh = jax.make_mesh((1,), ("data",))
+    solo = core.vat_matrix_free(X, metric=metric)
+    sh = core.vat_matrix_free_sharded(X, mesh, metric=metric,
+                                      use_pallas=True, block=64)
+    np.testing.assert_array_equal(np.asarray(solo.order),
+                                  np.asarray(sh.order))
+
+
+def test_sharded_seed_never_materializes_shard_by_n(monkeypatch):
+    """The sharded seed must stream (bs, bs) blocks — never an (n/P, n)
+    strip (the compiled-memory contract the docstring promises)."""
+    real = kops.pairwise_dist
+
+    def guarded(A, B=None, **kw):
+        assert B is not None and A.shape[0] <= 1024 and B.shape[0] <= 1024, \
+            (A.shape, None if B is None else B.shape)
+        return real(A, B, **kw)
+
+    # distributed.py imports the ops MODULE, so the module attr patch
+    # is what its trace sees
+    monkeypatch.setattr(kops, "pairwise_dist", guarded)
+    X = _points(2_111, d=3, seed=17)               # fresh shape
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = core.vat_matrix_free_sharded(X, mesh)
+    solo = core.vat_matrix_free(X)
+    np.testing.assert_array_equal(np.asarray(solo.order),
+                                  np.asarray(sh.order))
+
+
+# --------------------------------------------------- lazy-Prim pruning ----
+
+@pytest.mark.parametrize("metric", ["euclidean", "sqeuclidean", "manhattan"])
+def test_pruning_is_bitwise_sound_and_cuts_traffic(metric):
+    """prune=True vs prune=False inside the SAME kernel: identical
+    orderings/edges (the lazy-fold exactness proof), strictly less tile
+    traffic on cluster-contiguous data.  Cosine is excluded by design:
+    no triangle inequality => its radius is +inf and pruning degrades to
+    the eager schedule."""
+    X = _contig_blobs(700)
+    aux = kref.metric_aux_ref(X, metric=metric)
+    i0 = _streamed_seed_pivot(X, metric=metric)
+    o1, e1, s1 = kpp.prim_persist_pallas(X, aux, i0, metric=metric,
+                                         block=64, interpret=True)
+    o0, e0, s0 = kpp.prim_persist_pallas(X, aux, i0, metric=metric,
+                                         block=64, interpret=True,
+                                         prune=False)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o0))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+    # the eager schedule folds every LIVE tile every step (dead tiles —
+    # fully selected — are skipped by both schedules), so it is bounded
+    # by the fold-everything count; bound pruning must still cut tile
+    # fetches well below the eager schedule on well-separated contiguous
+    # clusters
+    assert int(s0[0]) <= (700 - 1) * (704 // 64)
+    assert int(s1[0]) < int(s0[0]) * 2 // 3, (int(s1[0]), int(s0[0]))
+
+
+@pytest.mark.parametrize("offset", [100.0, 1000.0])
+@pytest.mark.parametrize("metric", ["euclidean", "sqeuclidean", "manhattan"])
+def test_pruning_sound_on_uncentered_data(metric, offset):
+    """Regression (review finding): the Gram-trick rows the bound is
+    compared against carry ABSOLUTE cancellation error ~eps·max‖x‖², so
+    on data offset far from the origin a purely relative bound margin
+    over-prunes.  The norm-scaled slack must keep prune on/off bitwise
+    at any offset."""
+    rng = np.random.default_rng(offset == 100.0)
+    centers = (5.0 * rng.normal(size=(4, 3))).astype(np.float32)
+    lab = np.sort(rng.integers(0, 4, size=500))
+    X = jnp.asarray(
+        (centers[lab] + rng.normal(size=(500, 3)) + offset).astype(
+            np.float32))
+    aux = kref.metric_aux_ref(X, metric=metric)
+    i0 = _streamed_seed_pivot(X, metric=metric)
+    o1, e1, _ = kpp.prim_persist_pallas(X, aux, i0, metric=metric,
+                                        block=64, interpret=True)
+    o0, e0, _ = kpp.prim_persist_pallas(X, aux, i0, metric=metric,
+                                        block=64, interpret=True,
+                                        prune=False)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o0))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+
+
+def test_pruned_megakernel_matches_mirror_on_clustered_data():
+    """Pruning engaged (clustered contiguous data) still reproduces the
+    XLA mirror's ordering bitwise for the triangle metrics.  sep=8 keeps
+    clusters far enough to prune (~2x fetch cut) while coordinates stay
+    near the origin — at sep=40 the Gram trick's cancellation noise
+    (~|x|^2 * eps) exceeds within-cluster frontier gaps and ANY two dot
+    lowerings legitimately flip near-ties (see docs/kernels.md)."""
+    X = _contig_blobs(500, k=3, seed=7, sep=8.0)
+    for metric in ("euclidean", "sqeuclidean", "manhattan"):
+        a = core.vat_matrix_free(X, metric=metric)
+        b = core.vat_matrix_free(X, metric=metric, use_pallas=True, block=64)
+        np.testing.assert_array_equal(np.asarray(a.order),
+                                      np.asarray(b.order))
+
+
+# ---------------------------------------- dispatch census / HBM traffic ----
+
+def test_turbo_compiles_to_one_loop_free_pallas_call():
+    """The dispatch-count regression gate.  Turbo + Pallas: exactly one
+    pallas_call OUTSIDE any loop (the megakernel; the seed scan's
+    pairwise tile legitimately sits inside its fori_loop).  Stepwise:
+    every pallas_call is loop-nested — re-dispatched each Prim step."""
+    X = _points(257, d=5, seed=3)
+    turbo = kops.kernel_dispatch_stats(
+        lambda A: core.vat_matrix_free(A, use_pallas=True, block=64), X)
+    stepw = kops.kernel_dispatch_stats(
+        lambda A: core.vat_matrix_free(A, use_pallas=True, block=64,
+                                       turbo=False), X)
+    assert turbo["persistent"] == 1, turbo
+    assert stepw["persistent"] == 0, stepw
+    assert stepw["pallas_calls"] >= 2, stepw   # seed tile + stream step
+
+
+def test_turbo_never_falls_back_to_stepwise(monkeypatch):
+    """The guard fallback is the persistent MIRROR, never the stepwise
+    engine — even when the megakernel's VMEM guard rejects the shape."""
+    def boom(*a, **k):
+        raise AssertionError("turbo path reached the stepwise engine")
+    monkeypatch.setattr(kops, "prim_stream_step", boom)
+    monkeypatch.setattr(kpp, "PERSIST_VMEM_BUDGET", 0)   # reject everything
+    X = _points(193, d=4, seed=5)                        # fresh shape
+    order = np.asarray(core.vat_matrix_free(X, use_pallas=True).order)
+    assert sorted(order.tolist()) == list(range(193))
+
+
+def test_turbo_compiled_memory_stays_linear():
+    """HBM side of the regression gate: the persistent program's compiled
+    temp+output stays far below one (n, n) buffer (and below the n*d
+    working set times a small constant)."""
+    n = 32_768
+    X = jnp.zeros((n, 4), jnp.float32)
+    c = jax.jit(lambda A: core.vat_matrix_free(A)).lower(X).compile()
+    ma = c.memory_analysis()
+    total = ma.temp_size_in_bytes + ma.output_size_in_bytes
+    assert total < (n * n * 4) // 8, total
+    # seed tile (~4 MiB) + a few O(n) vectors
+    assert total < 32 * 1024 * 1024, total
+
+
+# ----------------------------------------------------- VMEM-seam guard ----
+
+def test_vmem_seam_routing_flips_at_guard(monkeypatch):
+    """At guard+1 the megakernel runs; at guard-1 the dispatch falls back
+    to the XLA mirror; outputs are bitwise-equal on both sides."""
+    n, d, block = 257, 4, 64
+    need = kpp.persist_state_bytes(n, d, block=block)
+    X = _points(n, d=d, seed=11)
+    aux = kref.metric_aux_ref(X)
+    i0 = _streamed_seed_pivot(X, metric="euclidean")
+
+    calls = {"pallas": 0, "ref": 0}
+    real_pallas, real_ref = kpp.prim_persist_pallas, kref.prim_persist_ref
+
+    def rec_pallas(*a, **k):
+        calls["pallas"] += 1
+        return real_pallas(*a, **k)
+
+    def rec_ref(*a, **k):
+        calls["ref"] += 1
+        return real_ref(*a, **k)
+
+    monkeypatch.setattr("repro.kernels.ops.prim_persist_pallas", rec_pallas)
+    monkeypatch.setattr("repro.kernels.ops.ref.prim_persist_ref", rec_ref)
+
+    monkeypatch.setattr(kpp, "PERSIST_VMEM_BUDGET", need + 1)
+    assert kpp.persist_supported(n, d, block=block)
+    above = kops.prim_persist(X, aux, i0, block=block, use_pallas=True)
+    assert calls == {"pallas": 1, "ref": 0}
+
+    monkeypatch.setattr(kpp, "PERSIST_VMEM_BUDGET", need - 1)
+    assert not kpp.persist_supported(n, d, block=block)
+    below = kops.prim_persist(X, aux, i0, block=block, use_pallas=True)
+    assert calls == {"pallas": 1, "ref": 1}
+
+    np.testing.assert_array_equal(np.asarray(above[0]), np.asarray(below[0]))
+    # edge values cross the kernel/mirror lowering boundary: ulp-close
+    np.testing.assert_allclose(np.asarray(above[1]), np.asarray(below[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_state_bytes_scale_and_real_budget():
+    """The guard arithmetic: state is O(n), independent of X's O(n·d)
+    footprint beyond one tile, and the ISSUE's n=100k case fits the real
+    budget comfortably."""
+    small = kpp.persist_state_bytes(1024, 8)
+    big = kpp.persist_state_bytes(100_000, 8)
+    assert big < small * 200                       # linear-ish, not n*d-ish
+    assert kpp.persist_supported(100_000, 8)
+    assert not kpp.persist_supported(500_000_000, 8)
+
+
+# ------------------------------------------------- seed-scan dispatch ----
+
+@pytest.mark.parametrize("metric", ["euclidean", "manhattan"])
+def test_seed_scan_pallas_routing_and_equivalence(metric, monkeypatch):
+    """ISSUE 5 satellite: the seed scan goes through kernels.ops pairwise
+    dispatch, so use_pallas reaches the MXU tile; the selected seed (and
+    the whole ordering) matches the XLA route."""
+    calls = []
+    real = kops.pairwise_dist
+
+    def recording(X, Y=None, **kw):
+        calls.append(kw.get("use_pallas", False))
+        return real(X, Y, **kw)
+
+    # core.vat imports the ops MODULE (as kops), so patching the module
+    # attribute is seen by the seed scan
+    monkeypatch.setattr(kops, "pairwise_dist", recording)
+    X = _points(201, d=4, seed=13)                 # fresh shape per metric
+    a = _streamed_seed_pivot(X, metric=metric)
+    assert calls and not any(calls)
+    calls.clear()
+    b = _streamed_seed_pivot(X, metric=metric, use_pallas=True)
+    assert calls and all(calls)
+    assert int(a) == int(b)
+
+
+# ------------------------------------------------------- facade surface ----
+
+def test_facade_turbo_knob_orderings_agree():
+    X = np.asarray(_contig_blobs(300, k=3, seed=10))
+    auto = FastVAT(method="flashvat", sample_size=32).fit(X)
+    off = FastVAT(method="flashvat", sample_size=32, turbo=False).fit(X)
+    np.testing.assert_array_equal(auto.order(), off.order())
+    assert auto.assess()["k_est"] == 3
+
+
+def test_registry_auto_threshold_raised():
+    from repro.api import MEDIUM_N, select_method
+    assert MEDIUM_N == 50_000
+    assert select_method(30_000) == "flashvat"
+    assert select_method(MEDIUM_N + 1) == "bigvat"
+
+
+# ------------------------------------------------ sharded multi-device ----
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro import core
+    rng = np.random.default_rng(1)
+    mesh = jax.make_mesh((8,), ("data",))
+    for metric in ("euclidean", "sqeuclidean", "manhattan", "cosine"):
+        for n in (64, 100):      # 100 % 8 != 0 -> internal padding
+            X = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+            solo = core.vat_matrix_free(X, metric=metric)
+            sh = core.vat_matrix_free_sharded(X, mesh, metric=metric)
+            assert np.array_equal(np.asarray(solo.order), np.asarray(sh.order)), (metric, n)
+            assert np.array_equal(np.asarray(solo.edges), np.asarray(sh.edges)), (metric, n)
+    # Pallas local step on a real multi-shard mesh: per-shard nl=13 with
+    # block=8 exercises the per-shard pad_points seam
+    X = jnp.asarray(rng.normal(size=(100, 4)).astype(np.float32))
+    sh = core.vat_matrix_free_sharded(X, mesh, use_pallas=True, block=8)
+    assert np.array_equal(np.asarray(core.vat_matrix_free(X).order),
+                          np.asarray(sh.order)), "pallas sharded order"
+    print("SHARD_TURBO_OK")
+""")
+
+
+def test_sharded_multi_device_subprocess():
+    # JAX_PLATFORMS=cpu: without it backend init can hang probing for a
+    # TPU plugin (same pattern as test_core_extra's dvat test)
+    r = subprocess.run([sys.executable, "-c", SHARD_SCRIPT],
+                       capture_output=True, text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert "SHARD_TURBO_OK" in r.stdout, r.stderr[-2000:]
