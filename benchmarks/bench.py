@@ -25,13 +25,21 @@ benchmarks/README.md):
             same points — wall time, peak_bytes, and the static dispatch
             census (how many pallas_calls, how many outside any loop)
             of each engine's Pallas variant.
+  approx  — the million-point rung (ISSUE 6): the exact matrix-free
+            engine vs the kNN-graph Borůvka pipeline on overlap sizes
+            where both run — wall time, the kNN kernel's compiled
+            working set, and the MST-weight ratio vs exact (a schema-v4
+            ``quality`` row: accuracy on record, exempt from the
+            wall-time gate).
   table2/table3 — the paper's Hopkins and clustering-alignment quality
             tables (us_per_call 0 — they record accuracy, not speed).
 
 Every row records the ``metric`` it was measured under and (schema v3)
 its ``peak_bytes`` — XLA temp + output allocation of the measured
 program, or null where memory was not profiled; tables predating metric
-pluggability are euclidean throughout.
+pluggability are euclidean throughout.  Schema v4 adds the optional
+per-row ``quality`` flag: true marks rows that carry accuracy, not wall
+time, and ``compare.py`` keeps them out of the regression gate.
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
@@ -55,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 TABLES = ("table1", "table2", "table3", "table4", "batched", "ivat",
-          "metrics", "flash", "turbo")
+          "metrics", "flash", "turbo", "approx")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
@@ -71,6 +79,11 @@ _FLASH_SIZES = (2_048, 8_192)
 _FLASH_SIZES_SMOKE = (4_096,)
 _TURBO_SIZES = (8_192,)
 _TURBO_SIZES_SMOKE = (2_048,)
+# approx-vs-exact overlap sizes: both engines must finish, so the sweep
+# tops out where the exact matrix-free engine is still minutes-feasible
+_APPROX_SIZES = (20_000, 50_000)
+_APPROX_SIZES_SMOKE = (4_096,)
+_APPROX_K = 15
 # paper datasets the CI-sized table2/table3 keep (mirrors table1 smoke)
 _QUALITY_DATASETS_SMOKE = ("iris", "blobs")
 
@@ -152,7 +165,9 @@ def bench_table3(smoke: bool, reps: int) -> list[dict]:
 
 def bench_table4(smoke: bool, reps: int) -> list[dict]:
     from benchmarks import vat_tables as T
-    sizes = (20_000,) if smoke else (20_000, 50_000, 100_000)
+    # the 1M row is the ISSUE-6 headline: the approx rung is the only
+    # method that fits it on one CPU (auto-selected past MEDIUM_N)
+    sizes = (20_000,) if smoke else (20_000, 50_000, 100_000, 1_000_000)
     rows = []
     for r in T.table4(sizes=sizes, reps=reps):
         rows.append(_row("table4", f"n{r['n']}/{r['method']}", r["fit_s"],
@@ -330,11 +345,63 @@ def bench_turbo(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
+def bench_approx(smoke: bool, reps: int) -> list[dict]:
+    """Exact matrix-free VAT vs the kNN-graph Borůvka rung (ISSUE 6).
+
+    Run on overlap sizes where BOTH engines finish, so every approx row
+    carries its ground truth: wall time against the exact engine, the
+    kNN kernel's compiled working set against the (n, n) bytes exact
+    materialization would need, and the MST-weight ratio (approx / exact
+    — 1.0 means the kNN graph contained the true MST).  The ratio row is
+    a schema-v4 ``quality`` row: us_per_call 0, exempt from compare.py's
+    wall gate, so accuracy regressions surface in review rather than as
+    timing flake.
+    """
+    from repro import core
+    from repro.data.synth import make_big_blobs
+    from repro.kernels import ops as kops
+    k = _APPROX_K
+    rows = []
+    for n in (_APPROX_SIZES_SMOKE if smoke else _APPROX_SIZES):
+        X, _ = make_big_blobs(n=n, k=5)
+        Xj = jnp.asarray(X)
+        kk = min(k, n - 1)
+
+        exact = core.vat_matrix_free(Xj)                   # warm + reference
+        exact_w = float(np.sum(np.asarray(exact.edges), dtype=np.float64))
+        t_exact = _time(lambda A: core.vat_matrix_free(A).order, Xj,
+                        reps=reps)
+        rows.append(_row("approx", f"n{n}/exact_flash", t_exact,
+                         peak_bytes=_peak_bytes(
+                             lambda A: core.vat_matrix_free(A), Xj)))
+
+        res = core.approx_vat(X, k=kk)                     # warm jit caches
+        t_apx = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            res = core.approx_vat(X, k=kk)
+            t_apx = min(t_apx, time.perf_counter() - t0)
+        # the kNN build dominates the pipeline; its compiled working set
+        # is the memory story (vs n^2 * 4 bytes for materialization)
+        pb = _peak_bytes(lambda A: kops.knn_graph(A, k=kk)[0], Xj)
+        rows.append(_row("approx", f"n{n}/knn_boruvka_k{kk}", t_apx,
+                         peak_bytes=pb, nn_bytes=n * n * 4,
+                         knn_mode=res.stats.mode,
+                         speedup_vs_exact=round(t_exact / t_apx, 2)))
+        quality = _row("approx", f"n{n}/mst_weight_ratio_k{kk}", 0.0,
+                       weight_ratio=round(res.stats.mst_weight / exact_w, 6),
+                       components=res.stats.components,
+                       repair_weight=round(res.stats.repair_weight, 4))
+        quality["quality"] = True
+        rows.append(quality)
+    return rows
+
+
 _BENCHES = {"table1": bench_table1, "table2": bench_table2,
             "table3": bench_table3, "table4": bench_table4,
             "batched": bench_batched, "ivat": bench_ivat,
             "metrics": bench_metrics, "flash": bench_flash,
-            "turbo": bench_turbo}
+            "turbo": bench_turbo, "approx": bench_approx}
 assert set(_BENCHES) == set(TABLES)
 
 
@@ -347,7 +414,7 @@ def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
         print(f"# bench: {t} ...", file=sys.stderr)
         rows.extend(_BENCHES[t](smoke, reps))
     return {
-        "schema_version": 3,
+        "schema_version": 4,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {
             "platform": platform.platform(),

@@ -12,10 +12,10 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 #: Older snapshot versions this validator still accepts (the committed
 #: BENCH_*.json trajectory must keep validating as the schema grows).
-ACCEPTED_VERSIONS = (2, 3)
+ACCEPTED_VERSIONS = (2, 3, 4)
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
@@ -23,6 +23,9 @@ _CONFIG_KEYS = {"smoke", "reps", "tables"}
 _ROW_KEYS = {"table", "name", "metric", "us_per_call", "derived"}
 # v3 adds per-row peak working-set accounting (null where not profiled)
 _ROW_KEYS_V3 = _ROW_KEYS | {"peak_bytes"}
+# v4 adds the OPTIONAL per-row ``quality`` flag: true marks a row that
+# records accuracy (e.g. approx's MST-weight ratio) rather than wall
+# time — compare.py keeps such rows out of the regression gate.
 
 
 def _fail(msg: str):
@@ -89,6 +92,11 @@ def validate(doc: dict) -> dict:
             if pb is not None and (not isinstance(pb, (int, float))
                                    or isinstance(pb, bool) or pb < 0):
                 _fail(f"{where}.peak_bytes must be a number >= 0 or null")
+        if "quality" in row:
+            if version < 4:
+                _fail(f"{where}.quality needs schema_version >= 4")
+            if not isinstance(row["quality"], bool):
+                _fail(f"{where}.quality must be a bool when present")
     return doc
 
 

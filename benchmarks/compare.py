@@ -13,8 +13,10 @@ Per-table overrides (ISSUE 5 satellite): ``--table-threshold NAME=VAL``
 (repeatable) replaces the global gate for one table — looser for tables
 whose rows are dominated by loop-dispatch jitter on shared runners
 (turbo), tighter where timings are stable.  Rows whose baseline
-``us_per_call`` is 0 (the quality tables table2/table3) never
-participate in the wall-time gate — they carry accuracy in ``derived``.
+``us_per_call`` is 0 (the quality tables table2/table3) or that carry
+the schema-v4 ``"quality": true`` flag (approx's MST-weight ratio)
+never participate in the wall-time gate — they carry accuracy in
+``derived``.
 
 CLI:
   PYTHONPATH=src python -m benchmarks.compare BASELINE.json NEW.json
@@ -59,7 +61,8 @@ def diff(base: dict, new: dict, *, threshold: float = 0.20,
     regressions = []
     for name in (k for k in brows if k in nrows):
         b, n = brows[name], nrows[name]
-        if b["us_per_call"] == 0:      # quality row: no wall time to gate
+        # quality rows carry accuracy, not wall time — nothing to gate
+        if b["us_per_call"] == 0 or b.get("quality") or n.get("quality"):
             continue
         ratio = n["us_per_call"] / b["us_per_call"]
         thr = overrides.get(b["table"], threshold)

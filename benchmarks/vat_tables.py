@@ -6,10 +6,10 @@ table2 — Hopkins statistic per dataset (paper Table 2).
 table3 — clustering alignment: VAT insight vs K-Means vs DBSCAN ARI
          against ground truth (paper Table 3).
 table4 — scaling beyond the paper's n ~ 1e4 wall: wall time, throughput,
-         and k-estimate accuracy of the FastVAT facade at n = 2e4 .. 1e5
-         (auto-selects matrix-free exact flashvat at the 2e4 boundary,
-         the out-of-core clusiVAT pipeline repro.core.bigvat above it;
-         each row names its method).
+         and k-estimate accuracy of the FastVAT facade at n = 2e4 .. 1e6
+         (auto-selects matrix-free exact flashvat through 5e4, the
+         kNN-graph Borůvka ``approx`` rung above it — the only method
+         that fits the 1e6 row on one CPU; each row names its method).
 
 Usage and output schema: benchmarks/README.md.
 """
@@ -85,10 +85,10 @@ def table2(datasets=None):
 
 
 def table4(sizes=(20_000, 50_000, 100_000), k_true: int = 5, reps: int = 1):
-    """Big-VAT wall time + tendency accuracy at paper-breaking n.
+    """Scaling wall time + tendency accuracy at paper-breaking n.
 
     Rows: n, fit_s, points_per_s, k_est, k_true, hopkins, method — each n
-    runs the FastVAT facade, which auto-selects flashvat/bigvat by size.
+    runs the FastVAT facade, which auto-selects flashvat/approx by size.
     ``fit_s`` is best-of-``reps`` (default 1: a fit at n = 1e5 is
     seconds, and run-to-run variance is small next to it).
     """

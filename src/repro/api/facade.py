@@ -6,11 +6,13 @@ Picks the right scaling rung automatically (see ``docs/scaling.md``):
   n <= MEDIUM_N (50_000)  ``flashvat``    — exact, matrix-free, O(n·d),
                           Turbo persistent engine (auto-sharded on a
                           multi-device mesh)
-  larger                  ``bigvat``      — clusiVAT pipeline, no (n, n)
+  larger                  ``approx``      — kNN-graph Borůvka MST VAT,
+                          O(n·k) edges, the million-point rung (the
+                          ``knn_k`` knob trades error for speed)
 
 ``method`` overrides come from the rung registry (``repro.api.registry``)
-— "vat" | "ivat" | "svat" | "flashvat" | "bigvat" | "dvat" plus anything
-third-party code registered.  Every rung returns the same
+— "vat" | "ivat" | "svat" | "flashvat" | "bigvat" | "approx" | "dvat"
+plus anything third-party code registered.  Every rung returns the same
 ``TendencyResult`` pytree, so ``order()`` / ``image()`` / ``assess()``
 below are branch-free reads.
 
@@ -88,6 +90,12 @@ class FastVAT:
                   engine (opting out of auto-sharding); False pins the
                   stepwise engine.  Orderings are identical either way;
                   only the wall clock moves.
+    knn_k:        the approx rung's error-bound knob — neighbours per
+                  point in its kNN graph.  Larger k costs linearly more
+                  and drives the kNN-MST weight monotonically down to
+                  the exact MST weight (reached at k = n-1); the fit's
+                  ``ResultMeta.approx`` reports the realized error
+                  model (components repaired, repair weight).
     seed:         the single seed every sampling path (device and host
                   side) derives from — see ``ResultMeta``.
     """
@@ -95,7 +103,7 @@ class FastVAT:
     def __init__(self, method: str = "auto", *, metric: str = "euclidean",
                  sample_size: int = 256, block: int = DEFAULT_BLOCK,
                  use_pallas: bool = False, turbo: bool | None = None,
-                 seed: int = 0):
+                 knn_k: int = 15, seed: int = 0):
         methods = registry.methods()
         if method not in methods:
             raise ValueError(f"method must be one of {methods}, "
@@ -107,6 +115,7 @@ class FastVAT:
         self.block = block
         self.use_pallas = use_pallas
         self.turbo = turbo
+        self.knn_k = knn_k
         self.seed = seed
         self.method_resolved: str | None = None
         self.result: TendencyResult | None = None
@@ -125,7 +134,7 @@ class FastVAT:
 
     def _options(self) -> RungOptions:
         return RungOptions(sample_size=self.sample_size, block=self.block,
-                           turbo=self.turbo)
+                           turbo=self.turbo, knn_k=self.knn_k)
 
     # ------------------------------------------------------------- fit ----
 

@@ -17,9 +17,11 @@ pipeline) register here and immediately work through ``FastVAT`` and
 
 >>> from repro.api import registry
 >>> sorted(registry.registered())
-['bigvat', 'dvat', 'flashvat', 'ivat', 'svat', 'vat']
+['approx', 'bigvat', 'dvat', 'flashvat', 'ivat', 'svat', 'vat']
 >>> registry.select_method(100), registry.select_method(10_000)
 ('vat', 'flashvat')
+>>> registry.select_method(1_000_000)
+'approx'
 >>> registry.get_rung("bigvat").supports_batch
 False
 >>> registry.get_rung("vat").supports_precomputed
@@ -43,11 +45,12 @@ from repro.api.result import SALT_FIT, ResultMeta, TendencyResult
 from repro.kernels import ops as kops
 
 #: Auto-selection thresholds (see docs/scaling.md): materialized exact
-#: VAT below SMALL_N, matrix-free exact VAT (flashvat) to MEDIUM_N,
-#: Big-VAT beyond (sVAT — the sampled approximation flashvat obsoletes
-#: in this window — stays registered as an opt-in rung).  The Turbo
-#: persistent engine (ISSUE 5) cut flashvat's per-fit wall time ~4x, so
-#: its practical ceiling rose from 20k to 50k points.
+#: VAT below SMALL_N, matrix-free exact VAT (flashvat) to MEDIUM_N, the
+#: kNN-graph Boruvka approximation (approx) beyond — the million-point
+#: rung.  sVAT and bigvat (the sampled approximations the exact/approx
+#: ladder obsoletes in their former windows) stay registered as opt-in
+#: rungs.  The Turbo persistent engine (ISSUE 5) cut flashvat's per-fit
+#: wall time ~4x, so its practical ceiling rose from 20k to 50k points.
 SMALL_N = 2_048
 MEDIUM_N = 50_000
 
@@ -65,10 +68,17 @@ class RungOptions(NamedTuple):
     engine when more than one device is visible and n is worth the
     collectives; True forces the SOLO persistent engine (opting out of
     auto-sharding); False forces the PR-4 stepwise engine (solo only).
+
+    ``knn_k`` is the approx rung's accuracy knob: neighbours kept per
+    point in the kNN graph its Boruvka MST runs over.  Larger k tightens
+    the kNN-MST toward the exact MST (identical at k = n-1) at O(n·k)
+    memory and time; the error actually incurred is reported on
+    ``ResultMeta.approx``.
     """
     sample_size: int = 256
     block: int = 4096
     turbo: bool | None = None
+    knn_k: int = 15
 
 
 Fitter = Callable[[Any, ResultMeta, RungOptions], TendencyResult]
@@ -307,35 +317,67 @@ def _flash_order(Xj, meta: ResultMeta, opts: RungOptions):
                                 else opts.turbo)
 
 
+def _band_render(Xj: jax.Array, order: jax.Array, meta: ResultMeta,
+                 opts: RungOptions) -> TendencyResult:
+    """bigvat-style banded rendering of a full-n ordering.
+
+    The rendering idea is bigvat's in reverse: m = sample_size
+    representatives are taken at the middle of m contiguous bands of the
+    given full-n ordering, their (m, m) dissimilarity matrix inherits
+    that band order, and ``TendencyResult.image`` expands it by the true
+    band sizes — so the picture shows all n points while only an (m, m)
+    object ever exists.  The iVAT companion runs along the
+    representatives' own Prim traversal (see ``_rep_ivat``) and is
+    re-indexed to the same bands.  Shared by the flashvat (exact order)
+    and approx (kNN-MST order) rungs.
+    """
+    n, m = meta.n, min(opts.sample_size, meta.n)
+    sizes, mids = _flash_groups(n, m)
+    rep_idx = order[jnp.asarray(mids)]
+    Rrep = kops.pairwise_dist(Xj[rep_idx], use_pallas=meta.use_pallas,
+                              metric=meta.metric)
+    iv = _rep_ivat(Rrep, meta.use_pallas)
+    gid = jnp.asarray(np.repeat(np.arange(m, dtype=np.int32), sizes))
+    labels = jnp.zeros((n,), jnp.int32).at[order].set(gid)
+    return TendencyResult(order=order, rstar=Rrep, ivat_image=iv,
+                          sample_idx=rep_idx, extension_labels=labels,
+                          group_sizes=jnp.asarray(sizes, jnp.int32),
+                          meta=meta)
+
+
 def _fit_flashvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
     """Flash-VAT: exact matrix-free ordering + bigvat-style tiled render.
 
     The ordering is the exact full-n VAT order (bitwise-identical to the
     materialized path) at O(n·d) memory — computed by the engine
-    ``_flash_order`` selects (Turbo persistent / sharded / stepwise).
-    The image reuses bigvat's rendering idea in reverse: m = sample_size
-    representatives are taken at the middle of m contiguous bands of the
-    *exact* ordering, their (m, m) dissimilarity matrix inherits that
-    band order, and ``TendencyResult.image`` expands it by the true band
-    sizes — so the picture shows all n points while only an (m, m)
-    object ever exists.  The iVAT companion runs along the
-    representatives' own Prim traversal (see ``_rep_ivat``) and is
-    re-indexed to the same bands.
+    ``_flash_order`` selects (Turbo persistent / sharded / stepwise) —
+    then rendered through the shared ``_band_render`` tail.
     """
     Xj = _as_f32(data)
     res = _flash_order(Xj, meta, opts)
-    n, m = meta.n, min(opts.sample_size, meta.n)
-    sizes, mids = _flash_groups(n, m)
-    rep_idx = res.order[jnp.asarray(mids)]
-    Rrep = kops.pairwise_dist(Xj[rep_idx], use_pallas=meta.use_pallas,
-                              metric=meta.metric)
-    iv = _rep_ivat(Rrep, meta.use_pallas)
-    gid = jnp.asarray(np.repeat(np.arange(m, dtype=np.int32), sizes))
-    labels = jnp.zeros((n,), jnp.int32).at[res.order].set(gid)
-    return TendencyResult(order=res.order, rstar=Rrep, ivat_image=iv,
-                          sample_idx=rep_idx, extension_labels=labels,
-                          group_sizes=jnp.asarray(sizes, jnp.int32),
-                          meta=meta)
+    return _band_render(Xj, res.order, meta, opts)
+
+
+def _fit_approx(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    """Approx-VAT: kNN-graph Boruvka MST ordering, the million-point rung.
+
+    The ordering comes from ``core.approx_vat`` — a Prim traversal of
+    the minimum spanning tree of the k-nearest-neighbour graph (exact
+    blocked kNN below its crossover, anchor-partitioned beyond), built
+    by a jitted Boruvka fold at O(n·k) edge memory.  It is exact
+    whenever the kNN graph contains the true MST (guaranteed at
+    k = n-1, typical for modest k on clusterable data); the incurred
+    error is measured, not guessed: ``ResultMeta.approx`` carries the
+    spanning defect (components before repair, edges the repair pass
+    added and their weight) next to the kNN-MST weight, so callers can
+    bound the approximation or rerun with a larger ``knn_k``.  Rendering
+    shares flashvat's banded tail — no (n, n) object at any stage.
+    """
+    Xj = _as_f32(data)
+    res = core.approx_vat(Xj, k=opts.knn_k, metric=meta.metric,
+                          use_pallas=meta.use_pallas)
+    meta = dataclasses.replace(meta, approx=res.stats)
+    return _band_render(Xj, jnp.asarray(res.order), meta, opts)
 
 
 def _fit_flashvat_batch(data, meta: ResultMeta,
@@ -414,8 +456,14 @@ register(Rung(
     description="matrix-free exact VAT (Flash-VAT): fused streaming "
                 "Prim, O(n·d) memory, no (n, n) object"))
 register(Rung(
-    name="bigvat", fit=_fit_bigvat, auto_threshold=math.inf,
-    description="out-of-core clusiVAT pipeline, no (n, n) object"))
+    name="bigvat", fit=_fit_bigvat, auto_threshold=None,
+    description="out-of-core clusiVAT pipeline, no (n, n) object; "
+                "opt-in (approx covers its former auto window with a "
+                "measured error bound)"))
+register(Rung(
+    name="approx", fit=_fit_approx, auto_threshold=math.inf,
+    description="kNN-graph Boruvka MST VAT, O(n·k) edges — the "
+                "million-point rung; error reported on meta.approx"))
 register(Rung(
     name="dvat", fit=_fit_dvat, check=_check_dvat, auto_threshold=None,
     description="matrix-free distributed VAT; needs >1 device"))

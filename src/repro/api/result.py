@@ -40,6 +40,7 @@ import numpy as np
 
 import jax
 
+from repro.core.approx_mst import ApproxStats
 from repro.core.bigvat import expand_image
 from repro.core.ivat import ivat_from_vat
 
@@ -65,6 +66,9 @@ class ResultMeta:
       seed: the single seed every sampling path derives from.
       sample_size: s for the sampling rungs; None where unused.
       use_pallas: whether Pallas kernels were requested.
+      approx: the approx rung's error report (``core.ApproxStats`` — a
+        frozen, hashable dataclass, so meta stays valid pytree aux
+        data); None for every exact rung.
     """
 
     method: str
@@ -74,6 +78,7 @@ class ResultMeta:
     seed: int = 0
     sample_size: int | None = None
     use_pallas: bool = False
+    approx: ApproxStats | None = None
 
     def jax_key(self, salt: int = SALT_FIT) -> jax.Array:
         """PRNG key for device-side sampling, derived from the one seed."""

@@ -24,6 +24,9 @@ except ImportError as _e:  # degrade gracefully — single-host paths stay usabl
     HAS_DISTRIBUTED = False
     DISTRIBUTED_IMPORT_ERROR = repr(_e)   # keep the real cause debuggable
 from repro.core.bigvat import bigvat, BigVATResult, nearest_prototype_assign
+from repro.core.approx_mst import (approx_vat, boruvka_mst, knn_graph_anchored,
+                                   mst_vat_order, ApproxStats,
+                                   ApproxVATResult, MSTEdges)
 from repro.core.diagnostics import activation_report, embedding_tendency, router_tendency, TendencyReport
 from repro.core.cluster import kmeans, dbscan, adjusted_rand_index, pca
 
@@ -35,6 +38,8 @@ __all__ = [
     "ivat_batch_from_vat", "ivat_from_vat", "svat",
     "maximin_sample", "SVATResult", "hopkins", "HAS_DISTRIBUTED",
     "bigvat", "BigVATResult", "nearest_prototype_assign",
+    "approx_vat", "boruvka_mst", "knn_graph_anchored", "mst_vat_order",
+    "ApproxStats", "ApproxVATResult", "MSTEdges",
     "activation_report",
     "embedding_tendency", "router_tendency", "TendencyReport",
 ]

@@ -1,0 +1,547 @@
+"""Approximate VAT via a kNN-graph Borůvka MST — the million-point rung.
+
+Exact VAT is a Prim traversal of the complete graph: O(n²·d) work no
+matter how well it streams (the Turbo engine's ceiling is ~100k points
+on CPU).  This rung trades exactness for scale the way tmap does for
+molecular maps: build a sparse kNN graph (O(n·k) edges), take ITS
+minimum spanning tree with Borůvka's algorithm, and traverse that tree
+in Prim order to get a VAT ordering.  The kNN-MST weight is always >=
+the true MST weight (it spans using a subset of edges), with equality
+exactly when the true MST is contained in the kNN graph — at k = n-1
+the two pipelines coincide, which is the oracle the property suite
+certifies against.
+
+Stages:
+
+  * kNN graph — ``kernels.ops.knn_graph`` (blocked/Pallas, exact) below
+    ``EXACT_KNN_N``, else ``knn_graph_anchored``: an IVF-style two-level
+    search (random anchors ≈ sqrt(n), a blocked assignment pass, brute
+    force within each point's ``probes`` nearest anchor cells) that
+    keeps every intermediate O(n·probes·k) — brute-force kNN at 1M
+    points would be 10^13 flops; the anchored pass is ~10^10.
+  * Borůvka — ``_boruvka_pass`` is one jittable fold: symmetrize the
+    directed kNN list (each entry contributes (u→v) and (v→u) sharing
+    ONE weight, so every component sees every incident edge under a
+    globally consistent key), pick each component's minimum incident
+    cross edge by a three-stage lexicographic ``segment_min`` on
+    (w, min-endpoint, max-endpoint) — x64 is disabled, so no packed
+    64-bit keys — hook components along the picks, break the resulting
+    2-cycles toward the smaller root, and collapse labels by pointer
+    jumping.  Distinct lexicographic keys make cycles longer than 2
+    impossible (keys are non-increasing around any hooking cycle, so
+    all hops share one key = one edge pair), which is what lets the
+    pointer-jump ``while_loop`` terminate unconditionally.  A host loop
+    re-invokes the pass until no component finds a cross edge —
+    Borůvka halves the component count per pass, so ≤ ceil(log2 n)+2
+    iterations.
+  * connectivity repair — a kNN graph need not be connected (separated
+    blobs with small k never are).  The surviving components are
+    spliced with per-component fallback edges: the minimum-index vertex
+    represents each component, and an exact host-side Prim over the
+    representatives' true pairwise dissimilarities supplies C-1 real
+    edges (a chain over representatives past ``REPAIR_MAX_C``, where
+    the (C, C) matrix would defeat the memory story).  The repair is
+    reported in ``ApproxStats`` — it is the spanning-defect estimate.
+  * ordering — ``mst_vat_order``: a host heap Prim restricted to the
+    tree's n-1 edges.  The heap key (weight, vertex) reproduces exact
+    Prim's first-index tie rule, so on the full graph (k = n-1) the
+    ordering is identical to ``core.vat.vat_matrix_free``'s given the
+    same seed.  The default seed is the vertex with the largest k-NN
+    radius — at k = n-1 that IS exact VAT's "argmax of row max" rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+import math
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.ref import check_metric, pairwise_dissim_ref
+
+#: Largest n the auto mode serves with exact blocked kNN (O(n²·d) work);
+#: past it the anchored two-level search keeps the build near-linear.
+EXACT_KNN_N = 32_768
+
+#: Largest surviving-component count repaired with an exact Prim over
+#: the (C, C) representative matrix; past it a representative chain
+#: keeps repair memory O(C).
+REPAIR_MAX_C = 4_096
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxStats:
+    """The approx rung's error-model report (rides on ``ResultMeta``).
+
+    Attributes:
+      k: neighbours per point actually used (min(k, n-1)).
+      mode: "exact" (blocked brute-force kNN) or "anchored" (two-level).
+      n_passes: Borůvka passes until no cross edge remained.
+      components: kNN-graph components before repair (1 = no defect).
+      repaired_edges: fallback edges spliced in (= components - 1).
+      mst_weight: total tree weight, repair included (f64 sum).  Always
+        >= the exact MST weight; the ratio against exact is the
+        quality row ``benchmarks.bench`` reports on overlap sizes.
+      repair_weight: weight contributed by the fallback edges alone —
+        together with ``repaired_edges`` this is the spanning-defect
+        estimate (0.0 means the kNN graph already spanned).
+    """
+
+    k: int
+    mode: str
+    n_passes: int
+    components: int
+    repaired_edges: int
+    mst_weight: float
+    repair_weight: float
+
+
+class MSTEdges(NamedTuple):
+    """A spanning tree as parallel host arrays (n-1 edges when spanning)."""
+    src: np.ndarray      # (m,) int32
+    dst: np.ndarray      # (m,) int32
+    weight: np.ndarray   # (m,) float32
+
+
+class ApproxVATResult(NamedTuple):
+    """Approximate VAT ordering + its MST edge trace + the error report."""
+    order: np.ndarray    # (n,) int32 — visit order
+    edges: np.ndarray    # (n,) float32 — per-visit tree edge (edges[0]=0)
+    stats: ApproxStats
+
+
+@jax.jit
+def _boruvka_pass(comp, src, dst, w):
+    """One Borůvka round: per-component min cross edge, hook, collapse.
+
+    Args:
+      comp: (n,) int32 — current component label per vertex (a vertex id;
+        label arrays double as the union-find forest).
+      src, dst: (m,) int32 — directed edge endpoints, both directions
+        present, self-loops allowed (they mask out as cu == cv).
+      w: (m,) float32 — edge weights, identical for the two directions
+        of one edge (the caller's symmetrization guarantees it).
+
+    Returns:
+      (new_comp (n,) i32, va (n,) i32, vb (n,) i32, ew (n,) f32,
+       rec (n,) bool): per component-root c, the selected edge
+      (va[c], vb[c], ew[c]) and whether to record it (rec — False for
+      rootless indices and the dropped side of each 2-cycle).
+    """
+    n = comp.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    cu = comp[src]
+    cv = comp[dst]
+    wm = jnp.where(cu != cv, w, jnp.inf)
+    amin = jnp.minimum(src, dst)
+    amax = jnp.maximum(src, dst)
+    # Lexicographic (w, amin, amax) segment-min, one stage per field —
+    # ties on w resolve to one concrete edge pair, which is what rules
+    # out hooking cycles longer than 2.
+    m1 = jax.ops.segment_min(wm, cu, num_segments=n)
+    e1 = wm == m1[cu]
+    m2 = jax.ops.segment_min(jnp.where(e1, amin, n), cu, num_segments=n)
+    e2 = e1 & (amin == m2[cu])
+    m3 = jax.ops.segment_min(jnp.where(e2, amax, n), cu, num_segments=n)
+    has = jnp.isfinite(m1)
+    va = jnp.where(has, m2, 0).astype(jnp.int32)
+    vb = jnp.where(has, m3, 0).astype(jnp.int32)
+    ca = comp[va]
+    cb = comp[vb]
+    parent = jnp.where(has, jnp.where(ca == iota, cb, ca), iota)
+    # 2-cycle break: both sides picked the same edge; keep the smaller
+    # root, drop the larger side's copy (equal keys => equal weights, so
+    # the recorded weight sum is unaffected).
+    drop = has & (parent[parent] == iota) & (iota < parent)
+    parent = jnp.where(drop, iota, parent)
+    parent = jax.lax.while_loop(
+        lambda p: jnp.any(p != p[p]), lambda p: p[p], parent)
+    return parent[comp], va, vb, jnp.where(has, m1, 0.0), has & ~drop
+
+
+def _prim_edges_np(R: np.ndarray) -> list[tuple[int, int, float]]:
+    """Exact MST edge list of a dense dissimilarity matrix (host Prim).
+
+    O(C²) numpy — the connectivity-repair solver and the small-n oracle
+    the property suite compares Borůvka against.  First-index
+    tie-breaking via np.argmin, matching the exact engine's rule.
+    """
+    C = R.shape[0]
+    in_tree = np.zeros(C, bool)
+    in_tree[0] = True
+    best = R[0].astype(np.float64).copy()
+    best_from = np.zeros(C, np.int64)
+    edges = []
+    for _ in range(C - 1):
+        cand = np.where(in_tree, np.inf, best)
+        v = int(np.argmin(cand))
+        edges.append((int(best_from[v]), v, float(best[v])))
+        in_tree[v] = True
+        upd = R[v] < best
+        best_from = np.where(upd, v, best_from)
+        best = np.where(upd, R[v], best)
+    return edges
+
+
+def _rowwise_dissim_np(A: np.ndarray, B: np.ndarray, metric: str):
+    """Per-row dissimilarity of paired points (repair-chain fallback)."""
+    A = A.astype(np.float32)
+    B = B.astype(np.float32)
+    if metric == "sqeuclidean":
+        return np.sum((A - B) ** 2, axis=1)
+    if metric == "euclidean":
+        return np.sqrt(np.sum((A - B) ** 2, axis=1))
+    if metric == "manhattan":
+        return np.sum(np.abs(A - B), axis=1)
+    na = np.sqrt(np.sum(A * A, axis=1))
+    nb = np.sqrt(np.sum(B * B, axis=1))
+    denom = np.maximum(na * nb, 1e-12)
+    return np.clip(1.0 - np.sum(A * B, axis=1) / denom, 0.0, 2.0)
+
+
+def boruvka_mst(idx, dist, *, X=None, metric: str = "euclidean"):
+    """MST of a directed kNN graph + connectivity repair.
+
+    Args:
+      idx: (n, k) int — per-row neighbour indices; self-loops mark
+        invalid slots and are ignored.
+      dist: (n, k) float — matching dissimilarities.  Each directed
+        entry is symmetrized in here (both directions share its weight),
+        so duplicate (u, v)/(v, u) discoveries become parallel edges of
+        a multigraph rather than an inconsistently-weighted edge.
+      X: (n, d) float or None — required only when the graph turns out
+        disconnected (repair recomputes true representative distances).
+      metric: one of ``kernels.ref.METRICS`` (repair edges only).
+
+    Returns:
+      (MSTEdges, n_passes, components, repair_weight): the spanning
+      edge list (always n-1 edges — repair guarantees it), the Borůvka
+      pass count, the pre-repair component count, and the repair's
+      weight contribution.
+    """
+    check_metric(metric)
+    n, k = np.asarray(idx).shape
+    rows = np.repeat(np.arange(n, dtype=np.int32), k)
+    flat_i = np.asarray(idx, np.int32).ravel()
+    flat_d = np.asarray(dist, np.float32).ravel()
+    src = jnp.asarray(np.concatenate([rows, flat_i]))
+    dst = jnp.asarray(np.concatenate([flat_i, rows]))
+    w = jnp.asarray(np.concatenate([flat_d, flat_d]))
+
+    comp = jnp.arange(n, dtype=jnp.int32)
+    es, ed, ew = [], [], []
+    passes = 0
+    cap = int(math.ceil(math.log2(max(n, 2)))) + 2
+    while passes < cap:
+        comp, va, vb, pw, rec = _boruvka_pass(comp, src, dst, w)
+        recn = np.asarray(rec)
+        if not recn.any():
+            break
+        passes += 1
+        es.append(np.asarray(va)[recn])
+        ed.append(np.asarray(vb)[recn])
+        ew.append(np.asarray(pw)[recn])
+
+    comp_np = np.asarray(comp)
+    roots = np.unique(comp_np)
+    ncomp = int(roots.size)
+    repair_w = 0.0
+    if ncomp > 1:
+        if X is None:
+            raise ValueError(
+                "kNN graph is disconnected; pass X so the spanning repair "
+                "can compute fallback edges")
+        Xn = np.asarray(X, np.float32)
+        reps = np.full(n, n, np.int64)
+        np.minimum.at(reps, comp_np, np.arange(n))
+        reps = reps[roots]                       # min vertex per component
+        if ncomp <= REPAIR_MAX_C:
+            R = np.asarray(kops.pairwise_dist(jnp.asarray(Xn[reps]),
+                                              metric=metric))
+            extra = _prim_edges_np(R)
+            ra = reps[[a for a, _, _ in extra]]
+            rb = reps[[b for _, b, _ in extra]]
+            rw = np.asarray([wgt for _, _, wgt in extra], np.float32)
+        else:  # too many islands for a (C, C) matrix: chain them
+            ra, rb = reps[:-1], reps[1:]
+            rw = _rowwise_dissim_np(Xn[ra], Xn[rb], metric).astype(np.float32)
+        es.append(ra.astype(np.int32))
+        ed.append(rb.astype(np.int32))
+        ew.append(rw)
+        repair_w = float(np.sum(rw, dtype=np.float64))
+
+    if es:
+        tree = MSTEdges(np.concatenate(es).astype(np.int32),
+                        np.concatenate(ed).astype(np.int32),
+                        np.concatenate(ew).astype(np.float32))
+    else:  # n == 1
+        tree = MSTEdges(np.empty(0, np.int32), np.empty(0, np.int32),
+                        np.empty(0, np.float32))
+    return tree, passes, ncomp, repair_w
+
+
+def mst_vat_order(n: int, tree: MSTEdges, i0: int):
+    """VAT ordering of a spanning tree: Prim restricted to tree edges.
+
+    On a tree, Prim's traversal from any vertex visits every vertex by
+    its unique lightest connection to the visited set — the heap key
+    (weight, vertex) reproduces exact Prim's (min value, first index)
+    tie rule, so restricted to the TRUE MST this equals full-graph
+    Prim's order for the same seed.
+
+    Args:
+      n: vertex count.
+      tree: spanning edge list (n-1 edges).
+      i0: seed vertex.
+
+    Returns:
+      (order (n,) int32, edges (n,) float32) — visit order and each
+      visit's tree edge weight (edges[0] = 0), the same trace shape as
+      ``core.vat.FlashVATResult``.
+    """
+    starts = np.concatenate([tree.src, tree.dst]).astype(np.int64)
+    ends = np.concatenate([tree.dst, tree.src]).astype(np.int64)
+    ws = np.concatenate([tree.weight, tree.weight]).astype(np.float64)
+    perm = np.argsort(starts, kind="stable")
+    ends = ends[perm]
+    ws = ws[perm]
+    off = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(starts, minlength=n), out=off[1:])
+
+    order = np.empty(n, np.int32)
+    edges = np.zeros(n, np.float32)
+    visited = np.zeros(n, bool)
+    best = np.full(n, np.inf)
+    best[i0] = 0.0
+    heap = [(0.0, int(i0))]
+    t = 0
+    while heap and t < n:
+        wv, v = heapq.heappop(heap)
+        if visited[v] or wv > best[v]:
+            continue
+        visited[v] = True
+        order[t] = v
+        edges[t] = wv
+        t += 1
+        for e in range(off[v], off[v + 1]):
+            u = int(ends[e])
+            if not visited[u] and ws[e] < best[u]:
+                best[u] = ws[e]
+                heapq.heappush(heap, (float(ws[e]), u))
+    if t < n:  # unreachable once repair guarantees spanning; keep total
+        rest = np.flatnonzero(~visited)
+        order[t:] = rest
+        edges[t:] = 0.0
+    return order, edges
+
+
+def _bucket(size: int) -> int:
+    """Next power of two >= size (floor 8) — the cell-shape bucketing
+    that bounds the jit cache: cells come in every size, and compiling
+    per exact shape would dominate the whole anchored pass."""
+    b = 8
+    while b < size:
+        b <<= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "kk"))
+def _cell_topk(Xq, Xc, qid, cid, *, metric: str, kk: int):
+    """Top-kk candidates per query within one (padded) anchor cell.
+
+    Padded candidate columns carry cid = -1 and padded query rows
+    qid = -2 (distinct sentinels so padding never self-matches); both
+    mask to +inf before the top_k, so they can only fill trailing slots
+    of undersized cells, which the caller invalidates by the inf test.
+    """
+    D = pairwise_dissim_ref(Xq, Xc, metric=metric)
+    bad = (cid[None, :] < 0) | (cid[None, :] == qid[:, None])
+    neg, p = jax.lax.top_k(-jnp.where(bad, jnp.inf, D), kk)
+    return -neg, jnp.take(cid, p)
+
+
+def knn_graph_anchored(X, *, k: int, metric: str = "euclidean",
+                       anchors: int | None = None, probes: int = 2,
+                       use_pallas: bool = False, assign_block: int = 8_192,
+                       rng: np.random.Generator | None = None):
+    """Approximate kNN graph by two-level (IVF-style) search.
+
+    Sample ``anchors`` random points (≈ sqrt(n) by default — random
+    anchors track data density, so cell sizes concentrate near
+    n/anchors), assign every point to its ``probes`` nearest anchors in
+    a blocked pass, then brute-force each anchor cell: the candidates
+    are the cell's primary members, the queries everyone probing it.
+    Probe pools are disjoint (primary assignment partitions the data),
+    so the per-point merge over probes needs no dedup.  Every
+    intermediate is O(assign_block · anchors) or O(cell² ) — nothing
+    (n, n), nothing O(n) per point.
+
+    Recall is the usual IVF story: a true neighbour is missed only when
+    it lives in none of the probed cells; the Borůvka stage's repair
+    covers the resulting (rare) disconnections.
+
+    Args:
+      X: (n, d) float — data points (numpy in, numpy out; the blocked
+        passes go through ``kernels.ops.pairwise_dist``).
+      k: neighbours per point.
+      metric: one of ``kernels.ref.METRICS``.
+      anchors: cell count; None = max(32, round(sqrt(n))).
+      probes: anchor cells searched per point.
+      use_pallas: forwarded to the distance tiles.
+      assign_block: rows per assignment-pass tile.
+      rng: anchor-sampling generator (default_rng(0) when None).
+
+    Returns:
+      (dist (n, k) f32, idx (n, k) i64) — ascending per row; slots the
+      probed cells could not fill hold (inf, -1).
+    """
+    check_metric(metric)
+    Xn = np.asarray(X, np.float32)
+    n, _ = Xn.shape
+    c = anchors if anchors is not None else max(32, int(round(math.sqrt(n))))
+    c = min(c, n)
+    probes = max(1, min(probes, c))
+    rng = rng if rng is not None else np.random.default_rng(0)
+    aidx = rng.choice(n, size=c, replace=False)
+    A = jnp.asarray(Xn[aidx])
+
+    d = Xn.shape[1]
+    probe_idx = np.empty((n, probes), np.int32)
+    for s0 in range(0, n, assign_block):
+        xb = Xn[s0:s0 + assign_block]
+        rows = xb.shape[0]
+        if rows < assign_block:  # keep one eager shape for the whole pass
+            xb = np.vstack([xb, np.zeros((assign_block - rows, d),
+                                         np.float32)])
+        D = kops.pairwise_dist(jnp.asarray(xb), A, metric=metric,
+                               use_pallas=use_pallas)
+        _, pid = jax.lax.top_k(-D, probes)
+        probe_idx[s0:s0 + rows] = np.asarray(pid, np.int32)[:rows]
+
+    # CSR views: candidates by primary cell, queries by each probe slot.
+    primary = probe_idx[:, 0]
+    by_cell = np.argsort(primary, kind="stable")
+    start = np.concatenate([[0],
+                            np.cumsum(np.bincount(primary, minlength=c))])
+    q_order = [np.argsort(probe_idx[:, s], kind="stable")
+               for s in range(probes)]
+    q_start = [np.concatenate(
+        [[0], np.cumsum(np.bincount(probe_idx[:, s], minlength=c))])
+        for s in range(probes)]
+
+    part_d = np.full((n, probes, k), np.inf, np.float32)
+    part_i = np.full((n, probes, k), -1, np.int64)
+    for g in range(c):
+        cand = by_cell[start[g]:start[g + 1]]
+        if cand.size == 0:
+            continue
+        qs = [q_order[s][q_start[s][g]:q_start[s][g + 1]]
+              for s in range(probes)]
+        slot = np.concatenate(
+            [np.full(x.size, s, np.int64) for s, x in enumerate(qs)])
+        q = np.concatenate(qs)
+        if q.size == 0:
+            continue
+        qp, cp = _bucket(q.size), _bucket(int(cand.size))
+        Xq = np.zeros((qp, d), np.float32)
+        Xq[:q.size] = Xn[q]
+        Xc = np.zeros((cp, d), np.float32)
+        Xc[:cand.size] = Xn[cand]
+        qid = np.full(qp, -2, np.int32)
+        qid[:q.size] = q
+        cid = np.full(cp, -1, np.int32)
+        cid[:cand.size] = cand
+        kk = min(k, cp)
+        gd, gi = _cell_topk(jnp.asarray(Xq), jnp.asarray(Xc),
+                            jnp.asarray(qid), jnp.asarray(cid),
+                            metric=metric, kk=kk)
+        gd = np.asarray(gd, np.float32)[:q.size]
+        gi = np.asarray(gi, np.int64)[:q.size]
+        gi = np.where(np.isfinite(gd), gi, -1)
+        part_d[q, slot, :kk] = gd
+        part_i[q, slot, :kk] = gi
+
+    flat_d = part_d.reshape(n, probes * k)
+    flat_i = part_i.reshape(n, probes * k)
+    sel = np.argsort(flat_d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(flat_d, sel, axis=1),
+            np.take_along_axis(flat_i, sel, axis=1))
+
+
+def approx_vat(X, *, k: int = 15, metric: str = "euclidean",
+               knn_mode: str = "auto", probes: int = 2,
+               use_pallas: bool = False, block: int | None = None,
+               anchors: int | None = None, seed_vertex: int | None = None,
+               rng: np.random.Generator | None = None) -> ApproxVATResult:
+    """kNN-graph Borůvka VAT — the whole approximate pipeline.
+
+    Args:
+      X: (n, d) float — data points.
+      k: neighbours per point — THE error-bound knob.  The kNN-MST
+        weight is non-increasing in k (larger k gives a supergraph) and
+        reaches the exact MST weight at k = n-1; ``docs/scaling.md``
+        has the choosing-k guidance.
+      metric: one of ``kernels.ref.METRICS``.
+      knn_mode: "auto" (exact blocked kNN up to ``EXACT_KNN_N``, then
+        anchored), "exact", or "anchored".
+      probes / anchors: anchored-search knobs (see
+        ``knn_graph_anchored``).
+      use_pallas: forwarded to every distance tile.
+      block: kNN tile edge override (None = per-path default).
+      seed_vertex: traversal seed; None picks the vertex with the
+        largest k-NN radius — at k = n-1 this is exactly the exact
+        engine's argmax-of-row-max seed rule.
+      rng: anchor sampling generator (anchored mode only).
+
+    Returns:
+      ``ApproxVATResult`` (order, per-visit edge trace, ``ApproxStats``).
+    """
+    check_metric(metric)
+    if knn_mode not in ("auto", "exact", "anchored"):
+        raise ValueError(f"knn_mode must be auto|exact|anchored, "
+                         f"got {knn_mode!r}")
+    Xn = np.asarray(X, np.float32)
+    n = Xn.shape[0]
+    if n == 1:
+        stats = ApproxStats(k=0, mode="exact", n_passes=0, components=1,
+                            repaired_edges=0, mst_weight=0.0,
+                            repair_weight=0.0)
+        return ApproxVATResult(np.zeros(1, np.int32), np.zeros(1, np.float32),
+                               stats)
+    k_eff = min(k, n - 1)
+    exact = knn_mode == "exact" or (knn_mode == "auto" and n <= EXACT_KNN_N)
+    if exact:
+        dj, ij = kops.knn_graph(jnp.asarray(Xn), k=k_eff, metric=metric,
+                                use_pallas=use_pallas, block=block)
+        dist = np.asarray(dj)
+        idx = np.asarray(ij, np.int64)
+        mode = "exact"
+    else:
+        dist, idx = knn_graph_anchored(Xn, k=k_eff, metric=metric,
+                                       anchors=anchors, probes=probes,
+                                       use_pallas=use_pallas, rng=rng)
+        mode = "anchored"
+
+    finite = np.isfinite(dist) & (idx >= 0)
+    radius = np.where(finite, dist, -np.inf).max(axis=1)
+    i0 = int(seed_vertex) if seed_vertex is not None \
+        else int(np.argmax(radius))
+    rows = np.arange(n, dtype=np.int64)
+    idx = np.where(finite, idx, rows[:, None]).astype(np.int32)
+    dist = np.where(finite, dist, 0.0).astype(np.float32)
+
+    tree, passes, ncomp, repair_w = boruvka_mst(idx, dist, X=Xn,
+                                               metric=metric)
+    order, edges = mst_vat_order(n, tree, i0)
+    stats = ApproxStats(
+        k=k_eff, mode=mode, n_passes=passes, components=ncomp,
+        repaired_edges=max(ncomp - 1, 0),
+        mst_weight=float(np.sum(tree.weight, dtype=np.float64)),
+        repair_weight=repair_w)
+    return ApproxVATResult(order, edges, stats)

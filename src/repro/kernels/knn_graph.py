@@ -1,0 +1,287 @@
+"""Pallas TPU kernel: blocked brute-force kNN graph, metric-dispatched.
+
+The approximate-MST rung (``core/approx_mst.py``) consumes a sparse
+(n, k) neighbour graph instead of the (n, n) matrix.  This kernel
+produces it at O(n·k) output memory by fusing a running top-k fold into
+the same metric-dispatched distance tiles as ``pairwise_dist``:
+
+  * grid (n/BM, n/BN); program (i, j) computes the (BM, BN) dissimilarity
+    tile with the shared ``_tile_dissim`` formula, then folds it into the
+    running per-row top-k held in the OUTPUT refs.  The output BlockSpec
+    index map is (i, 0) — constant along j — so the same (BM, k) slab
+    stays resident across the whole column sweep (TPU grids iterate the
+    last axis innermost), and ``@pl.when(j == 0)`` re-initializes it to
+    (+inf, -1) when a new row block begins.
+  * the fold is k statically-unrolled selection steps over the
+    concatenated (BM, k + BN) candidates: vectorized min, then index-min
+    over ``where(val == min, position, width)`` (the jnp.argmin
+    replacement trick from prim_persist), then the winner's distance is
+    masked to +inf.  Selection order is lexicographic (value, position):
+    ties keep the earliest candidate — the running best sits in positions
+    [0, k), so earlier-seen neighbours win, exactly XLA top_k's
+    lower-index tie rule.  That makes the Pallas fold, the blocked XLA
+    driver below, and ``ref.knn_graph_ref`` agree on one tie contract.
+  * self-pairs (col == row) and padded columns (col >= n) are masked to
+    +inf before the fold; padded rows are computed and sliced off, per
+    the padding discipline of ``pairwise_dist`` (the fold reduces along
+    the row, never across the tile's row axis, so live padded rows stay
+    harmless).
+
+VMEM at BM=BN=256, d<=512, k<=128: two (256, 512) point tiles + two
+(256, 128) best slabs + the transient (256, 384) concat pair
+~= 1.3 MiB + 0.25 MiB + 0.75 MiB << 16 MiB.  The unroll cost grows
+linearly in k, so the Pallas path is capped at ``MAX_PALLAS_K``;
+``ops.knn_graph`` silently falls back to the XLA driver past it (the
+``MAX_FUSED_N`` precedent from the iVAT kernel).
+
+``knn_graph_blocked`` is the production XLA path: an O(n/B)^2 fori_loop
+over (B, B) tiles with a ``lax.top_k`` merge per tile — no Pallas, no
+(n, n) or even (B, n) intermediate, and the same tie contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels.pairwise_dist import (DEFAULT_BLOCK, _clamp_block,
+                                         _LANE, _pad_to, _tile_dissim)
+
+#: Pallas fold unroll cap — past this, ops.knn_graph takes the XLA driver.
+MAX_PALLAS_K = 128
+#: Default tile edge of the XLA blocked driver (bigger than the Pallas
+#: tile: XLA pays per-iteration dispatch, not VMEM, for tile size).
+XLA_BLOCK = 2048
+
+
+def _check_k(k: int, n: int):
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"k must satisfy 1 <= k <= n-1 = {n - 1}, got {k}")
+
+
+def _fold_topk(best_d, best_i, tile_d, tile_i, k: int):
+    """Merge a (BM, BN) candidate tile into the (BM, k) running top-k.
+
+    k statically-unrolled steps of: min value per row, first position
+    holding it, gather-free winner extraction (sum over the one-hot
+    position mask), winner masked to +inf.  Ties select the earliest
+    concat position — the running best occupies positions [0, k), so
+    earlier-seen candidates win, matching lax.top_k's lower-index rule.
+    """
+    cat_d = jnp.concatenate([best_d, tile_d], axis=1)
+    cat_i = jnp.concatenate([best_i, tile_i], axis=1)
+    width = cat_d.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, cat_d.shape, 1)
+    out_d, out_i = [], []
+    for _ in range(k):
+        v = jnp.min(cat_d, axis=1)
+        p = jnp.min(jnp.where(cat_d == v[:, None], pos, width), axis=1)
+        hit = pos == p[:, None]
+        out_d.append(v)
+        out_i.append(jnp.sum(jnp.where(hit, cat_i, 0), axis=1))
+        cat_d = jnp.where(hit, jnp.inf, cat_d)
+    return (jnp.stack(out_d, axis=1),
+            jnp.stack(out_i, axis=1).astype(jnp.int32))
+
+
+def _masked_tile(x, y, i, j, bm, bn, n, metric):
+    """Distance tile with self-pairs and padded columns masked to +inf."""
+    d = _tile_dissim(x, y, metric)
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    return jnp.where((cols == rows) | (cols >= n), jnp.inf, d), cols
+
+
+def _knn_kernel(x_ref, y_ref, od_ref, oi_ref, *, metric, k, n, bm, bn):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full(od_ref.shape, jnp.inf, od_ref.dtype)
+        oi_ref[...] = jnp.full(oi_ref.shape, -1, oi_ref.dtype)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    d, cols = _masked_tile(x, y, i, j, bm, bn, n, metric)
+    nd, ni = _fold_topk(od_ref[...], oi_ref[...], d, cols, k)
+    od_ref[...] = nd
+    oi_ref[...] = ni
+
+
+def _knn_kernel_batch(x_ref, y_ref, od_ref, oi_ref, *, metric, k, n, bm, bn):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full(od_ref.shape, jnp.inf, od_ref.dtype)
+        oi_ref[...] = jnp.full(oi_ref.shape, -1, oi_ref.dtype)
+
+    x = x_ref[0].astype(jnp.float32)            # (1, BM, d) slab -> (BM, d)
+    y = y_ref[0].astype(jnp.float32)
+    d, cols = _masked_tile(x, y, i, j, bm, bn, n, metric)
+    nd, ni = _fold_topk(od_ref[0], oi_ref[0], d, cols, k)
+    od_ref[0] = nd
+    oi_ref[0] = ni
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "block", "interpret"))
+def knn_graph_pallas(X: jax.Array, *, k: int, metric: str = "euclidean",
+                     block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """k nearest neighbours per point via the fused Pallas top-k fold.
+
+    Args:
+      X: (n, d) float — data points.
+      k: neighbours per point (static; 1 <= k <= n-1, k <= MAX_PALLAS_K).
+      metric: one of ``kernels.ref.METRICS`` (static).
+      block: distance tile edge BM = BN (static; clamped like
+        ``pairwise_dist_pallas``).
+      interpret: Pallas interpret mode (CPU correctness path).
+
+    Returns:
+      (dist (n, k) f32 ascending per row, idx (n, k) i32); a point is
+      never its own neighbour.
+    """
+    ref.check_metric(metric)
+    n, d = X.shape
+    _check_k(k, n)
+    if k > MAX_PALLAS_K:
+        raise ValueError(f"Pallas kNN fold capped at k={MAX_PALLAS_K}; "
+                         f"use knn_graph_blocked for k={k}")
+    bm = _clamp_block(block, n, metric)
+    n_pad = -(-n // bm) * bm
+    d_pad = -(-d // _LANE) * _LANE
+    Xp = _pad_to(_pad_to(X, n_pad, 0), d_pad, 1)
+
+    dist, idx = pl.pallas_call(
+        functools.partial(_knn_kernel, metric=metric, k=k, n=n,
+                          bm=bm, bn=bm),
+        grid=(n_pad // bm, n_pad // bm),
+        in_specs=[
+            pl.BlockSpec((bm, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d_pad), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Xp, Xp)
+    return dist[:n], idx[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "block", "interpret"))
+def knn_graph_pallas_batch(X: jax.Array, *, k: int,
+                           metric: str = "euclidean",
+                           block: int = DEFAULT_BLOCK,
+                           interpret: bool = False):
+    """Batched kNN graphs for a (b, n, d) stack — slab-of-1 grid.
+
+    Same per-tile compute as the solo kernel; the grid grows a leading
+    batch axis and every BlockSpec a size-1 slab dim, so VMEM per program
+    stays at the solo budget regardless of b.
+
+    Returns:
+      (dist (b, n, k) f32, idx (b, n, k) i32).
+    """
+    ref.check_metric(metric)
+    b, n, d = X.shape
+    _check_k(k, n)
+    if k > MAX_PALLAS_K:
+        raise ValueError(f"Pallas kNN fold capped at k={MAX_PALLAS_K}; "
+                         f"use knn_graph_blocked for k={k}")
+    bm = _clamp_block(block, n, metric)
+    n_pad = -(-n // bm) * bm
+    d_pad = -(-d // _LANE) * _LANE
+    Xp = _pad_to(_pad_to(X, n_pad, 1), d_pad, 2)
+
+    dist, idx = pl.pallas_call(
+        functools.partial(_knn_kernel_batch, metric=metric, k=k, n=n,
+                          bm=bm, bn=bm),
+        grid=(b, n_pad // bm, n_pad // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, d_pad), lambda bi, i, j: (bi, i, 0)),
+            pl.BlockSpec((1, bm, d_pad), lambda bi, i, j: (bi, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, k), lambda bi, i, j: (bi, i, 0)),
+            pl.BlockSpec((1, bm, k), lambda bi, i, j: (bi, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(Xp, Xp)
+    return dist[:, :n], idx[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block"))
+def knn_graph_blocked(X: jax.Array, *, k: int, metric: str = "euclidean",
+                      block: int = XLA_BLOCK):
+    """Blocked-both-ways XLA kNN driver — the production CPU path.
+
+    fori_loop over (B, B) tiles of ``ref.pairwise_dissim_ref`` with a
+    ``lax.top_k`` merge of (running best ++ tile) per step.  Peak
+    temporaries are O(B² + B·k + n·k); nothing (n, n) or (B, n) ever
+    exists.  Tie contract identical to the Pallas fold (lower concat
+    position wins, running best sits first).
+
+    Args:
+      X: (n, d) float — data points.
+      k: neighbours per point (static; 1 <= k <= n-1, any size).
+      metric: one of ``kernels.ref.METRICS`` (static).
+      block: tile edge B (static; clamped to n).
+
+    Returns:
+      (dist (n, k) f32 ascending per row, idx (n, k) i32).
+    """
+    ref.check_metric(metric)
+    n, d = X.shape
+    _check_k(k, n)
+    bs = min(block, max(8, n))
+    n_pad = -(-n // bs) * bs
+    Xp = _pad_to(X.astype(jnp.float32), n_pad, 0)
+    nblk = n_pad // bs
+    iota = jnp.arange(bs, dtype=jnp.int32)
+
+    def col_body(j, best, xb, rows):
+        bd, bi = best
+        yb = jax.lax.dynamic_slice_in_dim(Xp, j * bs, bs, 0)
+        tile = ref.pairwise_dissim_ref(xb, yb, metric=metric)
+        cols = j * bs + iota
+        bad = (cols[None, :] == rows[:, None]) | (cols[None, :] >= n)
+        tile = jnp.where(bad, jnp.inf, tile)
+        cat_d = jnp.concatenate([bd, tile], axis=1)
+        cat_i = jnp.concatenate(
+            [bi, jnp.broadcast_to(cols[None, :], tile.shape)], axis=1)
+        neg, p = jax.lax.top_k(-cat_d, k)
+        return -neg, jnp.take_along_axis(cat_i, p, axis=1)
+
+    def row_body(i, out):
+        od, oi = out
+        xb = jax.lax.dynamic_slice_in_dim(Xp, i * bs, bs, 0)
+        rows = i * bs + iota
+        bd, bi = jax.lax.fori_loop(
+            0, nblk, lambda j, best: col_body(j, best, xb, rows),
+            (jnp.full((bs, k), jnp.inf, jnp.float32),
+             jnp.full((bs, k), -1, jnp.int32)))
+        od = jax.lax.dynamic_update_slice_in_dim(od, bd, i * bs, 0)
+        oi = jax.lax.dynamic_update_slice_in_dim(oi, bi, i * bs, 0)
+        return od, oi
+
+    od, oi = jax.lax.fori_loop(
+        0, nblk, row_body,
+        (jnp.full((n_pad, k), jnp.inf, jnp.float32),
+         jnp.full((n_pad, k), -1, jnp.int32)))
+    return od[:n], oi[:n]

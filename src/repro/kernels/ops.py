@@ -13,6 +13,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.ivat_update import MAX_FUSED_N, ivat_from_vat_pallas
+from repro.kernels.knn_graph import (MAX_PALLAS_K, XLA_BLOCK,
+                                     knn_graph_blocked, knn_graph_pallas,
+                                     knn_graph_pallas_batch)
 from repro.kernels.pairwise_dist import (pairwise_dist_pallas,
                                          pairwise_dist_pallas_batch)
 from repro.kernels.prim_persist import (persist_supported,
@@ -81,6 +84,61 @@ def pairwise_dist_batch(X: jax.Array, *, metric: str = "euclidean",
             lambda A: ref.pairwise_dissim_ref(A, metric=metric))(X)
     n = R.shape[-1]
     return R * (1.0 - jnp.eye(n, dtype=R.dtype))
+
+
+def knn_graph(X: jax.Array, *, k: int, metric: str = "euclidean",
+              use_pallas: bool = False, block: int | None = None):
+    """k-nearest-neighbour graph at O(n·k) memory; never builds (n, n).
+
+    The approximate-MST rung's first stage.  Both paths share one tie
+    contract (lower index wins on equal distances) and one output shape;
+    see ``kernels/knn_graph.py`` for the tiling story.
+
+    Args:
+      X: (n, d) float — data points.
+      k: neighbours per point (1 <= k <= n-1).
+      metric: one of ``kernels.ref.METRICS``.
+      use_pallas: route through the fused Pallas top-k fold (interpret
+        mode on CPU; compiled on TPU).  k > ``MAX_PALLAS_K`` exceeds the
+        fold's unroll budget and silently takes the XLA driver instead
+        (the ``MAX_FUSED_N`` precedent).
+      block: tile edge; None picks each path's default (the Pallas tile
+        is VMEM-bound, the XLA tile dispatch-bound, so they differ).
+
+    Returns:
+      (dist (n, k) f32 ascending per row, idx (n, k) i32) — idx[i, 0] is
+      i's nearest neighbour; a point is never its own neighbour.
+    """
+    if use_pallas and k <= MAX_PALLAS_K:
+        return knn_graph_pallas(X, k=k, metric=metric,
+                                block=block if block is not None else 256,
+                                interpret=_interpret())
+    return knn_graph_blocked(
+        X, k=k, metric=metric,
+        block=block if block is not None else XLA_BLOCK)
+
+
+def knn_graph_batch(X: jax.Array, *, k: int, metric: str = "euclidean",
+                    use_pallas: bool = False, block: int | None = None):
+    """Per-dataset kNN graphs for a (b, n, d) stack.
+
+    Args:
+      X: (b, n, d) float — b independent datasets.
+      k, metric, use_pallas, block: as ``knn_graph``; the Pallas path is
+        the slab-of-1 batched grid, the XLA path a vmap of the blocked
+        driver.
+
+    Returns:
+      (dist (b, n, k) f32, idx (b, n, k) i32).
+    """
+    if use_pallas and k <= MAX_PALLAS_K:
+        return knn_graph_pallas_batch(
+            X, k=k, metric=metric,
+            block=block if block is not None else 256,
+            interpret=_interpret())
+    return jax.vmap(lambda A: knn_graph_blocked(
+        A, k=k, metric=metric,
+        block=block if block is not None else XLA_BLOCK))(X)
 
 
 def masked_argmin(vals: jax.Array, mask: jax.Array, *,

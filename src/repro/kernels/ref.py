@@ -78,6 +78,37 @@ def pairwise_dist_ref(X: jax.Array, Y: jax.Array | None = None) -> jax.Array:
     return pairwise_dissim_ref(X, Y, metric="euclidean")
 
 
+def knn_graph_ref(X: jax.Array, *, k: int,
+                  metric: str = "euclidean") -> tuple[jax.Array, jax.Array]:
+    """k nearest neighbours of every point — the materializing oracle.
+
+    Small-n correctness reference for ``kernels/knn_graph.py``: builds the
+    full (n, n) dissimilarity matrix (so never use it past a few thousand
+    points), masks the diagonal, and takes the k smallest per row via
+    ``lax.top_k`` on negated values.  XLA's top_k breaks ties toward the
+    lower index, which is exactly the selection order of the blocked
+    paths' (value, position) fold — the tie contract every kNN path in
+    this package shares.
+
+    Args:
+      X: (n, d) float — data points.
+      k: neighbours per point; must satisfy 1 <= k <= n - 1.
+      metric: one of ``METRICS``.
+
+    Returns:
+      (dist (n, k) f32 ascending per row, idx (n, k) i32) — idx[i, 0] is
+      i's nearest neighbour; the point itself is never its own neighbour.
+    """
+    check_metric(metric)
+    n = X.shape[0]
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"k must satisfy 1 <= k <= n-1 = {n - 1}, got {k}")
+    R = pairwise_dissim_ref(X, metric=metric)
+    R = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, R)
+    neg, idx = jax.lax.top_k(-R, k)
+    return -neg, idx.astype(jnp.int32)
+
+
 def row_dissim_ref(X: jax.Array, x: jax.Array, *,
                    metric: str = "euclidean") -> jax.Array:
     """Dissimilarity of every row of X to a single point x.

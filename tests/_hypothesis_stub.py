@@ -1,5 +1,7 @@
 """Minimal, deterministic stand-in for the `hypothesis` subset these tests
-use (`given`, `settings(max_examples=, deadline=)`, `strategies.integers`).
+use (`given`, `settings(max_examples=, deadline=)`, and the
+`strategies.integers` / `floats` / `sampled_from` / `booleans` / `tuples`
+strategies).
 
 The container has no `hypothesis` wheel and installing packages is off the
 table, so `conftest.py` registers this module under the name "hypothesis"
@@ -7,6 +9,13 @@ when the real library is missing.  Each `@given` test is then run on
 `max_examples` pseudo-random draws from a fixed seed — property testing
 degrades to deterministic fuzzing, which keeps the oracle sweeps
 meaningful (and CI green) without the dependency.
+
+Tests written against this stub must stay real-hypothesis-compatible
+(CI environments that do carry the wheel get true shrinking for free):
+only keyword forms the real library also accepts are implemented, and
+draw semantics match — `integers`/`floats` bounds are inclusive,
+`sampled_from` takes a non-empty sequence, `tuples` composes strategies
+positionally.
 """
 from __future__ import annotations
 
@@ -26,8 +35,41 @@ def integers(min_value: int, max_value: int) -> _Strategy:
     return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
 
 
+def floats(min_value: float, max_value: float) -> _Strategy:
+    """Uniform floats on the inclusive [min_value, max_value] interval.
+
+    The real library's `floats` defaults (NaN/inf generation, subnormal
+    hunting) need explicit bounds to be disabled anyway, so requiring
+    both bounds here keeps stub- and real-runs drawing from the same
+    domain.
+    """
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def sampled_from(elements) -> _Strategy:
+    """One element of a fixed non-empty sequence, like hypothesis's."""
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    """Fixed-shape tuple of component draws, like hypothesis's."""
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = integers
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.tuples = tuples
 
 
 def settings(max_examples: int = 10, deadline=None, **_ignored):

@@ -202,7 +202,8 @@ def test_select_method_is_capability_driven():
     # flashvat (exact, matrix-free) owns svat's former auto window
     assert select_method(SMALL_N + 1) == "flashvat"
     assert select_method(MEDIUM_N) == "flashvat"
-    assert select_method(MEDIUM_N + 1) == "bigvat"
+    # the approx kNN-MST rung owns bigvat's former auto window (ISSUE 6)
+    assert select_method(MEDIUM_N + 1) == "approx"
     assert select_method(100, batched=True) == "vat"
     assert select_method(SMALL_N + 1, batched=True, strict=True) \
         == "flashvat"

@@ -1,0 +1,235 @@
+"""The approx rung's API seams: auto-selection boundaries (monkeypatched
+thresholds, like test_turbo.py's VMEM-seam tests), capability flags, the
+error report riding on ``ResultMeta``, and the memory story — a dispatch
+census pinning the kNN kernel to Pallas calls plus the no-(n,n) tripwire
+mirror from test_bigvat.py."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.api import FastVAT, registry as reg, select_method
+from repro.api.registry import MEDIUM_N
+from repro.core.approx_mst import ApproxStats, knn_graph_anchored
+from repro.kernels import ops as kops
+
+
+def _blobs(n, k=3, d=2, seed=0, sep=40.0):
+    rng = np.random.default_rng(seed)
+    centers = (sep * rng.normal(size=(k, d))).astype(np.float32)
+    lab = rng.integers(0, k, size=n)
+    X = centers[lab] + rng.normal(scale=1.0, size=(n, d)).astype(np.float32)
+    return X.astype(np.float32), lab.astype(np.int32)
+
+
+def _lower_threshold(monkeypatch, name: str, threshold: float):
+    """Re-register `name` with a test threshold, restored on teardown."""
+    monkeypatch.setitem(
+        reg._REGISTRY, name,
+        dataclasses.replace(reg.get_rung(name), auto_threshold=threshold))
+
+
+# ------------------------------------------------ selection seams ----
+
+def test_exact_to_approx_boundary_flips_at_threshold(monkeypatch):
+    """±1 around the flashvat ceiling flips the auto route to approx —
+    exercised at a test-sized threshold so the fixture stays tiny."""
+    assert select_method(MEDIUM_N) == "flashvat"
+    assert select_method(MEDIUM_N + 1) == "approx"
+    _lower_threshold(monkeypatch, "vat", 50)
+    _lower_threshold(monkeypatch, "flashvat", 100)
+    assert select_method(100) == "flashvat"
+    assert select_method(101) == "approx"
+    assert select_method(10**9) == "approx"    # the unbounded fallback
+
+
+def test_auto_fit_routes_approx_past_threshold(monkeypatch):
+    """A fit just past the (lowered) exact ceiling resolves approx
+    end-to-end: banded image, spanning order, stats on meta."""
+    _lower_threshold(monkeypatch, "vat", 50)
+    _lower_threshold(monkeypatch, "flashvat", 100)
+    X, lab = _blobs(300, k=3, seed=2)
+    fv = FastVAT(sample_size=32, knn_k=8).fit(X)
+    assert fv.method_resolved == "approx"
+    assert sorted(fv.order().tolist()) == list(range(300))
+    assert fv.image(resolution=64).shape == (64, 64)
+    s = fv.result.meta.approx
+    assert isinstance(s, ApproxStats) and s.k == 8
+    rep = fv.assess()
+    assert rep["method"] == "approx" and rep["k_est"] == 3
+
+
+def test_auto_fit_routes_exact_at_threshold(monkeypatch):
+    _lower_threshold(monkeypatch, "vat", 50)
+    _lower_threshold(monkeypatch, "flashvat", 100)
+    X, _ = _blobs(100, k=3, seed=2)
+    fv = FastVAT(sample_size=32).fit(X)
+    assert fv.method_resolved == "flashvat"
+    assert fv.result.meta.approx is None       # exact rungs report none
+
+
+# ---------------------------------------------- capability flags ----
+
+def test_approx_rung_capabilities():
+    rung = reg.get_rung("approx")
+    assert rung.auto_threshold == float("inf")
+    assert not rung.supports_precomputed       # needs points, not a matrix
+    assert not rung.supports_batch
+    assert reg.get_rung("bigvat").auto_threshold is None   # demoted: opt-in
+    assert "approx" in reg.methods()
+
+
+def test_approx_rejects_precomputed():
+    D = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError, match="precomputed"):
+        FastVAT(method="approx", metric="precomputed").fit(D)
+
+
+def test_precomputed_auto_still_falls_back_exact():
+    """Huge-n precomputed input keeps routing to the exact rung — the
+    (n, n) matrix already exists, so approx has nothing to save."""
+    assert select_method(10**9, precomputed=True) == "vat"
+
+
+def test_explicit_bigvat_still_available():
+    X, _ = _blobs(400, k=2, seed=3)
+    fv = FastVAT(method="bigvat", sample_size=32).fit(X)
+    assert fv.method_resolved == "bigvat"
+
+
+# -------------------------------------------- meta / pytree seams ----
+
+def test_approx_stats_meta_stays_valid_pytree_aux():
+    """ApproxStats is frozen + hashable, so a TendencyResult carrying it
+    survives flatten/unflatten (meta is static aux data)."""
+    X, _ = _blobs(200, k=2, seed=4)
+    res = FastVAT(method="approx", knn_k=6, sample_size=16).fit(X).result
+    assert hash(res.meta) == hash(res.meta)
+    leaves, treedef = jax.tree_util.tree_flatten(res)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.meta.approx == res.meta.approx
+
+
+# ------------------------------------------------ dispatch census ----
+
+def _iter_avals(jaxpr):
+    """Every intermediate abstract value a jaxpr (and its subjaxprs) binds."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v.aval, "shape"):
+                yield v.aval
+        for p in eqn.params.values():
+            for u in (p if isinstance(p, (list, tuple)) else (p,)):
+                sub = getattr(u, "jaxpr", u)
+                if hasattr(sub, "eqns"):
+                    yield from _iter_avals(sub)
+
+
+def test_knn_kernel_census_pallas_no_nxn_no_f64():
+    """The dispatch pin: the Pallas kNN path holds >= 1 pallas_call in
+    its jaxpr while the blocked XLA path holds none — and NEITHER ever
+    binds an (n, n)-sized intermediate nor any float64 array (the
+    memory contract the million-point rung rests on)."""
+    n, k, block = 600, 8, 128
+    X = jnp.asarray(np.random.default_rng(0).normal(
+        size=(n, 4)).astype(np.float32))
+    pal = kops.kernel_dispatch_stats(
+        lambda A: kops.knn_graph(A, k=k, use_pallas=True, block=block), X)
+    xla = kops.kernel_dispatch_stats(
+        lambda A: kops.knn_graph(A, k=k, use_pallas=False, block=block), X)
+    assert pal["pallas_calls"] >= 1, pal
+    assert xla["pallas_calls"] == 0, xla
+    for use_pallas in (True, False):
+        jaxpr = jax.make_jaxpr(
+            lambda A: kops.knn_graph(A, k=k, use_pallas=use_pallas,
+                                     block=block))(X).jaxpr
+        avals = list(_iter_avals(jaxpr))
+        biggest = max(int(np.prod(a.shape, dtype=int)) for a in avals)
+        assert biggest < n * n / 4, (use_pallas, biggest)
+        assert not any(a.dtype == np.float64 for a in avals), use_pallas
+
+
+# ------------------------------------------------ no-(n,n) tripwire ----
+
+def test_anchored_knn_never_materializes_nxn(monkeypatch):
+    """Tripwire mirror of test_bigvat: every distance tile the anchored
+    assignment pass produces is (assign_block, anchors) at most —
+    nothing O(n^2) — and the pass IS tripwire-visible (it goes through
+    kernels.ops.pairwise_dist, not around it)."""
+    n, k, ab = 5_000, 6, 1_024
+    X, _ = _blobs(n, k=3, seed=5)
+    shapes = []
+    real = kops.pairwise_dist
+
+    def recording(Xa, Ya=None, **kw):
+        out = real(Xa, Ya, **kw)
+        shapes.append(tuple(out.shape))
+        return out
+
+    monkeypatch.setattr(kops, "pairwise_dist", recording)
+    dist, idx = knn_graph_anchored(X, k=k, assign_block=ab)
+    assert dist.shape == (n, k) and idx.shape == (n, k)
+    assert dist.dtype == np.float32            # never an (n, k) float64
+    assert shapes, "anchored pass never went through kernels.ops.pairwise_dist"
+    assert all(r <= ab and c < n for r, c in shapes), shapes
+    # and the graph it built is usable: mostly-filled valid slots
+    valid = np.isfinite(dist) & (idx >= 0)
+    assert valid.mean() > 0.95
+
+
+def test_approx_fit_path_never_materializes_nxn(monkeypatch):
+    """End-to-end tripwire on the registry fit: every pairwise_dist call
+    the whole approx fit makes (band rendering included) stays far below
+    (n, n)."""
+    n = 2_000
+    X, _ = _blobs(n, k=3, seed=6)
+    shapes = []
+    real = kops.pairwise_dist
+
+    def recording(Xa, Ya=None, **kw):
+        out = real(Xa, Ya, **kw)
+        shapes.append(tuple(out.shape))
+        return out
+
+    monkeypatch.setattr(kops, "pairwise_dist", recording)
+    fv = FastVAT(method="approx", sample_size=64, knn_k=8).fit(X)
+    assert fv.method_resolved == "approx"
+    assert all(r * c <= n * 64 for r, c in shapes), shapes
+
+
+# -------------------------------------------- demo acceptance test ----
+
+def test_approx_demo_acceptance(monkeypatch):
+    """examples/approx_demo.py shrunk to test size: end-to-end through
+    the demo's own run(), with the memory pins — every pairwise_dist
+    tile far below (n, n), int32 ordering out, working set a small
+    fraction of the dense matrix."""
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "approx_demo.py")
+    spec = importlib.util.spec_from_file_location("approx_demo", path)
+    demo = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(demo)
+
+    shapes = []
+    real = kops.pairwise_dist
+
+    def recording(Xa, Ya=None, **kw):
+        out = real(Xa, Ya, **kw)
+        shapes.append(tuple(out.shape))
+        return out
+
+    monkeypatch.setattr(kops, "pairwise_dist", recording)
+    n = 1_500
+    info = demo.run(n=n, k=6, sample_size=32)
+    assert info["method"] == "approx"
+    assert sorted(info["order"].tolist()) == list(range(n))
+    assert info["order"].dtype == np.int32
+    assert info["runs"] == 5                   # 5 generated blobs
+    assert info["stats"].k == 6
+    assert all(r * c <= n * 64 for r, c in shapes), shapes
+    assert info["working_bytes"] * 20 < info["dense_bytes"]

@@ -1,0 +1,252 @@
+"""Approximate VAT (kNN-graph Borůvka MST) — the property-based oracle
+suite certifying the million-point rung against the exact engine:
+
+  * the kNN kernel (ref / blocked / Pallas) agrees with a dense top-k
+    oracle bit for bit, ties included,
+  * full-graph (k = n-1) Borůvka reproduces the Prim oracle's MST weight
+    and edge multiset on every metric,
+  * the kNN-MST weight respects its documented bounds: never below the
+    exact MST weight, non-increasing in k while the graph stays
+    connected, equal to exact at k = n-1 — and the ordering at k = n-1
+    is BITWISE the exact engine's,
+  * connectivity repair turns adversarially disconnected fixtures into
+    spanning trees and reports the defect honestly,
+  * massive distance ties (duplicated points) cannot hang the hooking /
+    pointer-jump machinery.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core import approx_mst
+from repro.core.approx_mst import _prim_edges_np, boruvka_mst
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+METRICS = ("euclidean", "sqeuclidean", "manhattan", "cosine")
+
+
+def _data(seed, n, d=4):
+    rng = np.random.default_rng(seed)
+    # spread points out so distance ties only occur where we plant them
+    return (rng.normal(size=(n, d)) * rng.uniform(0.5, 2.0, size=d)
+            ).astype(np.float32)
+
+
+def _blobs(n, k=3, d=4, seed=0, sep=40.0):
+    rng = np.random.default_rng(seed)
+    centers = (sep * rng.normal(size=(k, d))).astype(np.float32)
+    lab = rng.integers(0, k, size=n)
+    X = centers[lab] + rng.normal(scale=1.0, size=(n, d)).astype(np.float32)
+    return X.astype(np.float32), lab.astype(np.int32)
+
+
+def _exact_mst_weight(X, metric="euclidean") -> float:
+    R = np.asarray(kops.pairwise_dist(jnp.asarray(X), metric=metric),
+                   np.float64)
+    return float(sum(w for _, _, w in _prim_edges_np(R)))
+
+
+def _runs(lab, order) -> int:
+    lo = lab[np.asarray(order)]
+    return 1 + int(np.sum(lo[1:] != lo[:-1]))
+
+
+# ------------------------------------------------- kNN kernel oracle ----
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 80),
+       d=st.integers(1, 6), metric=st.sampled_from(METRICS),
+       use_pallas=st.booleans())
+def test_knn_graph_matches_dense_oracle(seed, n, d, metric, use_pallas):
+    """Blocked and Pallas kNN agree with the dense lax.top_k oracle on
+    indices EXACTLY (the shared lower-index tie contract) and on
+    distances numerically."""
+    X = jnp.asarray(_data(seed, n, d))
+    k = min(7, n - 1)
+    dr, ir = ref.knn_graph_ref(X, k=k, metric=metric)
+    db, ib = kops.knn_graph(X, k=k, metric=metric, use_pallas=use_pallas,
+                            block=32 if use_pallas else 16)
+    np.testing.assert_array_equal(np.asarray(ib), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(db), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------- full-graph MST oracle ----
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 512),
+       metric=st.sampled_from(METRICS))
+def test_full_graph_boruvka_matches_prim_oracle(seed, n, metric):
+    """At k = n-1 the kNN graph IS the complete graph, so Borůvka must
+    reproduce the host Prim oracle: one component, n-1 edges, the same
+    weight multiset, within the logarithmic pass cap."""
+    X = _data(seed, n)
+    R = np.asarray(kops.pairwise_dist(jnp.asarray(X), metric=metric),
+                   np.float64)
+    oracle_w = np.sort([w for _, _, w in _prim_edges_np(R)])
+    dj, ij = kops.knn_graph(jnp.asarray(X), k=n - 1, metric=metric)
+    tree, passes, ncomp, repair_w = boruvka_mst(
+        np.asarray(ij), np.asarray(dj), X=X, metric=metric)
+    assert ncomp == 1 and repair_w == 0.0
+    assert tree.src.size == n - 1
+    assert passes <= int(np.ceil(np.log2(n))) + 2
+    np.testing.assert_allclose(np.sort(tree.weight.astype(np.float64)),
+                               oracle_w, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------- weight bound / k knob ----
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1_000), sep=st.floats(4.0, 40.0),
+       anchored=st.booleans())
+def test_knn_mst_weight_bounded_and_monotone(seed, sep, anchored):
+    """The documented error model: every reported tree weight lower-bounds
+    at the exact MST weight (its edges are true distances), the stats
+    decompose (repair <= total, repaired_edges = components - 1), and —
+    while the graph stays connected, where G_k is nested in G_k' — the
+    weight is non-increasing in k."""
+    X, _ = _blobs(500, k=3, seed=seed, sep=sep)
+    exact_w = _exact_mst_weight(X)
+    mode = "anchored" if anchored else "exact"
+    connected_w = []
+    for k in (3, 8, 20):
+        s = core.approx_vat(X, k=k, knn_mode=mode).stats
+        assert s.mode == mode and s.k == k
+        assert s.mst_weight >= exact_w * (1 - 1e-5) - 1e-4
+        assert s.repaired_edges == max(s.components - 1, 0)
+        assert 0.0 <= s.repair_weight <= s.mst_weight + 1e-6
+        if s.components == 1:
+            connected_w.append(s.mst_weight)
+    for a, b in zip(connected_w, connected_w[1:]):
+        assert b <= a * (1 + 1e-5) + 1e-4
+
+
+def test_full_k_weight_equals_exact():
+    X, _ = _blobs(300, k=3, seed=7)
+    s = core.approx_vat(X, k=299, knn_mode="exact").stats
+    np.testing.assert_allclose(s.mst_weight, _exact_mst_weight(X),
+                               rtol=1e-5, atol=1e-4)
+    assert s.components == 1 and s.repair_weight == 0.0
+
+
+# ------------------------------------- ordering vs the exact engine ----
+
+@settings(max_examples=5, deadline=None)
+@given(cfg=st.tuples(st.integers(0, 10_000), st.integers(16, 400)),
+       metric=st.sampled_from(("euclidean", "manhattan")))
+def test_full_k_ordering_bitwise_matches_exact_engine(cfg, metric):
+    """k = n-1 certification: the approximate pipeline (complete kNN
+    graph -> Borůvka -> tree Prim, default largest-radius seed) must
+    reproduce ``vat_matrix_free``'s ordering BITWISE — the seed rule,
+    the tie rules and the tree all coincide with the exact engine's."""
+    seed, n = cfg
+    X = _data(seed, n, 3)
+    res = core.approx_vat(X, k=n - 1, knn_mode="exact", metric=metric)
+    exact = core.vat_matrix_free(jnp.asarray(X), metric=metric)
+    np.testing.assert_array_equal(res.order, np.asarray(exact.order))
+    np.testing.assert_allclose(res.edges, np.asarray(exact.edges), atol=1e-5)
+
+
+def test_full_k_ordering_bitwise_at_1024():
+    X = _data(99, 1024, 5)
+    res = core.approx_vat(X, k=1023, knn_mode="exact")
+    exact = core.vat_matrix_free(jnp.asarray(X))
+    np.testing.assert_array_equal(res.order, np.asarray(exact.order))
+
+
+@pytest.mark.parametrize("n,k", [(1024, 64), (2048, 24), (4096, 16)])
+def test_modest_k_preserves_exact_cluster_structure(n, k):
+    """Overlap-size certification at practical k: both engines keep each
+    well-separated cluster one contiguous run (same permutation domain,
+    same macro structure), even though the micro order may differ."""
+    X, lab = _blobs(n, k=4, seed=n)
+    exact_order = np.asarray(core.vat_matrix_free(jnp.asarray(X)).order)
+    res = core.approx_vat(X, k=k)
+    assert sorted(res.order.tolist()) == list(range(n))
+    assert _runs(lab, res.order) == _runs(lab, exact_order) == 4
+
+
+def test_anchored_mode_preserves_cluster_structure():
+    X, lab = _blobs(3_000, k=5, seed=3)
+    res = core.approx_vat(X, k=10, knn_mode="anchored")
+    assert res.stats.mode == "anchored"
+    assert sorted(res.order.tolist()) == list(range(3_000))
+    assert _runs(lab, res.order) == 5
+
+
+# --------------------------------------------- connectivity repair ----
+
+def test_disconnected_blobs_repaired_to_spanning():
+    """Adversarial fixture: 4 blobs separated by ~1000, k = 3 — no kNN
+    edge can cross blobs, so the graph is disconnected by construction.
+    Repair must splice it to spanning and report the defect."""
+    rng = np.random.default_rng(0)
+    centers = np.array([[0, 0], [1000, 0], [0, 1000], [1000, 1000]],
+                       np.float32)
+    X = np.concatenate([
+        c + rng.normal(scale=0.5, size=(100, 2)).astype(np.float32)
+        for c in centers])
+    lab = np.repeat(np.arange(4), 100)
+    res = core.approx_vat(X, k=3, knn_mode="exact")
+    s = res.stats
+    assert s.components >= 4
+    assert s.repaired_edges == s.components - 1
+    assert s.repair_weight >= 3 * 900          # >= 3 cross-blob splices
+    assert sorted(res.order.tolist()) == list(range(400))
+    assert _runs(lab, res.order) == 4          # blobs stay contiguous
+
+
+def test_chain_repair_past_repair_max_c(monkeypatch):
+    """Past REPAIR_MAX_C surviving components the repair degrades to the
+    O(C) representative chain — still spanning, still reported."""
+    monkeypatch.setattr(approx_mst, "REPAIR_MAX_C", 2)
+    rng = np.random.default_rng(1)
+    centers = np.array([[0, 0], [500, 0], [0, 500]], np.float32)
+    X = np.concatenate([
+        c + rng.normal(scale=0.5, size=(60, 2)).astype(np.float32)
+        for c in centers])
+    res = core.approx_vat(X, k=3, knn_mode="exact")
+    s = res.stats
+    assert s.components >= 3
+    assert s.repaired_edges == s.components - 1
+    assert s.repair_weight > 0.0
+    assert sorted(res.order.tolist()) == list(range(180))
+
+
+def test_boruvka_disconnected_without_x_raises():
+    idx = np.array([[1], [0], [3], [2]], np.int32)       # two 2-cliques
+    dist = np.ones((4, 1), np.float32)
+    with pytest.raises(ValueError, match="disconnected"):
+        boruvka_mst(idx, dist)
+
+
+# ------------------------------------------------- tie robustness ----
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1_000), base_n=st.integers(3, 20),
+       dup=st.integers(2, 4))
+def test_boruvka_survives_duplicate_points(seed, base_n, dup):
+    """Every point duplicated `dup` times: zero-distance ties everywhere.
+    The lexicographic edge keys and the 2-cycle break must still yield a
+    spanning tree within the pass cap (a broken tie rule hangs or drops
+    vertices here)."""
+    X = np.repeat(_data(seed, base_n, 2), dup, axis=0)
+    n = base_n * dup
+    res = core.approx_vat(X, k=min(6, n - 1), knn_mode="exact")
+    assert sorted(res.order.tolist()) == list(range(n))
+    assert np.isfinite(res.stats.mst_weight)
+    assert res.stats.n_passes <= int(np.ceil(np.log2(n))) + 2
+
+
+# ------------------------------------------------------- edge cases ----
+
+def test_small_n_and_validation():
+    assert core.approx_vat(_data(0, 1, 3)).order.tolist() == [0]
+    res2 = core.approx_vat(_data(0, 2, 3), k=50)   # k clamps to n-1
+    assert sorted(res2.order.tolist()) == [0, 1]
+    assert res2.stats.k == 1
+    with pytest.raises(ValueError, match="knn_mode"):
+        core.approx_vat(_data(0, 8, 2), knn_mode="bogus")

@@ -96,7 +96,7 @@ def test_select_method_thresholds():
     assert select_method(SMALL_N) == "vat"
     assert select_method(SMALL_N + 1) == "flashvat"
     assert select_method(MEDIUM_N) == "flashvat"
-    assert select_method(MEDIUM_N + 1) == "bigvat"
+    assert select_method(MEDIUM_N + 1) == "approx"
 
 
 def test_fastvat_auto_routes_vat():
@@ -126,12 +126,13 @@ def test_fastvat_explicit_svat_still_works():
     assert len(fv.sample_indices()) == 64
 
 
-def test_fastvat_auto_routes_bigvat():
-    # just past the flashvat auto window (MEDIUM_N rose to 50k when the
-    # Turbo engine raised exact VAT's practical ceiling — ISSUE 5)
+def test_fastvat_explicit_bigvat_past_flash_window():
+    # bigvat is opt-in now (the approx rung owns the auto fallback —
+    # ISSUE 6) but the explicit pipeline must keep working just past the
+    # flashvat window it used to own.
     n = MEDIUM_N + 1_000
     X, lab = _blobs(n, k=3)
-    fv = FastVAT(sample_size=64, block=8_192).fit(X)
+    fv = FastVAT(method="bigvat", sample_size=64, block=8_192).fit(X)
     assert fv.method_resolved == "bigvat"
     assert fv.image(resolution=100).shape == (100, 100)
     order = fv.order()
