@@ -12,10 +12,10 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 #: Older snapshot versions this validator still accepts (the committed
 #: BENCH_*.json trajectory must keep validating as the schema grows).
-ACCEPTED_VERSIONS = (2, 3, 4)
+ACCEPTED_VERSIONS = (2, 3, 4, 5)
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
@@ -26,6 +26,10 @@ _ROW_KEYS_V3 = _ROW_KEYS | {"peak_bytes"}
 # v4 adds the OPTIONAL per-row ``quality`` flag: true marks a row that
 # records accuracy (e.g. approx's MST-weight ratio) rather than wall
 # time — compare.py keeps such rows out of the regression gate.
+# v5 adds the OPTIONAL per-row ``percentiles`` object — exactly
+# {"p50_us", "p99_us"}, numbers >= 0 with p99 >= p50 — for tables
+# measured under load (serve), where best-of-reps would hide the tail.
+_PCT_KEYS = {"p50_us", "p99_us"}
 
 
 def _fail(msg: str):
@@ -97,6 +101,20 @@ def validate(doc: dict) -> dict:
                 _fail(f"{where}.quality needs schema_version >= 4")
             if not isinstance(row["quality"], bool):
                 _fail(f"{where}.quality must be a bool when present")
+        if "percentiles" in row:
+            if version < 5:
+                _fail(f"{where}.percentiles needs schema_version >= 5")
+            pct = row["percentiles"]
+            if not isinstance(pct, dict) or set(pct) != _PCT_KEYS:
+                _fail(f"{where}.percentiles must be an object with "
+                      f"exactly keys {sorted(_PCT_KEYS)}")
+            for k in sorted(_PCT_KEYS):
+                v = pct[k]
+                if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                        or v < 0:
+                    _fail(f"{where}.percentiles.{k} must be a number >= 0")
+            if pct["p99_us"] < pct["p50_us"]:
+                _fail(f"{where}.percentiles: p99_us must be >= p50_us")
     return doc
 
 

@@ -1,60 +1,103 @@
-"""Serving example: sVAT-driven request routing + batched greedy decoding.
+"""Serving example: tendency-as-a-service end to end (ISSUE 7).
 
-A serving frontend receives a mixed bag of requests; sVAT over the prompt
-embeddings reveals how many request families are in flight, maximin
-sampling picks the batch groups, and each group decodes together against
-a KV cache (prefix locality => better cache behaviour on real serving
-stacks).  Uses a reduced model so it runs on CPU in seconds.
+A frontend receives a burst of cluster-tendency requests.  Instead of
+paying trace + compile per call, it drives ``repro.serve``'s
+:class:`TendencyServer`:
+
+  * ``warm()`` AOT-compiles the request path once,
+  * ``submit()`` enqueues each dataset and returns a Future,
+  * the coalescer packs the burst into ONE batched ``fit_batch``
+    dispatch (all requests share a shape bucket),
+  * each Future resolves to a result bitwise-identical to the solo
+    ``FastVAT.fit`` — which the example verifies,
+  * the cost-model router picks a rung under a latency SLO
+    (``resolve_key(..., slo_ms=...)``).
 
 Run:  PYTHONPATH=src python examples/serve_route.py
 """
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro import core
-from repro.configs import smoke_config
-from repro.models import model as M
-from repro.train.steps import build_serve_step
+from repro.api import FastVAT
+from repro.serve import ServeConfig, TendencyServer, resolve_key
+
+
+def run(n_requests: int = 12, n_points: int = 90, d: int = 4,
+        window_ms: float = 50.0, max_batch: int = 16,
+        seed: int = 0) -> dict:
+    """Drive submit -> coalesce -> result and return checkable facts.
+
+    Args:
+      n_requests: burst size (all same shape bucket -> one dispatch
+        when the burst fits ``max_batch`` and the window).
+      n_points, d: per-request dataset shape.
+      window_ms: coalescing window.
+      max_batch: per-dispatch lane cap.
+      seed: dataset generator seed.
+
+    Returns:
+      dict of facts the acceptance test asserts: dispatch counts,
+      coalesce rate, cache hit rate, a bitwise-vs-solo verdict, and
+      the SLO router's pick for a reference workload.
+    """
+    rng = np.random.default_rng(seed)
+    datasets = []
+    for _ in range(n_requests):
+        half = n_points // 2
+        datasets.append(np.concatenate([
+            rng.normal(size=(half, d)),
+            rng.normal(size=(n_points - half, d)) + 7.0,
+        ]).astype(np.float32))
+
+    config = ServeConfig(window_s=window_ms / 1e3, max_batch=max_batch)
+    with TendencyServer(config) as server:
+        # pre-compile the exact program the burst will hit: n-bucket of
+        # n_points, lane bucket of the burst size
+        server.warm(n_points, d, method="vat", batch=n_requests)
+        futures = [server.submit(X, method="vat") for X in datasets]
+        results = [f.result(timeout=300) for f in futures]
+        stats = server.stats()
+
+    # every served result must equal its solo fit bit for bit
+    solo = FastVAT(method="vat").fit(datasets[0]).result
+    bitwise = bool(
+        np.array_equal(np.asarray(results[0].order), np.asarray(solo.order))
+        and np.array_equal(np.asarray(results[0].rstar),
+                           np.asarray(solo.rstar)))
+
+    report = FastVAT.from_result(results[0], X=datasets[0]).assess()
+
+    # the SLO router, shown on a reference workload: at n=1024 a 50 ms
+    # budget affords the geodesic (iVAT) image, a 20 ms budget does not
+    slo_key = resolve_key(1024, d, metric="euclidean", config=config,
+                          slo_ms=50.0)
+
+    return {
+        "n_requests": n_requests,
+        "dispatched_batches": stats.dispatched_batches,
+        "dispatched_requests": stats.dispatched_requests,
+        "coalesce_rate": stats.coalesce_rate,
+        "warm_hit_rate": stats.cache.hit_rate,
+        "compiled_programs": stats.cache.misses,
+        "bitwise_vs_solo": bitwise,
+        "slo_routed_rung": slo_key.rung,
+        "k_est": int(report["k_est"]),
+        "clustered": bool(report["clustered"]),
+    }
 
 
 def main():
-    cfg = smoke_config("phi3-mini-3.8b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-
-    # 32 requests from two prompt families (e.g. two system prompts)
-    rng = np.random.default_rng(0)
-    fam = rng.integers(0, 2, 32)
-    prompts = np.where(fam[:, None] == 0,
-                       rng.integers(1, 40, (32, 8)),
-                       rng.integers(80, 120, (32, 8))).astype(np.int32)
-
-    # prompt embeddings from the serving encoder (stubbed here: an
-    # untrained embed table carries no semantics, so we synthesize the
-    # family-separated embeddings a trained encoder would produce)
-    emb = (rng.normal(size=(32, 64)) + fam[:, None] * 4.0).astype(np.float32)
-    rep = core.activation_report(jnp.asarray(emb), jax.random.PRNGKey(1),
-                                 sample=32)
-    k = int(rep.k_est)
-    print(f"request-pool tendency: hopkins={float(rep.hopkins):.3f} "
-          f"block_score={float(rep.block_score):.3f} -> {k} groups")
-
-    # group by k-means over the embeddings (k from VAT) and decode batched
-    labels, _, _ = core.kmeans(jnp.asarray(emb), jax.random.PRNGKey(2), k=k)
-    serve = jax.jit(build_serve_step(cfg))
-    for g in range(k):
-        idx = np.where(np.asarray(labels) == g)[0]
-        toks = jnp.asarray(prompts[idx, -1:])          # last prompt token
-        cache = M.init_cache(cfg, len(idx), 32, jnp.float32)
-        pos = 0
-        outs = []
-        for step in range(8):
-            toks, cache = serve(params, cache, toks, jnp.int32(pos))
-            pos += 1
-            outs.append(np.asarray(toks)[:, 0])
-        gen = np.stack(outs, axis=1)
-        print(f"group {g}: {len(idx)} requests, generated {gen.shape[1]} "
-              f"tokens each; majority family: {int(np.median(fam[idx]))}")
+    facts = run()
+    print(f"served {facts['n_requests']} requests in "
+          f"{facts['dispatched_batches']} batched dispatch(es) "
+          f"(coalesce rate {facts['coalesce_rate']:.1f} req/batch)")
+    print(f"program cache: {facts['compiled_programs']} compiled, "
+          f"hit rate {facts['warm_hit_rate']:.0%}")
+    print(f"served result bitwise-equal to solo FastVAT.fit: "
+          f"{facts['bitwise_vs_solo']}")
+    print(f"SLO router at n=1024, 50 ms budget -> "
+          f"{facts['slo_routed_rung']}")
+    print(f"tendency verdict: k_est={facts['k_est']} "
+          f"clustered={facts['clustered']}")
 
 
 if __name__ == "__main__":

@@ -126,6 +126,34 @@ class FastVAT:
         """True after ``fit_many`` (the result carries a batch axis)."""
         return self.result is not None and self.result.is_batched
 
+    @classmethod
+    def from_result(cls, result: TendencyResult, X=None) -> "FastVAT":
+        """Adopt an externally produced fit (e.g. a served one).
+
+        The serving layer (``repro.serve``) returns bare
+        ``TendencyResult`` pytrees; wrapping one here restores the full
+        facade surface — ``order()`` / ``image()`` / ``assess()`` —
+        configured from the result's own meta, so a served fit assesses
+        identically to the solo ``FastVAT(...).fit(X)`` it mirrors.
+
+        Args:
+          result: a fit result from any rung (solo or batched).
+          X: the original dataset(s); required for ``assess()`` on
+            non-precomputed metrics (the Hopkins probe needs points).
+
+        Returns:
+          A fitted facade (``fit`` was effectively already called).
+        """
+        m = result.meta
+        fv = cls(method=m.method, metric=m.metric,
+                 sample_size=(m.sample_size if m.sample_size is not None
+                              else 256),
+                 use_pallas=m.use_pallas, seed=m.seed)
+        fv.result = result
+        fv.method_resolved = m.method
+        fv._X = None if X is None else np.asarray(X)
+        return fv
+
     def _meta(self, method: str, n: int, batch: int | None) -> ResultMeta:
         return ResultMeta(method=method, metric=self.metric, n=n,
                           batch=batch, seed=self.seed,

@@ -85,6 +85,92 @@ Fitter = Callable[[Any, ResultMeta, RungOptions], TendencyResult]
 
 
 @dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Per-rung wall-time model — the SLO router's cost data (ISSUE 7).
+
+    ``predict_us(n, batch) = base_us + batch * (per_point_us * n +
+    per_sq_point_us * n^2)``.  Coefficients are calibrated against the
+    committed ``BENCH_*.json`` trajectory (CPU numbers from this repo's
+    flash/turbo/approx/table4 rows — recalibrate when an accelerator
+    trajectory exists); they exist to *rank* rungs and gate SLOs, they
+    are not latency promises.
+
+    Attributes:
+      base_us: fixed dispatch + host-glue cost per fit.
+      per_point_us: O(n) coefficient (kNN edges, sampling passes).
+      per_sq_point_us: O(n^2) coefficient (materialized matrices, the
+        matrix-free engines' recompute work).
+      cap_n: feasibility ceiling — e.g. the O(n^2) matrix memory wall of
+        the materialized rungs; the router never offers a rung past it
+        no matter how generous the SLO.
+    """
+
+    base_us: float
+    per_point_us: float = 0.0
+    per_sq_point_us: float = 0.0
+    cap_n: int | None = None
+
+    def predict_us(self, n: int, batch: int = 1) -> float:
+        """Predicted wall microseconds for a (batch, n, d)-ish fit."""
+        per = self.per_point_us * n + self.per_sq_point_us * float(n) * n
+        return self.base_us + batch * per
+
+    def feasible(self, n: int) -> bool:
+        """Whether the rung is offered at all at this n."""
+        return self.cap_n is None or n <= self.cap_n
+
+
+def predict_latency_us(method: str, n: int, *, batch: int = 1) -> float | None:
+    """Predicted fit latency of a registered rung; None when unmodeled."""
+    model = get_rung(method).latency_model
+    return None if model is None else model.predict_us(n, batch=batch)
+
+
+def select_method_for_slo(n: int, slo_us: float, *, batch: int = 1,
+                          restrict=None) -> str:
+    """Pick the rung to run under a latency SLO (the serving router).
+
+    Policy: among the feasible, latency-modeled rungs (optionally
+    restricted to a candidate set), return the **highest-fidelity rung
+    the budget affords** — fidelity proxied by predicted cost, because
+    in this ladder more compute buys a more faithful picture (ivat's
+    geodesic image > vat's raw image > flashvat's band render > the
+    sampled/approx rungs).  When no candidate fits the SLO, degrade
+    gracefully to the cheapest feasible rung (best effort beats an
+    error under load); callers that need a hard guarantee compare
+    ``predict_latency_us`` against the SLO themselves.
+
+    Args:
+      n: points per dataset.
+      slo_us: the latency budget in microseconds.
+      batch: datasets per dispatch (coalesced serving amortizes base
+        cost but multiplies per-dataset work).
+      restrict: iterable of method names to choose among; None means
+        every registered rung with a latency model.
+
+    Returns:
+      The selected method name.
+
+    Raises:
+      LookupError: no feasible modeled candidate exists.
+    """
+    names = tuple(restrict) if restrict is not None else registered()
+    cands = []
+    for name in names:
+        model = get_rung(name).latency_model
+        if model is not None and model.feasible(n):
+            cands.append((name, model.predict_us(n, batch=batch)))
+    if not cands:
+        raise LookupError(
+            f"no latency-modeled rung is feasible at n={n} "
+            f"(candidates considered: {list(names)})")
+    fitting = [c for c in cands if c[1] <= slo_us]
+    if fitting:
+        return max(fitting, key=lambda c: c[1])[0]
+    return min(cands, key=lambda c: c[1])[0]
+
+
+@dataclasses.dataclass(frozen=True)
 class Rung:
     """One registered VAT method.
 
@@ -99,6 +185,9 @@ class Rung:
       max_n: hard cap enforced at fit time; None = uncapped.
       check: optional environment validation hook, called with n before
         fitting (e.g. dvat's device-count requirements).
+      latency_model: calibrated wall-time model for SLO routing
+        (``select_method_for_slo``); None = the rung is never offered
+        by the router (it stays reachable via explicit ``method=``).
       description: one-liner for docs/tooling.
     """
 
@@ -109,6 +198,7 @@ class Rung:
     auto_threshold: float | None = None
     max_n: int | None = None
     check: Callable[[int], None] | None = None
+    latency_model: LatencyModel | None = None
     description: str = ""
 
     @property
@@ -438,30 +528,51 @@ def _fit_dvat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
                           extension_labels=None, meta=meta)
 
 
+# Latency-model calibration (ISSUE 7): CPU coefficients fitted by eye
+# against the committed BENCH_*.json trajectory — flash table (n=8192
+# materialized ~0.86 s, persistent matrix-free ~0.15 s; n=100k ~59 s),
+# table4 (approx at n=1e6 ~130 s, ~130 us/point), table1/batched for the
+# small-n fixed costs.  cap_n = 20_000 is the materialized rungs' (n, n)
+# memory wall (1.6 GB f32) — past it the router only offers matrix-free
+# rungs regardless of SLO.  dvat carries no model: its cost is
+# mesh-shaped, not n-shaped, and the router must not pretend otherwise.
+_MATERIALIZE_CAP_N = 20_000
+
 register(Rung(
     name="vat", fit=_fit_vat, fit_batch=_fit_vat_batch,
     supports_precomputed=True, auto_threshold=SMALL_N,
+    latency_model=LatencyModel(base_us=3e3, per_point_us=1.5,
+                               per_sq_point_us=1.3e-2,
+                               cap_n=_MATERIALIZE_CAP_N),
     description="exact VAT — O(n^2) matrix fits easily"))
 register(Rung(
     name="ivat", fit=_fit_ivat, fit_batch=_fit_ivat_batch,
     supports_precomputed=True, auto_threshold=None,
+    latency_model=LatencyModel(base_us=4e3, per_point_us=1.5,
+                               per_sq_point_us=3.2e-2,
+                               cap_n=_MATERIALIZE_CAP_N),
     description="exact VAT + geodesic (iVAT) image; opt-in"))
 register(Rung(
     name="svat", fit=_fit_svat, auto_threshold=None,
+    latency_model=LatencyModel(base_us=4e3, per_point_us=25.0),
     description="maximin sample VAT, O(ns + s^2); opt-in (flashvat "
                 "covers its former auto window exactly)"))
 register(Rung(
     name="flashvat", fit=_fit_flashvat, fit_batch=_fit_flashvat_batch,
     auto_threshold=MEDIUM_N,
+    latency_model=LatencyModel(base_us=2.5e4, per_point_us=4.0,
+                               per_sq_point_us=4e-3),
     description="matrix-free exact VAT (Flash-VAT): fused streaming "
                 "Prim, O(n·d) memory, no (n, n) object"))
 register(Rung(
     name="bigvat", fit=_fit_bigvat, auto_threshold=None,
+    latency_model=LatencyModel(base_us=2e5, per_point_us=60.0),
     description="out-of-core clusiVAT pipeline, no (n, n) object; "
                 "opt-in (approx covers its former auto window with a "
                 "measured error bound)"))
 register(Rung(
     name="approx", fit=_fit_approx, auto_threshold=math.inf,
+    latency_model=LatencyModel(base_us=6e5, per_point_us=130.0),
     description="kNN-graph Boruvka MST VAT, O(n·k) edges — the "
                 "million-point rung; error reported on meta.approx"))
 register(Rung(

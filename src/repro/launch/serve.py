@@ -1,80 +1,105 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""Serving launcher: synthetic concurrent load against TendencyServer.
 
-Drives the real serving path (prefill fills the cache, decode_step
-continues) with sVAT request-group diagnostics every --diag-every
-batches.  Reduced configs make it runnable on CPU:
+Drives the real serving path (ISSUE 7) — warm the AOT program cache,
+fire ``--requests`` fits from ``--concurrency`` client threads, and
+report the latency distribution (p50/p99), throughput, and scheduler
+counters (coalesce rate, cache hits/misses/evictions, timeouts).  This
+is the command-line twin of the bench "serve" table, sized for quick
+interactive runs:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
-      --smoke --requests 8 --prompt-len 16 --gen 24
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
+      --concurrency 8 --sizes 90,120,200 --window-ms 5 --slo-ms 50
 """
 from __future__ import annotations
 
 import argparse
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro import core
-from repro.configs import ARCHS, get_config, smoke_config
-from repro.models import model as M
+from repro.serve import ServeConfig, TendencyServer
+
+
+def _datasets(sizes: list[int], count: int, d: int, seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(count):
+        n = sizes[i % len(sizes)]
+        half = n // 2
+        out.append(np.concatenate([
+            rng.normal(size=(half, d)),
+            rng.normal(size=(n - half, d)) + 7.0,
+        ]).astype(np.float32))
+    return out
+
+
+def _pct(values: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q))
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
+    ap = argparse.ArgumentParser(
+        description="concurrent-load driver for the tendency server")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--window-ms", type=float, default=2.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--sizes", default="90,120,200",
+                    help="comma-separated per-request point counts")
+    ap.add_argument("--dim", type=int, default=4)
+    ap.add_argument("--metric", default="euclidean")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="route through the cost-model router under "
+                         "this latency budget")
+    ap.add_argument("--timeout-s", type=float, default=120.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed workload (CI-sized)")
     args = ap.parse_args()
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    B, P, G = args.requests, args.prompt_len, args.gen
-    prompts = rng.integers(1, cfg.vocab, (B, P)).astype(np.int32)
+    if args.smoke:
+        args.requests, args.concurrency = 16, 4
+        args.sizes, args.window_ms = "48,60", 5.0
 
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
-    if cfg.family == "audio":
-        batch["enc_frames"] = jnp.asarray(
-            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    data = _datasets(sizes, args.requests, args.dim, args.seed)
+    config = ServeConfig(window_s=args.window_ms / 1e3,
+                         max_batch=args.max_batch)
 
-    max_len = P + G + (cfg.n_patches if cfg.family == "vlm" else 0)
-    prefill = jax.jit(lambda p, b: M.prefill(p, cfg, b, max_len))
-    decode = jax.jit(lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos))
+    with TendencyServer(config) as server:
+        for n in sizes:  # cold compiles out of the measured window
+            server.warm(n, args.dim, metric=args.metric, batch=1)
+            server.warm(n, args.dim, metric=args.metric,
+                        batch=args.max_batch)
 
-    t0 = time.perf_counter()
-    logits, cache, pos = prefill(params, batch)
-    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    jax.block_until_ready(nxt)
-    t_prefill = time.perf_counter() - t0
+        latencies: list[float] = []
 
-    gen = [np.asarray(nxt)[:, 0]]
-    t0 = time.perf_counter()
-    for i in range(G - 1):
-        lg, cache = decode(params, nxt, cache, pos + i)
-        nxt = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
-        gen.append(np.asarray(nxt)[:, 0])
-    t_decode = time.perf_counter() - t0
-    out = np.stack(gen, axis=1)
+        def one(X) -> float:
+            t0 = time.perf_counter()
+            server.fit(X, metric=args.metric, slo_ms=args.slo_ms,
+                       timeout_s=args.timeout_s)
+            return time.perf_counter() - t0
 
-    print(f"prefill {B}x{P}: {t_prefill*1e3:.1f} ms   "
-          f"decode {G-1} steps: {t_decode*1e3:.1f} ms "
-          f"({(G-1)*B/max(t_decode,1e-9):.1f} tok/s)")
-    print(f"sample continuation[0]: {out[0][:12].tolist()}")
+        t_wall = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=args.concurrency) as pool:
+            latencies = list(pool.map(one, data))
+        t_wall = time.perf_counter() - t_wall
+        stats = server.stats()
 
-    # request-pool tendency diagnostic (paper integration)
-    emb = np.asarray(params["embed"])[prompts].mean(axis=1)
-    rep = core.activation_report(jnp.asarray(emb), jax.random.PRNGKey(1),
-                                 sample=min(64, B))
-    print(f"request tendency: hopkins={float(rep.hopkins):.3f} "
-          f"block={float(rep.block_score):.3f} k={int(rep.k_est)}")
+    qps = args.requests / max(t_wall, 1e-9)
+    print(f"{args.requests} requests x {args.concurrency} clients, "
+          f"sizes {sizes}, window {args.window_ms:.1f} ms")
+    print(f"latency p50 {1e3 * _pct(latencies, 50):.2f} ms   "
+          f"p99 {1e3 * _pct(latencies, 99):.2f} ms   "
+          f"throughput {qps:.1f} req/s")
+    c = stats.cache
+    print(f"batches {stats.dispatched_batches} "
+          f"(coalesce rate {stats.coalesce_rate:.2f} req/batch)   "
+          f"cache {c.hits} hits / {c.misses} misses / "
+          f"{c.evictions} evictions   timeouts {stats.timeouts}   "
+          f"rejected {stats.rejected}")
 
 
 if __name__ == "__main__":

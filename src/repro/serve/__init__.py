@@ -1,0 +1,35 @@
+"""Tendency-as-a-service: the serving layer over FastVAT (ISSUE 7).
+
+Public surface:
+
+  * :class:`TendencyServer` / :class:`ServeConfig` — the coalescing,
+    AOT-cached server (``submit`` -> Future, ``fit`` sync, ``warm``,
+    ``stats``).
+  * :class:`ProgramCache` / :class:`ProgramKey` — the LRU AOT program
+    cache and its key contract.
+  * bucketing helpers — ordering-exact pad-to-bucket shape collapse.
+  * :class:`CoalescerCore` + the error taxonomy — the clock-free
+    scheduling state machine the deterministic test rig drives.
+
+See docs/serving.md for the architecture and the cache-key contract.
+"""
+from repro.serve.bucketing import (MIN_BUCKET, bucket_batch, bucket_n,
+                                   ensure_bucketable, pack_batch, pad_rows,
+                                   real_positions, restrict)
+from repro.serve.cache import (CacheStats, ProgramCache, ProgramKey,
+                               mesh_fingerprint)
+from repro.serve.coalesce import (Backpressure, Batch, CoalescerCore,
+                                  DeadlineExceeded, ServeError, ServeRequest)
+from repro.serve.server import (PADDED_RUNGS, SERVABLE, ServeConfig,
+                                ServeStats, TendencyServer, resolve_key,
+                                trace_census, reset_trace_census)
+
+__all__ = [
+    "MIN_BUCKET", "bucket_batch", "bucket_n", "ensure_bucketable",
+    "pack_batch", "pad_rows", "real_positions", "restrict",
+    "CacheStats", "ProgramCache", "ProgramKey", "mesh_fingerprint",
+    "Backpressure", "Batch", "CoalescerCore", "DeadlineExceeded",
+    "ServeError", "ServeRequest",
+    "PADDED_RUNGS", "SERVABLE", "ServeConfig", "ServeStats",
+    "TendencyServer", "resolve_key", "trace_census", "reset_trace_census",
+]

@@ -1,0 +1,437 @@
+"""TendencyServer — the tendency-as-a-service front door (ISSUE 7).
+
+Composes the three serving mechanisms into one object:
+
+  * :class:`~repro.serve.cache.ProgramCache` — AOT-compiled fit
+    programs (``jax.jit(...).lower(...).compile()``), LRU-bounded, so a
+    warm-cache request never pays trace or compile time;
+  * :mod:`~repro.serve.bucketing` — power-of-2 shape buckets with
+    ordering-exact dup-row-0 padding, collapsing shape diversity onto
+    a small program set;
+  * :class:`~repro.serve.coalesce.CoalescerCore` — same-bucket requests
+    within a window ride one batched ``fit_batch`` dispatch.
+
+Routing: ``method="auto"`` without an SLO uses the registry's
+size-based policy (``select_method`` over the batch-capable rungs);
+with ``slo_ms`` it asks the cost-model router
+(``select_method_for_slo``) for the highest-fidelity rung the latency
+budget affords.
+
+Rung coverage: the servable set is the batch-capable rungs — vat, ivat,
+flashvat.  vat/ivat are row-padded to n-buckets (the padding is proven
+ordering-exact; see bucketing.py); flashvat programs key on the EXACT n
+because its band-render shapes (group sizes, representative count) are
+functions of n itself — flashvat still benefits from program reuse
+across requests of the same n and from batch-lane coalescing.
+
+Every served result is bitwise-identical to the solo
+``FastVAT(...).fit(X)`` result — tests/test_serve.py pins this across
+rungs, metrics, and concurrent mixed-shape load.
+
+Threading model: ``submit`` enqueues under one condition variable and
+returns a ``concurrent.futures.Future``; a single daemon dispatcher
+thread replays coalescer events and executes ready batches OUTSIDE the
+lock (compile/execute never block submitters).  All scheduling
+decisions live in the clock-free ``CoalescerCore``, so the identical
+logic is driven by the virtual-clock rig in tests with zero real
+sleeps.
+
+>>> import numpy as np
+>>> from repro.serve import TendencyServer
+>>> rng = np.random.default_rng(0)
+>>> X = rng.normal(size=(100, 4)).astype(np.float32)
+>>> with TendencyServer() as srv:
+...     res = srv.fit(X)                       # submit().result()
+...     same = srv.fit(X)                      # warm cache, zero traces
+>>> bool(np.array_equal(np.asarray(res.order), np.asarray(same.order)))
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.metrics import validate_metric
+from repro.api.registry import (RungOptions, get_rung, select_method,
+                                select_method_for_slo)
+from repro.api.result import ResultMeta, TendencyResult
+from repro.serve.bucketing import (bucket_batch, bucket_n, ensure_bucketable,
+                                   pack_batch, real_positions, restrict)
+from repro.serve.cache import (CacheStats, ProgramCache, ProgramKey,
+                               mesh_fingerprint)
+from repro.serve.coalesce import (Batch, CoalescerCore, DeadlineExceeded,
+                                  ServeError, ServeRequest)
+
+#: Rungs the server dispatches — exactly the batch-capable registry set.
+SERVABLE = ("vat", "ivat", "flashvat")
+#: Rungs whose rows may be padded to n-buckets (ordering-exact dup-row
+#: padding); flashvat is excluded — its band-render shapes depend on the
+#: exact n, so its programs key on n itself.
+PADDED_RUNGS = ("vat", "ivat")
+
+# Trace census in the style of kernels.ops.kernel_dispatch_stats: the
+# counter increments inside the jitted fit fn, so it only moves at TRACE
+# time — executing a cached compiled program leaves it untouched.  The
+# census tests pin "warm cache => zero new traces" with it.
+_TRACE_CENSUS = {"traces": 0}
+
+
+def trace_census() -> dict:
+    """Copy of the trace counters ({"traces": total trace entries})."""
+    return dict(_TRACE_CENSUS)
+
+
+def reset_trace_census() -> None:
+    """Zero the trace counters (test isolation)."""
+    _TRACE_CENSUS["traces"] = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Server knobs — everything that shapes programs or scheduling.
+
+    Attributes:
+      window_s: coalescing window in seconds — a bucket's first request
+        waits at most this long for companions.
+      max_batch: a group dispatches immediately at this many requests.
+      max_pending: bounded-queue limit; past it ``submit`` raises
+        :class:`~repro.serve.coalesce.Backpressure`.
+      cache_capacity: LRU bound of the AOT program cache.
+      sample_size: flashvat's rendered representative count (key
+        material — it changes compiled shapes).
+      use_pallas: route kernels through Pallas (key material).
+      turbo: flashvat engine pin (key material).
+      knn_k: approx-rung fan-out carried in the key for forward
+        compatibility (the approx rung has no batched fitter yet).
+      seed: the single seed baked into every program's ResultMeta —
+        served results match solo fits of the same seed.
+    """
+    window_s: float = 0.002
+    max_batch: int = 8
+    max_pending: int = 256
+    cache_capacity: int = 32
+    sample_size: int = 256
+    use_pallas: bool = False
+    turbo: bool | None = None
+    knn_k: int = 15
+    seed: int = 0
+
+
+def resolve_key(n: int, d: int, *, method: str = "auto",
+                metric: str = "euclidean",
+                config: ServeConfig = ServeConfig(),
+                slo_ms: float | None = None,
+                mesh: str | None = None) -> ProgramKey:
+    """Route a request shape to its program-cache group key.
+
+    Pure function of its arguments (no server state), so tests and the
+    virtual-clock rig build keys exactly the way ``submit`` does.
+
+    Args:
+      n, d: the request's real shape.
+      method: "auto" or a name in :data:`SERVABLE`.
+      metric: dissimilarity metric (``precomputed`` is rejected — see
+        ``ensure_bucketable``).
+      config: the server's program-shaping knobs.
+      slo_ms: latency budget in milliseconds; with ``method="auto"``
+        routes through the cost-model router instead of the size policy.
+      mesh: device-mesh fingerprint override (defaults to the live one).
+
+    Returns:
+      The group :class:`ProgramKey` with ``b_bucket=0`` (lane count is
+      bound at dispatch via ``with_batch``).
+
+    Raises:
+      ValueError: unservable metric/method, or n beyond every servable
+        rung's auto window.
+    """
+    validate_metric(metric)
+    ensure_bucketable(metric)
+    if method == "auto":
+        if slo_ms is not None:
+            method = select_method_for_slo(n, slo_ms * 1e3,
+                                           restrict=SERVABLE)
+        else:
+            try:
+                method = select_method(n, batched=True, strict=True)
+            except LookupError:
+                raise ValueError(
+                    f"n={n} exceeds every servable rung's window "
+                    f"(servable: {list(SERVABLE)}); fit it directly via "
+                    "FastVAT (the approx rung has no batched fitter "
+                    "yet)") from None
+    if method not in SERVABLE:
+        raise ValueError(f"the serving layer dispatches {list(SERVABLE)}, "
+                         f"got method={method!r}")
+    n_bucket = bucket_n(n) if method in PADDED_RUNGS else n
+    return ProgramKey(rung=method, b_bucket=0, n_bucket=n_bucket, d=d,
+                      metric=metric,
+                      mesh=mesh if mesh is not None else mesh_fingerprint(),
+                      turbo=config.turbo, knn_k=config.knn_k,
+                      use_pallas=config.use_pallas,
+                      sample_size=config.sample_size)
+
+
+def _build_program(key: ProgramKey, seed: int):
+    """AOT-compile the batched fit program for a concrete ProgramKey.
+
+    ``jax.jit(fit).lower(spec).compile()`` traces exactly once, here;
+    the returned ``Compiled`` executable never re-enters Python, which
+    is what the warm-cache zero-trace census pin rests on.
+    """
+    if key.b_bucket < 1:
+        raise ValueError(f"program wants a concrete lane count, got "
+                         f"b_bucket={key.b_bucket} (call with_batch first)")
+    rung = get_rung(key.rung)
+    meta = ResultMeta(method=key.rung, metric=key.metric, n=key.n_bucket,
+                      batch=key.b_bucket, seed=seed,
+                      sample_size=key.sample_size,
+                      use_pallas=key.use_pallas)
+    opts = RungOptions(sample_size=key.sample_size, turbo=key.turbo,
+                       knn_k=key.knn_k)
+
+    def fit(Xs):
+        _TRACE_CENSUS["traces"] += 1
+        return rung.fit_batch(Xs, meta, opts)
+
+    spec = jax.ShapeDtypeStruct((key.b_bucket, key.n_bucket, key.d),
+                                jnp.float32)
+    return jax.jit(fit).lower(spec).compile()
+
+
+def _unpack(key: ProgramKey, res: TendencyResult, lane: int,
+            n: int, seed: int) -> TendencyResult:
+    """Extract one request's solo-equivalent result from a batched fit.
+
+    For the padded rungs the real-point subsequence of the padded
+    ordering IS the unpadded ordering (bucketing.py's dup-row
+    argument), so slicing the lane at the real positions reproduces the
+    solo fit bitwise.  flashvat lanes are unpadded — take the lane.
+    """
+    meta = ResultMeta(method=key.rung, metric=key.metric, n=n, batch=None,
+                      seed=seed, sample_size=key.sample_size,
+                      use_pallas=key.use_pallas)
+    if key.rung in PADDED_RUNGS:
+        order_pad = np.asarray(res.order[lane])
+        pos = real_positions(order_pad, n)
+        iv = res.ivat_image
+        return TendencyResult(
+            order=order_pad[pos],
+            rstar=restrict(np.asarray(res.rstar[lane]), pos),
+            ivat_image=(None if iv is None
+                        else restrict(np.asarray(iv[lane]), pos)),
+            sample_idx=None, extension_labels=None, meta=meta)
+    return TendencyResult(
+        order=np.asarray(res.order[lane]),
+        rstar=np.asarray(res.rstar[lane]),
+        ivat_image=(None if res.ivat_image is None
+                    else np.asarray(res.ivat_image[lane])),
+        sample_idx=(None if res.sample_idx is None
+                    else np.asarray(res.sample_idx[lane])),
+        extension_labels=(None if res.extension_labels is None
+                          else np.asarray(res.extension_labels[lane])),
+        group_sizes=(None if res.group_sizes is None
+                     else np.asarray(res.group_sizes)),
+        meta=meta)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Point-in-time server counters (scheduler + program cache)."""
+    cache: CacheStats
+    submitted: int
+    dispatched_batches: int
+    dispatched_requests: int
+    timeouts: int
+    rejected: int
+    pending: int
+
+    @property
+    def coalesce_rate(self) -> float:
+        """Mean requests per dispatched batch (1.0 = no coalescing)."""
+        if not self.dispatched_batches:
+            return 0.0
+        return self.dispatched_requests / self.dispatched_batches
+
+
+class TendencyServer:
+    """Coalescing, AOT-cached cluster-tendency server (see module doc).
+
+    Args:
+      config: scheduling + program-shaping knobs.
+      clock: monotonic time source — injectable so the deterministic
+        rig can drive the same scheduling logic with a virtual clock.
+    """
+
+    def __init__(self, config: ServeConfig = ServeConfig(), *,
+                 clock=time.monotonic):
+        self.config = config
+        self._clock = clock
+        self._cache = ProgramCache(capacity=config.cache_capacity)
+        self._core = CoalescerCore(window=config.window_s,
+                                   max_batch=config.max_batch,
+                                   max_pending=config.max_pending)
+        self._cv = threading.Condition()
+        self._ready: deque[Batch] = deque()
+        self._closed = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="tendency-serve-dispatch")
+        self._thread.start()
+
+    # ---------------------------------------------------------- submit ----
+
+    def submit(self, X, *, metric: str = "euclidean",
+               method: str = "auto", slo_ms: float | None = None,
+               timeout_s: float = 30.0, tag=None) -> Future:
+        """Enqueue one fit; returns a Future of its TendencyResult.
+
+        Args:
+          X: (n, d) feature matrix.
+          metric: dissimilarity metric (not "precomputed").
+          method: "auto" (size/SLO routed) or a :data:`SERVABLE` name.
+          slo_ms: latency budget for the cost-model router.
+          timeout_s: per-request deadline; still queued past it => the
+            future fails with :class:`DeadlineExceeded`.
+          tag: caller label, carried on the request (test bookkeeping).
+
+        Returns:
+          Future resolving to a solo-equivalent
+          :class:`~repro.api.result.TendencyResult`.
+
+        Raises:
+          Backpressure: the bounded queue is full.
+          ServeError: the server is closed.
+          ValueError: unservable shape/metric/method.
+        """
+        X = np.asarray(X, dtype=np.float32)
+        if X.ndim != 2:
+            raise ValueError(f"submit wants an (n, d) matrix, got shape "
+                             f"{X.shape}")
+        n, d = int(X.shape[0]), int(X.shape[1])
+        key = resolve_key(n, d, method=method, metric=metric,
+                          config=self.config, slo_ms=slo_ms)
+        now = self._clock()
+        req = ServeRequest(X=X, n=n, key=key, arrival=now,
+                           deadline=now + timeout_s, future=Future(),
+                           tag=tag)
+        with self._cv:
+            if self._closed:
+                raise ServeError("server is closed")
+            batches, expired = self._core.offer(req, now)
+            self._ready.extend(batches)
+            self._cv.notify()
+        for r in expired:
+            self._fail_expired(r)
+        return req.future
+
+    def fit(self, X, **kwargs) -> TendencyResult:
+        """Synchronous convenience: ``submit(X, **kwargs).result()``."""
+        return self.submit(X, **kwargs).result()
+
+    def warm(self, n: int, d: int, *, metric: str = "euclidean",
+             method: str = "auto", batch: int = 1) -> ProgramKey:
+        """Pre-compile the program a future (n, d) request will hit.
+
+        Returns the concrete (batched) ProgramKey that was compiled —
+        a subsequent matching request is a pure cache hit.
+        """
+        key = resolve_key(n, d, method=method, metric=metric,
+                          config=self.config).with_batch(bucket_batch(batch))
+        self._cache.get(key, lambda: _build_program(key, self.config.seed))
+        return key
+
+    # ----------------------------------------------------- introspection --
+
+    def stats(self) -> ServeStats:
+        with self._cv:
+            return ServeStats(cache=self._cache.stats(),
+                              submitted=self._core.submitted,
+                              dispatched_batches=self._core.dispatched_batches,
+                              dispatched_requests=self._core.dispatched_requests,
+                              timeouts=self._core.timeouts,
+                              rejected=self._core.rejected,
+                              pending=self._core.pending)
+
+    # --------------------------------------------------------- lifecycle --
+
+    def close(self) -> None:
+        """Stop accepting work, drain queued requests, join the thread.
+
+        Queued requests still within deadline are dispatched (possibly
+        before their window elapsed); expired ones fail with
+        DeadlineExceeded.
+        """
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify()
+        self._thread.join()
+
+    def __enter__(self) -> "TendencyServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------- internals --
+
+    def _fail_expired(self, req: ServeRequest) -> None:
+        if not req.future.done():
+            req.future.set_exception(DeadlineExceeded(
+                f"request (n={req.n}, rung={req.key.rung}) expired after "
+                f"{req.deadline - req.arrival:.3f}s in queue"))
+
+    def _run(self) -> None:
+        """Dispatcher loop: replay coalescer events, execute batches
+        outside the lock, exit after a drained close."""
+        while True:
+            with self._cv:
+                while True:
+                    now = self._clock()
+                    batches, expired = self._core.poll(now)
+                    self._ready.extend(batches)
+                    if self._ready or expired or self._closed:
+                        break
+                    event = self._core.next_event()
+                    wait = (None if event is None
+                            else max(0.0, event[0] - now))
+                    self._cv.wait(timeout=wait)
+                if self._closed:
+                    drained, late = self._core.drain(self._clock())
+                    self._ready.extend(drained)
+                    expired = list(expired) + late
+                todo = list(self._ready)
+                self._ready.clear()
+                closed = self._closed
+            for req in expired:
+                self._fail_expired(req)
+            for batch in todo:
+                self._execute(batch)
+            if closed:
+                return
+
+    def _execute(self, batch: Batch) -> None:
+        """Compile-or-fetch the program and resolve every lane's future."""
+        key = batch.key.with_batch(bucket_batch(len(batch.requests)))
+        try:
+            program = self._cache.get(
+                key, lambda: _build_program(key, self.config.seed))
+            packed = pack_batch([r.X for r in batch.requests],
+                                key.n_bucket, key.b_bucket)
+            res = jax.block_until_ready(program(jnp.asarray(packed)))
+            for lane, req in enumerate(batch.requests):
+                req.future.set_result(
+                    _unpack(key, res, lane, req.n, self.config.seed))
+        except Exception as exc:  # noqa: BLE001 — fail futures, not thread
+            for req in batch.requests:
+                if not req.future.done():
+                    req.future.set_exception(exc)

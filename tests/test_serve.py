@@ -1,0 +1,528 @@
+"""The serving layer's certification suite (ISSUE 7).
+
+Four pillars:
+
+* **Deterministic concurrency** — the virtual-clock rig
+  (tests/_serve_clock.py) drives the clock-free ``CoalescerCore`` and
+  asserts exactly which requests land in which batch: window flushes,
+  max-batch closure, deadline expiry (including the deadline==flush
+  tie, which rides the batch), backpressure, drain.  Zero real sleeps.
+* **Program-cache census** — a warm-cache request compiles ZERO new
+  programs (trace counter + cache miss deltas), every code-shaping
+  knob is in the ProgramKey (distinctness sweep), LRU eviction at the
+  configured bound.
+* **Bitwise fidelity** — served results equal solo ``FastVAT.fit``
+  bit for bit across rungs and metrics, for coalesced batches, and
+  under real-thread mixed-shape concurrent load; the pad-to-bucket
+  invariant is property-tested at bucket boundaries +-1 (hypothesis
+  stub).
+* **Routing + lifecycle** — SLO cost-model routing, precomputed/oversize
+  rejection, warm(), close() drain semantics, warm-below-cold latency.
+"""
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from _serve_clock import CoalesceRig, VirtualClock, make_key
+from repro.api import FastVAT
+from repro.api.registry import predict_latency_us, select_method_for_slo
+from repro.serve import (Backpressure, DeadlineExceeded, ProgramCache,
+                         ServeConfig, ServeError, TendencyServer, bucket_n,
+                         pad_rows, real_positions, resolve_key, restrict,
+                         trace_census)
+
+
+def _blobs(n, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    return np.concatenate([
+        rng.normal(size=(half, d)),
+        rng.normal(size=(n - half, d)) + 6.0]).astype(np.float32)
+
+
+def _solo(X, method, metric="euclidean"):
+    return FastVAT(method=method, metric=metric).fit(X).result
+
+
+def _same_result(a, b) -> bool:
+    """Bitwise equality of two TendencyResults' array fields."""
+    for f in ("order", "rstar", "ivat_image", "sample_idx",
+              "extension_labels", "group_sizes"):
+        va, vb = getattr(a, f), getattr(b, f)
+        if (va is None) != (vb is None):
+            return False
+        if va is not None and not np.array_equal(np.asarray(va),
+                                                 np.asarray(vb)):
+            return False
+    return True
+
+
+# ================================================ virtual-clock rig ====
+# Pure scheduling logic: no JAX, no threads, no sleeps.
+
+def test_window_coalesces_same_bucket():
+    rig = CoalesceRig(window=1.0)
+    rig.submit("a", 0.0)
+    rig.submit("b", 0.5)                      # same bucket, inside window
+    assert rig.batch_tags() == []             # window still open
+    rig.run_until(1.0)                        # flush at opened + window
+    assert rig.batch_tags() == [["a", "b"]]
+    assert rig.dispatches[0][0] == 1.0
+
+
+def test_distinct_buckets_never_share_a_batch():
+    rig = CoalesceRig(window=1.0)
+    rig.submit("small", 0.0, n=100)           # bucket 128
+    rig.submit("large", 0.1, n=200)           # bucket 256
+    rig.run_until(2.0)
+    assert rig.batch_tags() == [["small"], ["large"]]
+    assert rig.dispatches[0][1].n_bucket == 128
+    assert rig.dispatches[1][1].n_bucket == 256
+
+
+def test_max_batch_flushes_immediately():
+    rig = CoalesceRig(window=1.0, max_batch=2)
+    rig.submit("a", 0.0)
+    rig.submit("b", 0.1)                      # hits max_batch: no waiting
+    assert rig.batch_tags() == [["a", "b"]]
+    assert rig.dispatches[0][0] == 0.1
+    rig.submit("c", 0.2)                      # opens a NEW window
+    rig.run_until(1.2)
+    assert rig.batch_tags() == [["a", "b"], ["c"]]
+
+
+def test_deadline_expires_queued_request():
+    rig = CoalesceRig(window=1.0)
+    rig.submit("doomed", 0.0, timeout_s=0.4)
+    rig.run_until(2.0)
+    assert rig.expired == [(0.4, "doomed")]
+    assert rig.batch_tags() == []             # nothing left to dispatch
+
+
+def test_deadline_expires_one_lane_batch_survives():
+    rig = CoalesceRig(window=1.0)
+    rig.submit("doomed", 0.0, timeout_s=0.4)
+    rig.submit("alive", 0.0, timeout_s=10.0)
+    rig.run_until(1.0)
+    assert rig.expired == [(0.4, "doomed")]
+    assert rig.batch_tags() == [["alive"]]
+
+
+def test_deadline_equal_to_flush_rides_the_batch():
+    # events at equal time are ordered flush-first (coalesce.next_event's
+    # (time, kind) tuple), so deadline == window-flush means served
+    rig = CoalesceRig(window=1.0)
+    rig.submit("edge", 0.0, timeout_s=1.0)
+    rig.run_until(1.0)
+    assert rig.expired == []
+    assert rig.batch_tags() == [["edge"]]
+
+
+def test_backpressure_bounds_the_queue():
+    rig = CoalesceRig(window=10.0, max_pending=2)
+    rig.submit("a", 0.0)
+    rig.submit("b", 0.1, n=200)               # different bucket, still queued
+    with pytest.raises(Backpressure):
+        rig.submit("c", 0.2)
+    assert rig.core.rejected == 1
+    assert rig.core.pending == 2              # rejected request not queued
+
+
+def test_late_arrival_opens_a_fresh_window():
+    rig = CoalesceRig(window=1.0)
+    rig.submit("a", 0.0)
+    rig.run_until(3.0)
+    rig.submit("b", 5.0)
+    rig.run_until(5.5)
+    assert rig.batch_tags() == [["a"]]        # b's window open until 6.0
+    rig.run_until(6.0)
+    assert rig.batch_tags() == [["a"], ["b"]]
+
+
+def test_drain_flushes_open_windows_but_honors_deadlines():
+    rig = CoalesceRig(window=100.0)
+    rig.submit("late", 0.0, timeout_s=0.5)
+    rig.submit("fine", 0.0, timeout_s=50.0)
+    rig.drain(1.0)                            # shutdown long before flush
+    assert rig.expired == [(0.5, "late")]
+    assert rig.batch_tags() == [["fine"]]
+
+
+def test_scheduler_counters():
+    rig = CoalesceRig(window=1.0, max_batch=8)
+    for i, t in enumerate([0.0, 0.2, 0.4]):
+        rig.submit(i, t)
+    rig.run_until(1.0)
+    c = rig.core
+    assert (c.submitted, c.dispatched_batches, c.dispatched_requests,
+            c.timeouts, c.rejected, c.pending) == (3, 1, 3, 0, 0, 0)
+
+
+def test_virtual_clock_is_monotonic():
+    clk = VirtualClock(5.0)
+    assert clk() == 5.0
+    clk.advance(1.5)
+    assert clk() == 6.5
+    with pytest.raises(ValueError):
+        clk.set(2.0)
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+# ============================================== program-cache census ===
+
+def test_every_code_shaping_knob_is_key_material():
+    """Any knob that changes compiled code must change the ProgramKey."""
+    base = dict(n=100, d=4)
+    variants = [
+        make_key(**base),
+        make_key(**base, rung="ivat"),
+        make_key(n=100, d=4, rung="flashvat"),
+        make_key(**base, metric="cosine"),
+        make_key(**base, metric="manhattan"),
+        make_key(n=300, d=4),                     # different n-bucket
+        make_key(n=100, d=8),                     # d is never padded
+        make_key(**base, mesh="tpu:8"),           # mesh fingerprint
+        make_key(**base, turbo=True),
+        make_key(**base, turbo=False),
+        make_key(**base, knn_k=31),
+        make_key(**base, use_pallas=True),
+        make_key(**base, sample_size=128),
+        make_key(**base).with_batch(2),
+        make_key(**base).with_batch(4),
+    ]
+    assert len(set(variants)) == len(variants)
+
+
+def test_flashvat_keys_on_exact_n_padded_rungs_on_bucket():
+    cfg = ServeConfig()
+    kv = resolve_key(100, 4, method="vat", config=cfg, mesh="test:1")
+    kf = resolve_key(100, 4, method="flashvat", config=cfg, mesh="test:1")
+    assert kv.n_bucket == bucket_n(100) == 128
+    assert kf.n_bucket == 100                 # band-render shapes need n
+    # two flashvat ns one bucket apart stay distinct programs
+    kf2 = resolve_key(101, 4, method="flashvat", config=cfg, mesh="test:1")
+    assert kf != kf2
+
+
+def test_lru_eviction_at_capacity():
+    cache = ProgramCache(capacity=2)
+    k1, k2, k3 = (make_key(n, 4).with_batch(1) for n in (10, 100, 200))
+    built = []
+    for k in (k1, k2, k3):                    # k3 insertion evicts k1
+        cache.get(k, lambda k=k: built.append(k) or object())
+    assert built == [k1, k2, k3]
+    assert k1 not in cache and k2 in cache and k3 in cache
+    s = cache.stats()
+    assert (s.hits, s.misses, s.evictions, s.size) == (0, 3, 1, 2)
+    cache.get(k2, lambda: pytest.fail("k2 must be a hit"))
+    assert cache.stats().hits == 1
+
+
+def test_lru_hit_refreshes_recency():
+    cache = ProgramCache(capacity=2)
+    k1, k2, k3 = (make_key(n, 4).with_batch(1) for n in (10, 100, 200))
+    cache.get(k1, object)
+    cache.get(k2, object)
+    cache.get(k1, object)                     # refresh k1 -> k2 is LRU
+    cache.get(k3, object)
+    assert k1 in cache and k2 not in cache and k3 in cache
+
+
+def test_warm_cache_compiles_zero_new_programs():
+    """The headline census pin: the second request in a bucket re-enters
+    neither Python tracing nor XLA compilation."""
+    with TendencyServer(ServeConfig(window_s=0.001)) as srv:
+        srv.fit(_blobs(50))                   # cold: compiles bucket-64
+        t0, s0 = trace_census()["traces"], srv.stats().cache
+        res = srv.fit(_blobs(60, seed=1))     # same bucket, different n
+        t1, s1 = trace_census()["traces"], srv.stats().cache
+    assert t1 - t0 == 0
+    assert s1.misses - s0.misses == 0
+    assert s1.hits - s0.hits == 1
+    assert _same_result(res, _solo(_blobs(60, seed=1), "vat"))
+
+
+def test_warm_precompiles_the_request_path():
+    with TendencyServer(ServeConfig(window_s=0.001)) as srv:
+        key = srv.warm(50, 3, batch=1)
+        assert key.b_bucket == 1 and key.n_bucket == 64
+        t0, m0 = trace_census()["traces"], srv.stats().cache.misses
+        srv.fit(_blobs(50))
+        assert trace_census()["traces"] - t0 == 0
+        assert srv.stats().cache.misses - m0 == 0
+
+
+# ============================================== bitwise fidelity =======
+
+@pytest.mark.parametrize("method,metric", [
+    ("vat", "euclidean"), ("vat", "sqeuclidean"),
+    ("vat", "manhattan"), ("vat", "cosine"),
+    ("ivat", "euclidean"), ("ivat", "cosine"),
+    ("flashvat", "euclidean"), ("flashvat", "manhattan"),
+])
+def test_served_equals_solo_bitwise(method, metric):
+    X = _blobs(60)
+    with TendencyServer(ServeConfig(window_s=0.001)) as srv:
+        served = srv.fit(X, method=method, metric=metric)
+    assert served.meta.method == method
+    assert _same_result(served, _solo(X, method, metric))
+
+
+def test_coalesced_batch_members_equal_solo_bitwise():
+    """Four requests in one window -> ONE batched dispatch, every lane
+    bitwise-identical to its solo fit."""
+    Xs = [_blobs(40 + 7 * i, seed=i) for i in range(4)]
+    cfg = ServeConfig(window_s=0.25, max_batch=8)
+    with TendencyServer(cfg) as srv:
+        srv.warm(64, 3, method="vat", batch=4)
+        futures = [srv.submit(X, method="vat") for X in Xs]
+        results = [f.result(timeout=60) for f in futures]
+        st = srv.stats()
+    assert st.dispatched_batches == 1
+    assert st.dispatched_requests == 4
+    assert st.coalesce_rate == 4.0
+    for X, res in zip(Xs, results):
+        assert _same_result(res, _solo(X, "vat"))
+
+
+def test_mixed_concurrent_stress_is_bitwise_exact():
+    """Real threads, mixed shapes/metrics/rungs submitted concurrently;
+    every result must equal its solo fit bit for bit."""
+    cases = []
+    for i in range(14):
+        n = (40, 50, 60, 64)[i % 4]
+        method = ("vat", "ivat")[i % 2]
+        cases.append((_blobs(n, seed=i), method))
+    cases += [(_blobs(80, seed=99), "flashvat"),
+              (_blobs(80, seed=98), "flashvat")]
+    cfg = ServeConfig(window_s=0.02, max_batch=4)
+    with TendencyServer(cfg) as srv:
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            futs = [pool.submit(
+                lambda X, m: srv.submit(X, method=m).result(timeout=300),
+                X, m) for X, m in cases]
+            results = [f.result(timeout=300) for f in futs]
+        st = srv.stats()
+    assert st.submitted == len(cases)
+    assert st.dispatched_requests == len(cases)
+    assert st.timeouts == 0 and st.rejected == 0
+    for (X, method), res in zip(cases, results):
+        assert res.meta.method == method
+        assert _same_result(res, _solo(X, method)), \
+            f"served {method} n={X.shape[0]} diverged from solo"
+
+
+# ------------------------------ pad-to-bucket property (hypothesis) ----
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([63, 64, 65, 127, 128, 129, 255, 256, 257]),
+       metric=st.sampled_from(["euclidean", "sqeuclidean", "manhattan",
+                               "cosine"]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_padding_never_perturbs_the_ordering(n, metric, seed):
+    """Dup-row-0 padding to the bucket, then extraction, reproduces the
+    unpadded fit bitwise — at bucket boundaries +-1, every metric."""
+    X = _blobs(n, seed=seed)
+    solo = _solo(X, "vat", metric)
+    Xp = pad_rows(X, bucket_n(n))
+    padded = _solo(Xp, "vat", metric)
+    pos = real_positions(np.asarray(padded.order), n)
+    assert np.array_equal(np.asarray(padded.order)[pos],
+                          np.asarray(solo.order))
+    assert np.array_equal(restrict(np.asarray(padded.rstar), pos),
+                          np.asarray(solo.rstar))
+
+
+def test_padding_preserves_the_ivat_image():
+    n = 65                                    # just past a boundary
+    X = _blobs(n, seed=2)
+    solo = _solo(X, "ivat")
+    padded = _solo(pad_rows(X, bucket_n(n)), "ivat")
+    pos = real_positions(np.asarray(padded.order), n)
+    assert np.array_equal(restrict(np.asarray(padded.ivat_image), pos),
+                          np.asarray(solo.ivat_image))
+
+
+# ============================================== routing ================
+
+def test_slo_router_buys_fidelity_with_budget():
+    # calibrated model at n=1024: vat ~18ms, flashvat ~33ms, ivat ~39ms
+    servable = ("vat", "ivat", "flashvat")
+    assert select_method_for_slo(1024, 50e3, restrict=servable) == "ivat"
+    assert select_method_for_slo(1024, 20e3, restrict=servable) == "vat"
+    # nothing fits a 1ms budget: degrade to the cheapest feasible rung
+    assert select_method_for_slo(1024, 1e3, restrict=servable) == "vat"
+    # past the materialized rungs' cap_n only flashvat is feasible
+    assert select_method_for_slo(30_000, 60e6, restrict=servable) \
+        == "flashvat"
+    with pytest.raises(LookupError):
+        select_method_for_slo(100, 1e3, restrict=("dvat",))  # unmodeled
+
+
+def test_latency_model_predictions_are_monotonic():
+    assert predict_latency_us("dvat", 100) is None
+    for method in ("vat", "ivat", "flashvat", "approx"):
+        lo, hi = (predict_latency_us(method, n) for n in (100, 10_000))
+        assert lo is not None and hi > lo
+    # coalescing amortizes base cost: 4 lanes < 4x one lane
+    one = predict_latency_us("vat", 512)
+    four = predict_latency_us("vat", 512, batch=4)
+    assert one < four < 4 * one
+
+
+def test_resolve_key_slo_routes_through_cost_model():
+    cfg = ServeConfig()
+    k = resolve_key(1024, 4, metric="euclidean", config=cfg,
+                    slo_ms=50.0, mesh="test:1")
+    assert k.rung == "ivat"
+    k = resolve_key(1024, 4, metric="euclidean", config=cfg,
+                    slo_ms=20.0, mesh="test:1")
+    assert k.rung == "vat"
+
+
+def test_precomputed_metric_is_rejected():
+    with pytest.raises(ValueError, match="precomputed"):
+        resolve_key(100, 100, metric="precomputed", config=ServeConfig(),
+                    mesh="test:1")
+
+
+def test_oversize_request_gets_actionable_error():
+    with pytest.raises(ValueError, match="servable"):
+        resolve_key(60_000, 4, config=ServeConfig(), mesh="test:1")
+
+
+def test_unservable_method_is_rejected():
+    with pytest.raises(ValueError, match="serving layer"):
+        resolve_key(100, 4, method="bigvat", config=ServeConfig(),
+                    mesh="test:1")
+
+
+# ============================================== lifecycle ==============
+
+def test_real_thread_deadline_timeout():
+    # window far beyond the deadline: the request must expire, not fit
+    cfg = ServeConfig(window_s=30.0)
+    with TendencyServer(cfg) as srv:
+        fut = srv.submit(_blobs(50), timeout_s=0.05)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+        deadline = time.monotonic() + 10
+        while srv.stats().timeouts == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert srv.stats().timeouts == 1
+
+
+def test_close_drains_queued_requests():
+    cfg = ServeConfig(window_s=30.0)          # would queue for 30s
+    srv = TendencyServer(cfg)
+    fut = srv.submit(_blobs(50))
+    srv.close()                               # drain executes it now
+    assert _same_result(fut.result(timeout=60), _solo(_blobs(50), "vat"))
+    with pytest.raises(ServeError):
+        srv.submit(_blobs(50))
+
+
+def test_warm_cache_latency_strictly_below_cold():
+    """The point of the AOT cache: a warm fit never pays trace/compile."""
+    X = _blobs(50)
+    with TendencyServer(ServeConfig(window_s=0.001)) as srv:
+        t0 = time.perf_counter()
+        srv.fit(X)                            # cold: trace + XLA compile
+        cold = time.perf_counter() - t0
+        warm = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            srv.fit(X)
+            warm.append(time.perf_counter() - t0)
+    assert sorted(warm)[len(warm) // 2] < cold
+
+
+def test_from_result_restores_the_facade_surface():
+    X = _blobs(60)
+    with TendencyServer(ServeConfig(window_s=0.001)) as srv:
+        served = srv.fit(X)
+    fv = FastVAT.from_result(served, X=X)
+    ref = FastVAT(method="vat").fit(X)
+    assert np.array_equal(fv.order(), ref.order())
+    assert np.array_equal(fv.image(), ref.image())
+    assert fv.assess() == ref.assess()
+
+
+# ============================================== example acceptance =====
+
+def test_serve_route_example_end_to_end():
+    """examples/serve_route.py shrunk to test size: submit -> coalesce ->
+    result through the real server, facts dict checked."""
+    import importlib.util
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "serve_route.py")
+    spec = importlib.util.spec_from_file_location("serve_route", path)
+    demo = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(demo)
+    facts = demo.run(n_requests=6, n_points=48, d=3, window_ms=250.0,
+                     max_batch=8)
+    assert facts["n_requests"] == 6
+    assert facts["dispatched_batches"] == 1   # all six rode one window
+    assert facts["coalesce_rate"] == 6.0
+    assert facts["bitwise_vs_solo"] is True
+    assert facts["slo_routed_rung"] == "ivat"
+    assert facts["warm_hit_rate"] > 0.0
+
+
+# ============================================== bench + schema v5 ======
+
+def _bench_modules():
+    # the bench harness is a repo-root namespace package; importable
+    # when the suite runs from the repo root (the documented command)
+    return (pytest.importorskip("benchmarks.bench"),
+            pytest.importorskip("benchmarks.bench_schema"))
+
+
+def test_bench_serve_warm_p50_strictly_below_cold():
+    """The CI-gated serve table's acceptance pin: warm-cache p50 sits
+    strictly below the cold start, and load rows carry percentiles."""
+    bench, _ = _bench_modules()
+    rows = bench.bench_serve(smoke=True, reps=2)
+    by_name = {r["name"]: r for r in rows}
+    cold = by_name["serve/n48/cold_fit"]["us_per_call"]
+    warm = by_name["serve/n48/warm_fit"]
+    assert warm["us_per_call"] < cold
+    assert warm["percentiles"]["p50_us"] <= warm["percentiles"]["p99_us"]
+    conc = by_name["serve/n48/concurrent_c4"]
+    assert conc["derived"]["qps"] > 0
+    assert conc["derived"]["coalesce_rate"] >= 1.0
+    assert set(conc["percentiles"]) == {"p50_us", "p99_us"}
+
+
+def test_bench_schema_v5_percentiles_rules():
+    _, schema = _bench_modules()
+
+    def doc(version, row_extra):
+        row = {"table": "serve", "name": "serve/x", "metric": "euclidean",
+               "us_per_call": 1.0, "peak_bytes": None, "derived": {},
+               **row_extra}
+        return {"schema_version": version,
+                "created_utc": "2026-08-09T00:00:00Z",
+                "host": {"platform": "p", "python": "3", "jax": "0",
+                         "backend": "cpu", "cpu_count": 1},
+                "config": {"smoke": True, "reps": 1, "tables": ["serve"]},
+                "rows": [row]}
+
+    good = {"percentiles": {"p50_us": 10.0, "p99_us": 20.0}}
+    assert schema.validate(doc(5, good))
+    with pytest.raises(ValueError, match="schema_version >= 5"):
+        schema.validate(doc(4, good))
+    with pytest.raises(ValueError, match="exactly keys"):
+        schema.validate(doc(5, {"percentiles": {"p50_us": 1.0}}))
+    with pytest.raises(ValueError, match="p99_us must be >= p50_us"):
+        schema.validate(doc(5, {"percentiles": {"p50_us": 9.0,
+                                                "p99_us": 1.0}}))
+    with pytest.raises(ValueError, match="number >= 0"):
+        schema.validate(doc(5, {"percentiles": {"p50_us": -1.0,
+                                                "p99_us": 1.0}}))
