@@ -132,12 +132,15 @@ def select_method_for_slo(n: int, slo_us: float, *, batch: int = 1,
 
     Policy: among the feasible, latency-modeled rungs (optionally
     restricted to a candidate set), return the **highest-fidelity rung
-    the budget affords** — fidelity proxied by predicted cost, because
-    in this ladder more compute buys a more faithful picture (ivat's
-    geodesic image > vat's raw image > flashvat's band render > the
-    sampled/approx rungs).  When no candidate fits the SLO, degrade
-    gracefully to the cheapest feasible rung (best effort beats an
-    error under load); callers that need a hard guarantee compare
+    the budget affords** — fidelity read from each rung's explicit
+    ``fidelity`` rank (ivat's geodesic image > vat's raw image >
+    flashvat's band render > the sampled/approx rungs), NOT proxied by
+    predicted cost: fixed dispatch overhead (flashvat's base cost
+    dominates at small n) would otherwise make the router buy a
+    *costlier but coarser* picture.  Ties in fidelity go to the
+    cheaper rung.  When no candidate fits the SLO, degrade gracefully
+    to the cheapest feasible rung (best effort beats an error under
+    load); callers that need a hard guarantee compare
     ``predict_latency_us`` against the SLO themselves.
 
     Args:
@@ -166,7 +169,8 @@ def select_method_for_slo(n: int, slo_us: float, *, batch: int = 1,
             f"(candidates considered: {list(names)})")
     fitting = [c for c in cands if c[1] <= slo_us]
     if fitting:
-        return max(fitting, key=lambda c: c[1])[0]
+        return max(fitting,
+                   key=lambda c: (get_rung(c[0]).fidelity, -c[1]))[0]
     return min(cands, key=lambda c: c[1])[0]
 
 
@@ -188,6 +192,13 @@ class Rung:
       latency_model: calibrated wall-time model for SLO routing
         (``select_method_for_slo``); None = the rung is never offered
         by the router (it stays reachable via explicit ``method=``).
+      fidelity: explicit rank of how faithful the rung's picture is
+        (higher = more faithful; exact geodesic > exact raw > banded
+        render > sampled/approximate).  The SLO router picks the
+        highest-fidelity rung fitting the budget — fidelity is ranked
+        explicitly rather than proxied by cost, because fixed dispatch
+        overhead can make a coarser rung predict costlier at small n.
+        Third-party rungs slot in relative to the built-in ranks.
       description: one-liner for docs/tooling.
     """
 
@@ -199,6 +210,7 @@ class Rung:
     max_n: int | None = None
     check: Callable[[int], None] | None = None
     latency_model: LatencyModel | None = None
+    fidelity: float = 0.0
     description: str = ""
 
     @property
@@ -544,6 +556,7 @@ register(Rung(
     latency_model=LatencyModel(base_us=3e3, per_point_us=1.5,
                                per_sq_point_us=1.3e-2,
                                cap_n=_MATERIALIZE_CAP_N),
+    fidelity=50.0,
     description="exact VAT — O(n^2) matrix fits easily"))
 register(Rung(
     name="ivat", fit=_fit_ivat, fit_batch=_fit_ivat_batch,
@@ -551,10 +564,12 @@ register(Rung(
     latency_model=LatencyModel(base_us=4e3, per_point_us=1.5,
                                per_sq_point_us=3.2e-2,
                                cap_n=_MATERIALIZE_CAP_N),
+    fidelity=60.0,
     description="exact VAT + geodesic (iVAT) image; opt-in"))
 register(Rung(
     name="svat", fit=_fit_svat, auto_threshold=None,
     latency_model=LatencyModel(base_us=4e3, per_point_us=25.0),
+    fidelity=30.0,
     description="maximin sample VAT, O(ns + s^2); opt-in (flashvat "
                 "covers its former auto window exactly)"))
 register(Rung(
@@ -562,17 +577,20 @@ register(Rung(
     auto_threshold=MEDIUM_N,
     latency_model=LatencyModel(base_us=2.5e4, per_point_us=4.0,
                                per_sq_point_us=4e-3),
+    fidelity=40.0,
     description="matrix-free exact VAT (Flash-VAT): fused streaming "
                 "Prim, O(n·d) memory, no (n, n) object"))
 register(Rung(
     name="bigvat", fit=_fit_bigvat, auto_threshold=None,
     latency_model=LatencyModel(base_us=2e5, per_point_us=60.0),
+    fidelity=20.0,
     description="out-of-core clusiVAT pipeline, no (n, n) object; "
                 "opt-in (approx covers its former auto window with a "
                 "measured error bound)"))
 register(Rung(
     name="approx", fit=_fit_approx, auto_threshold=math.inf,
     latency_model=LatencyModel(base_us=6e5, per_point_us=130.0),
+    fidelity=10.0,
     description="kNN-graph Boruvka MST VAT, O(n·k) edges — the "
                 "million-point rung; error reported on meta.approx"))
 register(Rung(

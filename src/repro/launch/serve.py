@@ -69,10 +69,14 @@ def main() -> None:
                          max_batch=args.max_batch)
 
     with TendencyServer(config) as server:
-        for n in sizes:  # cold compiles out of the measured window
-            server.warm(n, args.dim, metric=args.metric, batch=1)
-            server.warm(n, args.dim, metric=args.metric,
-                        batch=args.max_batch)
+        for n in sizes:  # cold compiles out of the measured window —
+            # warm the same key the requests resolve (incl. SLO
+            # routing), at every lane bucket a coalesced group can form
+            b = 1
+            while b <= args.max_batch:
+                server.warm(n, args.dim, metric=args.metric,
+                            slo_ms=args.slo_ms, batch=b)
+                b *= 2
 
         latencies: list[float] = []
 

@@ -17,16 +17,26 @@ Why dup-row-0 padding is exact (not just approximately harmless):
 
 * Every padding point has a distance row identical to point 0's (its
   self-distance and its distance to the other dups are 0, matching
-  point 0's diagonal entry).  At every step of Prim's traversal the
-  frontier value of a padding point therefore equals point 0's.
+  point 0's diagonal entry).  While point 0 is unselected, a padding
+  point's frontier value therefore equals point 0's at every Prim
+  step.
 * The kernels break ties by **first index** (``argmin``/``argmax``
   over a row pick the lowest index at equal value), and every padding
-  index is >= n, so at any tie a real point wins.  A padding point is
-  only selected after all real points — i.e. the real-point
-  subsequence of the padded ordering *is* the unpadded ordering.
-* The seed ``argmax(max(R, axis=1))`` cannot pick a padding row for
-  the same reason: its row maximum equals row 0's, and row 0 has the
-  lower index.
+  index is >= n, so whenever a padding point is the frontier argmin a
+  real point (point 0, or a lower-indexed real tie) wins instead —
+  no padding point is ever selected before point 0.
+* Padding points are NOT ordered after all real points: the moment
+  point 0 enters the tree their frontier distance becomes
+  ``d(X[0], X[0]) = 0``, so they ride in right after point 0 (real
+  points at frontier 0 still win the tie).  That is harmless, because
+  a duplicate of an already-selected point changes nothing: for every
+  unselected point x, ``d(x, dup) = d(x, X[0])`` is already folded
+  into x's frontier minimum, so no remaining frontier value — and no
+  argmin tie-break among real points — moves.  The real-point
+  subsequence of the padded ordering is therefore exactly the
+  unpadded ordering, selected at the same frontier distances.
+* The seed ``argmax(max(R, axis=1))`` cannot pick a padding row: its
+  row maximum equals row 0's, and row 0 has the lower index.
 * iVAT's path-max folds over duplicate rows are no-ops (folding a row
   with itself changes nothing), so the restricted geodesic image is
   unchanged too.

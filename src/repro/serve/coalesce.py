@@ -21,9 +21,12 @@ Semantics (pinned by tests/test_serve.py):
   queued at its deadline is expired with :class:`DeadlineExceeded`.
   At the instant ``deadline == flush`` the flush wins — the request
   rides the batch (events at equal time are ordered flush-first).
-* ``max_pending`` bounds the total queued requests; past it ``offer``
-  raises :class:`Backpressure` instead of buffering unboundedly.
-  Dispatch latency is the caller's signal to shed load.
+* ``max_pending`` bounds the total queued requests; past it
+  ``try_enqueue`` raises :class:`Backpressure` instead of buffering
+  unboundedly.  Dispatch latency is the caller's signal to shed load.
+  The rejection has NO side effects on the queue: callers replay due
+  events via ``poll(now)`` *before* enqueueing, so a rejected submit
+  can never swallow batches or expiries the poll produced.
 """
 from __future__ import annotations
 
@@ -175,23 +178,23 @@ class CoalescerCore:
             return None
         return min(events, key=lambda e: (e[0], e[1]))
 
-    def offer(self, req: ServeRequest,
-              now: float) -> tuple[list[Batch], list[ServeRequest]]:
-        """Submit one request at time ``now``.
+    def try_enqueue(self, req: ServeRequest, now: float) -> Batch | None:
+        """Enqueue one request at time ``now``; no implicit poll.
 
-        Polls first (so due flushes/expiries are replayed before the
-        queue-bound check), then enqueues, then flushes the group
-        immediately if it reached ``max_batch``.
+        Callers MUST call ``poll(now)`` first and handle its output —
+        that replays due flushes/expiries before the queue-bound check,
+        and it is what makes the Backpressure raise safe: a rejection
+        here has no side effects beyond the ``rejected`` counter, so it
+        can never discard batches whose futures would then hang.
 
         Returns:
-          (batches ready to dispatch, requests expired) — including any
-          produced by the implicit poll.
+          The group's batch when this request filled it to
+          ``max_batch`` (flushed immediately), else None.
 
         Raises:
-          Backpressure: when ``max_pending`` requests are already
-            queued after the poll.
+          Backpressure: ``max_pending`` requests are already queued.
+            The queue state is untouched.
         """
-        batches, expired = self.poll(now)
         if self.pending >= self.max_pending:
             self.rejected += 1
             raise Backpressure(
@@ -203,8 +206,8 @@ class CoalescerCore:
             self._opened[req.key] = now
         group.append(req)
         if len(group) >= self.max_batch:
-            batches.append(self._flush(req.key, now))
-        return batches, expired
+            return self._flush(req.key, now)
+        return None
 
     def drain(self, now: float) -> tuple[list[Batch], list[ServeRequest]]:
         """Flush every open group regardless of window (shutdown path).

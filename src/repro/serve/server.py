@@ -322,14 +322,27 @@ class TendencyServer:
         req = ServeRequest(X=X, n=n, key=key, arrival=now,
                            deadline=now + timeout_s, future=Future(),
                            tag=tag)
-        with self._cv:
-            if self._closed:
-                raise ServeError("server is closed")
-            batches, expired = self._core.offer(req, now)
-            self._ready.extend(batches)
-            self._cv.notify()
-        for r in expired:
-            self._fail_expired(r)
+        # Poll-then-enqueue: due flushes/expiries are pulled out of the
+        # core and handed to the dispatcher BEFORE the bound check, so a
+        # Backpressure rejection can never strand a flushed batch (its
+        # futures would otherwise hang forever).  Expired futures are
+        # failed outside the lock on every exit path.
+        expired: list[ServeRequest] = []
+        try:
+            with self._cv:
+                if self._closed:
+                    raise ServeError("server is closed")
+                try:
+                    batches, expired = self._core.poll(now)
+                    self._ready.extend(batches)
+                    flush = self._core.try_enqueue(req, now)
+                    if flush is not None:
+                        self._ready.append(flush)
+                finally:
+                    self._cv.notify()
+        finally:
+            for r in expired:
+                self._fail_expired(r)
         return req.future
 
     def fit(self, X, **kwargs) -> TendencyResult:
@@ -337,14 +350,21 @@ class TendencyServer:
         return self.submit(X, **kwargs).result()
 
     def warm(self, n: int, d: int, *, metric: str = "euclidean",
-             method: str = "auto", batch: int = 1) -> ProgramKey:
+             method: str = "auto", slo_ms: float | None = None,
+             batch: int = 1) -> ProgramKey:
         """Pre-compile the program a future (n, d) request will hit.
+
+        Pass the same ``slo_ms`` the requests will carry: with an SLO
+        the router may pick a different rung than the size policy, and
+        warming must target the key those requests resolve to or they
+        pay trace+compile on the serving path anyway.
 
         Returns the concrete (batched) ProgramKey that was compiled —
         a subsequent matching request is a pure cache hit.
         """
         key = resolve_key(n, d, method=method, metric=metric,
-                          config=self.config).with_batch(bucket_batch(batch))
+                          config=self.config,
+                          slo_ms=slo_ms).with_batch(bucket_batch(batch))
         self._cache.get(key, lambda: _build_program(key, self.config.seed))
         return key
 

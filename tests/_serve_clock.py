@@ -95,11 +95,19 @@ class CoalesceRig:
     def submit(self, tag, t: float, *, n: int = 100, d: int = 4,
                timeout_s: float = 10.0,
                key: ProgramKey | None = None) -> ServeRequest:
-        """Advance to t and offer one request (records any resulting
-        flushes/expiries). Returns the request for future inspection."""
+        """Advance to t and submit one request, recording any resulting
+        flushes/expiries. Returns the request for future inspection.
+
+        Mirrors TendencyServer.submit's poll-then-enqueue protocol: due
+        events are recorded BEFORE the bound check, so a Backpressure
+        raise never swallows a dispatch.
+        """
         self.clock.set(t)
         req = make_request(tag, t, n=n, d=d, timeout_s=timeout_s, key=key)
-        self._record(*self.core.offer(req, t))
+        self._record(*self.core.poll(t))
+        flush = self.core.try_enqueue(req, t)   # may raise Backpressure
+        if flush is not None:
+            self._record([flush], [])
         return req
 
     def run_until(self, t: float) -> None:

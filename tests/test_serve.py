@@ -133,6 +133,49 @@ def test_backpressure_bounds_the_queue():
     assert rig.core.pending == 2              # rejected request not queued
 
 
+def test_due_flush_at_full_queue_submit_is_never_lost():
+    """REVIEW regression: a submit arriving with the queue full while a
+    window flush is due must dispatch that flush (poll-then-enqueue),
+    not raise a Backpressure that strands the batch's futures — and the
+    freed capacity admits the new request."""
+    rig = CoalesceRig(window=1.0, max_pending=2)
+    rig.submit("a", 0.0)                      # bucket 128
+    rig.submit("b", 0.5, n=200)               # bucket 256; queue now full
+    rig.submit("c", 1.0)                      # a's flush due exactly now
+    assert rig.batch_tags() == [["a"]]        # the due flush was recorded
+    assert rig.core.pending == 2              # b still queued, c admitted
+    assert rig.core.rejected == 0
+
+
+def test_due_expiry_at_full_queue_submit_is_never_lost():
+    """Same protocol for deadlines: a due expiry at submit time is
+    recorded (its future will be failed), never swallowed by the
+    bound check."""
+    rig = CoalesceRig(window=10.0, max_pending=2)
+    rig.submit("a", 0.0, timeout_s=0.4)
+    rig.submit("b", 0.1, n=200)
+    rig.submit("c", 0.5)                      # a's deadline due at 0.4
+    assert rig.expired == [(0.4, "a")]
+    assert rig.core.pending == 2 and rig.core.rejected == 0
+
+
+def test_rejection_has_no_side_effects_on_the_queue():
+    """try_enqueue's Backpressure raise must leave the queue exactly as
+    if the rejected submit never happened — queued requests, their
+    windows, and the event schedule are untouched."""
+    rig = CoalesceRig(window=10.0, max_pending=2)
+    rig.submit("a", 0.0)
+    rig.submit("b", 0.1, n=200)
+    before = (rig.core.pending, rig.core.submitted, rig.core.next_event())
+    with pytest.raises(Backpressure):
+        rig.submit("c", 0.2)
+    assert (rig.core.pending, rig.core.submitted,
+            rig.core.next_event()) == before
+    assert rig.core.rejected == 1
+    rig.run_until(10.1)                       # both still flush normally
+    assert rig.batch_tags() == [["a"], ["b"]]
+
+
 def test_late_arrival_opens_a_fresh_window():
     rig = CoalesceRig(window=1.0)
     rig.submit("a", 0.0)
@@ -258,6 +301,20 @@ def test_warm_precompiles_the_request_path():
         assert srv.stats().cache.misses - m0 == 0
 
 
+def test_warm_with_slo_precompiles_the_slo_routed_key():
+    """REVIEW regression: SLO-routed traffic must be warmable — warm()
+    with the requests' slo_ms targets the router's key (ivat here, not
+    the size policy's vat), so the fits are pure cache hits."""
+    with TendencyServer(ServeConfig(window_s=0.001)) as srv:
+        key = srv.warm(60, 3, slo_ms=50.0, batch=1)
+        assert key.rung == "ivat"             # size policy would say vat
+        t0, m0 = trace_census()["traces"], srv.stats().cache.misses
+        res = srv.fit(_blobs(60), slo_ms=50.0)
+        assert trace_census()["traces"] - t0 == 0
+        assert srv.stats().cache.misses - m0 == 0
+    assert res.meta.method == "ivat"
+
+
 # ============================================== bitwise fidelity =======
 
 @pytest.mark.parametrize("method,metric", [
@@ -365,6 +422,18 @@ def test_slo_router_buys_fidelity_with_budget():
         select_method_for_slo(100, 1e3, restrict=("dvat",))  # unmodeled
 
 
+def test_slo_router_ranks_fidelity_explicitly_not_by_cost():
+    """REVIEW regression: flashvat's base cost dominates at small n, so
+    it predicts COSTLIER than ivat while rendering a coarser picture —
+    the router must rank by the explicit fidelity order, not cost."""
+    servable = ("vat", "ivat", "flashvat")
+    assert predict_latency_us("flashvat", 500) \
+        > predict_latency_us("ivat", 500)
+    assert select_method_for_slo(500, 40e3, restrict=servable) == "ivat"
+    # unrestricted: approx's huge base cost must not buy it the win
+    assert select_method_for_slo(200, 1e6) == "ivat"
+
+
 def test_latency_model_predictions_are_monotonic():
     assert predict_latency_us("dvat", 100) is None
     for method in ("vat", "ivat", "flashvat", "approx"):
@@ -416,6 +485,18 @@ def test_real_thread_deadline_timeout():
         while srv.stats().timeouts == 0 and time.monotonic() < deadline:
             time.sleep(0.005)
         assert srv.stats().timeouts == 1
+
+
+def test_server_backpressure_leaves_queued_request_servable():
+    """A rejected submit must not disturb the queued request: its
+    future still resolves (close() drains it) bitwise-equal to solo."""
+    srv = TendencyServer(ServeConfig(window_s=30.0, max_pending=1))
+    fut = srv.submit(_blobs(50))
+    with pytest.raises(Backpressure):
+        srv.submit(_blobs(70))
+    assert srv.stats().rejected == 1
+    srv.close()
+    assert _same_result(fut.result(timeout=60), _solo(_blobs(50), "vat"))
 
 
 def test_close_drains_queued_requests():
