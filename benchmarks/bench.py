@@ -38,6 +38,13 @@ benchmarks/README.md):
             multi-client load with the coalesce rate and cache hit
             rate on record.  Rows carry the schema-v5 ``percentiles``
             object.
+  monitor — the training-diagnostics subsystem (ISSUE 8): jitted
+            train-step wall time with the tendency monitor off vs
+            observing every N steps vs every step (the amortized
+            overhead story), one warm diag-step latency (the single
+            compiled probe-program dispatch), and the history's
+            serialized growth rate on the schema-v6 ``bytes_per_step``
+            field (a ``quality`` row — storage, not wall time).
   table2/table3 — the paper's Hopkins and clustering-alignment quality
             tables (us_per_call 0 — they record accuracy, not speed).
 
@@ -49,6 +56,9 @@ per-row ``quality`` flag: true marks rows that carry accuracy, not wall
 time, and ``compare.py`` keeps them out of the regression gate.  Schema
 v5 adds the optional per-row ``percentiles`` object ({p50_us, p99_us})
 for tables measured under load, where best-of-reps would hide the tail.
+Schema v6 adds the optional per-row ``bytes_per_step`` number — the
+serialized growth rate of a continuously-recorded artifact (the tendency
+monitor's history).
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
@@ -72,7 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 TABLES = ("table1", "table2", "table3", "table4", "batched", "ivat",
-          "metrics", "flash", "turbo", "approx", "serve")
+          "metrics", "flash", "turbo", "approx", "serve", "monitor")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
@@ -100,6 +110,9 @@ _SERVE_SIZES = (90, 1024)
 _SERVE_SIZES_SMOKE = (48,)
 _SERVE_LOAD = (64, 8)
 _SERVE_LOAD_SMOKE = (16, 4)
+# monitor overhead loop: (seq, batch, steps per measured loop, diag_every)
+_MONITOR_SHAPE = (64, 8, 20, 20)
+_MONITOR_SHAPE_SMOKE = (32, 4, 8, 4)
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -487,12 +500,97 @@ def bench_serve(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
+def bench_monitor(smoke: bool, reps: int) -> list[dict]:
+    """Training overhead of the tendency monitor (ISSUE 8).
+
+    Five rows per shape:
+
+      train_step       — the plain jitted train step, monitor off (the
+                         baseline every overhead row is relative to).
+      loop_diag_everyN — amortized per-step wall time of a hand-rolled
+                         train loop observing every N steps (the
+                         default cadence: N=20 full, N=4 smoke).
+      loop_diag_every1 — worst case: one probe dispatch per step.
+      diag_step        — one warm ``TendencyMonitor.observe`` (the
+                         single compiled probe-program dispatch plus its
+                         one host sync).
+      history_bytes    — ``quality`` row carrying the history's
+                         serialized growth rate on the schema-v6
+                         ``bytes_per_step`` field.
+
+    The acceptance line the compare gate holds (monitor=1.5): the
+    every-N loop must stay within noise of the plain step — diagnostics
+    are free at the default cadence or they won't stay on.
+    """
+    from repro.configs import smoke_config
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.data.tokens import make_batch
+    from repro.monitor import TendencyMonitor
+    from repro.train import steps as S
+
+    seq, batch_size, loop_steps, diag_every = (
+        _MONITOR_SHAPE_SMOKE if smoke else _MONITOR_SHAPE)
+    cfg = smoke_config("gemma-2b")
+    shape = ShapeConfig("bench", seq, batch_size, "train")
+    tc = TrainConfig(lr=1e-3, total_steps=max(loop_steps, 100))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape).items()}
+    state = S.init_state(cfg, tc, jax.random.PRNGKey(0))
+    step = jax.jit(S.build_train_step(cfg, tc))
+    tag = f"s{seq}xb{batch_size}"
+
+    def loop(diag: int) -> float:
+        """Best-of-reps amortized per-step seconds of a loop_steps run."""
+        mon = TendencyMonitor(cfg, seed=0)
+        st = state
+        st, _ = step(st, batch)                  # warm the step program
+        if diag:
+            mon.observe(0, st.params, batch)     # warm the probe program
+        best = float("inf")
+        for r in range(reps):
+            mon = TendencyMonitor(cfg, seed=0)
+            st = state
+            t0 = time.perf_counter()
+            for i in range(loop_steps):
+                st, _ = step(st, batch)
+                if diag and (i + 1) % diag == 0:
+                    mon.observe(i + 1, st.params, batch)
+            jax.block_until_ready(st.params)
+            best = min(best, (time.perf_counter() - t0) / loop_steps)
+        return best
+
+    t_plain = loop(0)
+    rows = [_row("monitor", f"{tag}/train_step", t_plain)]
+    t_n = loop(diag_every)
+    rows.append(_row("monitor", f"{tag}/loop_diag_every{diag_every}", t_n,
+                     overhead_vs_plain=round(t_n / t_plain, 3)))
+    t_1 = loop(1)
+    rows.append(_row("monitor", f"{tag}/loop_diag_every1", t_1,
+                     overhead_vs_plain=round(t_1 / t_plain, 3)))
+
+    mon = TendencyMonitor(cfg, seed=0)
+    mon.observe(0, state.params, batch)          # warm
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        mon.observe(r + 1, state.params, batch)  # observe() host-syncs
+        best = min(best, time.perf_counter() - t0)
+    rows.append(_row("monitor", f"{tag}/diag_step", best,
+                     probes=len(mon.specs)))
+
+    hist = _row("monitor", f"{tag}/history_bytes", 0.0,
+                probes=len(mon.specs))
+    hist["quality"] = True
+    hist["bytes_per_step"] = mon.history.nbytes_per_step()
+    rows.append(hist)
+    return rows
+
+
 _BENCHES = {"table1": bench_table1, "table2": bench_table2,
             "table3": bench_table3, "table4": bench_table4,
             "batched": bench_batched, "ivat": bench_ivat,
             "metrics": bench_metrics, "flash": bench_flash,
             "turbo": bench_turbo, "approx": bench_approx,
-            "serve": bench_serve}
+            "serve": bench_serve, "monitor": bench_monitor}
 assert set(_BENCHES) == set(TABLES)
 
 
@@ -505,7 +603,7 @@ def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
         print(f"# bench: {t} ...", file=sys.stderr)
         rows.extend(_BENCHES[t](smoke, reps))
     return {
-        "schema_version": 5,
+        "schema_version": 6,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {
             "platform": platform.platform(),

@@ -12,10 +12,10 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 #: Older snapshot versions this validator still accepts (the committed
 #: BENCH_*.json trajectory must keep validating as the schema grows).
-ACCEPTED_VERSIONS = (2, 3, 4, 5)
+ACCEPTED_VERSIONS = (2, 3, 4, 5, 6)
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
@@ -29,6 +29,10 @@ _ROW_KEYS_V3 = _ROW_KEYS | {"peak_bytes"}
 # v5 adds the OPTIONAL per-row ``percentiles`` object — exactly
 # {"p50_us", "p99_us"}, numbers >= 0 with p99 >= p50 — for tables
 # measured under load (serve), where best-of-reps would hide the tail.
+# v6 adds the OPTIONAL per-row ``bytes_per_step`` number >= 0 — the
+# serialized growth rate of a continuously-recorded artifact (the
+# tendency monitor's history), so storage-cost regressions land on the
+# perf record like wall time and peak_bytes do.
 _PCT_KEYS = {"p50_us", "p99_us"}
 
 
@@ -115,6 +119,13 @@ def validate(doc: dict) -> dict:
                     _fail(f"{where}.percentiles.{k} must be a number >= 0")
             if pct["p99_us"] < pct["p50_us"]:
                 _fail(f"{where}.percentiles: p99_us must be >= p50_us")
+        if "bytes_per_step" in row:
+            if version < 6:
+                _fail(f"{where}.bytes_per_step needs schema_version >= 6")
+            bps = row["bytes_per_step"]
+            if not isinstance(bps, (int, float)) or isinstance(bps, bool) \
+                    or bps < 0:
+                _fail(f"{where}.bytes_per_step must be a number >= 0")
     return doc
 
 

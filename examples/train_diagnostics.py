@@ -12,6 +12,7 @@ import shutil
 
 from repro.configs import get_config, smoke_config
 from repro.configs.base import ShapeConfig, TrainConfig
+from repro.monitor import STATE_NAMES
 from repro.train.loop import train
 
 
@@ -50,6 +51,18 @@ def main():
             print(f"  hopkins={h['hopkins']:.3f} "
                   f"block_score={h['vat_block_score']:.3f} "
                   f"k_est={int(h['vat_k_est'])}")
+        # per-probe drift rows from the tendency monitor (the "router"
+        # probe — present on MoE archs — is the expert-health signal)
+        probes = sorted({k.split("/")[1] for k in diag[-1]
+                         if k.startswith("tendency/")})
+        print("per-probe tendency (last diag step first):")
+        for name in probes:
+            h = diag[-1]
+            state = STATE_NAMES[h[f"tendency/{name}/state"]]
+            print(f"  {name:<12} state={state:<8} "
+                  f"score={h[f'tendency/{name}/block_score']:.3f} "
+                  f"k={int(h[f'tendency/{name}/k_est'])} "
+                  f"hopkins={h[f'tendency/{name}/hopkins']:.3f}")
 
 
 if __name__ == "__main__":

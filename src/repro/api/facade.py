@@ -11,10 +11,15 @@ Picks the right scaling rung automatically (see ``docs/scaling.md``):
                           ``knn_k`` knob trades error for speed)
 
 ``method`` overrides come from the rung registry (``repro.api.registry``)
-— "vat" | "ivat" | "svat" | "flashvat" | "bigvat" | "approx" | "dvat"
-plus anything third-party code registered.  Every rung returns the same
-``TendencyResult`` pytree, so ``order()`` / ``image()`` / ``assess()``
-below are branch-free reads.
+— "vat" | "ivat" | "svat" | "flashvat" | "bigvat" | "approx" | "dvat" |
+"embed" plus anything third-party code registered.  Every rung returns
+the same ``TendencyResult`` pytree, so ``order()`` / ``image()`` /
+``assess()`` below are branch-free reads.
+
+Deep embeddings (DeepVAT): ``fit(X, encoder=fn)`` runs the ladder on
+``fn(X)`` activations instead of raw inputs, and
+``fit_embeddings(params, cfg, batch)`` does the same for a model from
+the repo zoo — see docs/monitoring.md.
 
 >>> import numpy as np
 >>> rng = np.random.default_rng(0)
@@ -49,6 +54,8 @@ program (see ``docs/api.md``):
 [0, 1]
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -166,17 +173,26 @@ class FastVAT:
 
     # ------------------------------------------------------------- fit ----
 
-    def fit(self, X) -> "FastVAT":
+    def fit(self, X, *, encoder=None) -> "FastVAT":
         """Run the resolved rung on one dataset.
 
         Args:
           X: (n, d) array-like of points (np.memmap ok for bigvat), or —
             with ``metric="precomputed"`` — an (n, n) dissimilarity
             matrix (square, symmetric, zero diagonal).
+          encoder: route through the "embed" front-end rung
+            (DeepVAT-style).  A callable maps X to an (n, d) activation
+            matrix (any leading shape; flattened to rows) which the
+            ladder then assesses; a string means X is *already* the
+            activation matrix and the string is its encoder fingerprint.
+            Either way ``result.meta.encoder`` records provenance and
+            the inner rung is auto-selected by activation count.
 
         Returns:
           self; ``self.result`` is the rung's ``TendencyResult``.
         """
+        if encoder is not None:
+            return self._fit_embed_front(X, encoder)
         precomputed = self.metric == "precomputed"
         if precomputed:
             X = as_dissimilarity(X)
@@ -199,6 +215,63 @@ class FastVAT:
         self.method_resolved = method
         self._X = X
         return self
+
+    def _fit_embed_front(self, X, encoder) -> "FastVAT":
+        """fit(X, encoder=...) tail: encode, then run the embed rung.
+
+        Encoding happens here (not inside the rung fitter) so the
+        activations become ``self._X`` — ``assess()``'s Hopkins probe
+        then reads the embedding space the fit actually assessed, the
+        DeepVAT semantics.
+        """
+        from repro.monitor.probes import callable_fingerprint
+        if self.metric == "precomputed":
+            raise ValueError("encoder= assesses activations; it is "
+                             "incompatible with metric='precomputed'")
+        if self.method not in ("auto", "embed"):
+            raise ValueError("encoder= routes through the 'embed' rung; "
+                             "method must be 'auto' or 'embed', got "
+                             f"{self.method!r}")
+        if callable(encoder):
+            acts = np.asarray(jax.device_get(encoder(X)), np.float32)
+            fingerprint = callable_fingerprint(encoder)
+        else:
+            acts = np.asarray(X, np.float32)
+            fingerprint = str(encoder)
+        if acts.ndim > 2:
+            acts = acts.reshape(-1, acts.shape[-1])
+        n = int(acts.shape[0])
+        meta = dataclasses.replace(self._meta("embed", n, batch=None),
+                                   encoder=fingerprint)
+        self.result = registry.get_rung("embed").fit(acts, meta,
+                                                     self._options())
+        self.method_resolved = "embed"
+        self._X = acts
+        return self
+
+    def fit_embeddings(self, params, cfg, batch) -> "FastVAT":
+        """Assess the cluster tendency of a model's activations.
+
+        The DeepVAT workflow for the repo's model zoo: run one forward
+        pass, flatten the final hidden states to (batch*seq, d_model)
+        rows, and route them through the "embed" rung (which delegates
+        to the exact/approx ladder by activation count).  The model's
+        fingerprint — architecture identity + a weights digest — lands
+        on ``result.meta.encoder``.
+
+        Args:
+          params: model parameter pytree (``models.model.init_params``).
+          cfg: the ``ModelConfig`` matching params.
+          batch: input batch dict (``data.tokens.make_batch``) — tokens
+            plus any family extras (patches, enc_frames).
+
+        Returns:
+          self; ``self.result`` is a standard ``TendencyResult``.
+        """
+        from repro.monitor.probes import encode_batch, model_fingerprint
+        acts = np.asarray(jax.device_get(encode_batch(params, cfg, batch)),
+                          np.float32)
+        return self.fit(acts, encoder=model_fingerprint(cfg, params))
 
     def fit_many(self, Xs) -> "FastVAT":
         """Assess a stack of datasets in ONE compiled program.

@@ -17,7 +17,7 @@ pipeline) register here and immediately work through ``FastVAT`` and
 
 >>> from repro.api import registry
 >>> sorted(registry.registered())
-['approx', 'bigvat', 'dvat', 'flashvat', 'ivat', 'svat', 'vat']
+['approx', 'bigvat', 'dvat', 'embed', 'flashvat', 'ivat', 'svat', 'vat']
 >>> registry.select_method(100), registry.select_method(10_000)
 ('vat', 'flashvat')
 >>> registry.select_method(1_000_000)
@@ -74,11 +74,17 @@ class RungOptions(NamedTuple):
     the kNN-MST toward the exact MST (identical at k = n-1) at O(n·k)
     memory and time; the error actually incurred is reported on
     ``ResultMeta.approx``.
+
+    ``encoder`` is the "embed" rung's model hook: a callable mapping the
+    fit input to an (n, d) activation matrix (DeepVAT-style).  The
+    facade encodes before dispatch and leaves this None; set it when
+    driving the rung directly through the registry.
     """
     sample_size: int = 256
     block: int = 4096
     turbo: bool | None = None
     knn_k: int = 15
+    encoder: Any = None
 
 
 Fitter = Callable[[Any, ResultMeta, RungOptions], TendencyResult]
@@ -505,6 +511,40 @@ def _fit_flashvat_batch(data, meta: ResultMeta,
                           meta=meta)
 
 
+def _fit_embed(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
+    """The embeddings front-end rung (DeepVAT): assess activations.
+
+    Raw inputs (pixels, tokens) are rarely clusterable; learned
+    embeddings are.  This rung maps the input through an encoder —
+    ``opts.encoder`` (a callable X -> (n, d) activations), or the data
+    is already pre-encoded and ``meta.encoder`` carries the fingerprint
+    — then delegates to whatever rung ``select_method`` picks for the
+    activation count.  ``meta.method`` stays "embed" and
+    ``meta.encoder`` records provenance; everything else (images,
+    assess, serving adoption) is the inner rung's standard output.
+    """
+    enc = opts.encoder
+    if callable(enc):
+        from repro.monitor.probes import callable_fingerprint
+        acts = np.asarray(jax.device_get(enc(data)), np.float32)
+        if not meta.encoder:
+            meta = dataclasses.replace(meta,
+                                       encoder=callable_fingerprint(enc))
+    elif meta.encoder:
+        acts = np.asarray(data, np.float32)   # pre-encoded by the caller
+    else:
+        raise ValueError(
+            "method='embed' needs an encoder: pass options.encoder (a "
+            "callable X -> activations), or pre-encoded activations with "
+            "the encoder fingerprint on meta.encoder — e.g. via "
+            "FastVAT.fit(X, encoder=...) / FastVAT.fit_embeddings(...)")
+    if acts.ndim > 2:
+        acts = acts.reshape(-1, acts.shape[-1])
+    meta = dataclasses.replace(meta, n=int(acts.shape[0]))
+    inner = get_rung(select_method(meta.n))
+    return inner.fit(acts, meta, opts)
+
+
 def _check_dvat(n: int):
     if not core.HAS_DISTRIBUTED:
         raise RuntimeError(
@@ -596,3 +636,8 @@ register(Rung(
 register(Rung(
     name="dvat", fit=_fit_dvat, check=_check_dvat, auto_threshold=None,
     description="matrix-free distributed VAT; needs >1 device"))
+register(Rung(
+    name="embed", fit=_fit_embed, auto_threshold=None,
+    description="embeddings front-end (DeepVAT): encode, then run the "
+                "exact/approx ladder on activations; encoder "
+                "fingerprint on meta.encoder"))

@@ -69,6 +69,9 @@ class ResultMeta:
       approx: the approx rung's error report (``core.ApproxStats`` — a
         frozen, hashable dataclass, so meta stays valid pytree aux
         data); None for every exact rung.
+      encoder: fingerprint of the encoder that produced the fitted
+        activations (the "embed" front-end rung / ``fit_embeddings``);
+        None when the fit ran on raw input points.
     """
 
     method: str
@@ -79,6 +82,7 @@ class ResultMeta:
     sample_size: int | None = None
     use_pallas: bool = False
     approx: ApproxStats | None = None
+    encoder: str | None = None
 
     def jax_key(self, salt: int = SALT_FIT) -> jax.Array:
         """PRNG key for device-side sampling, derived from the one seed."""

@@ -32,12 +32,23 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, extra: dict | None = None,
+         aux_arrays: dict[str, dict[str, np.ndarray]] | None = None,
          keep: int = 3) -> str:
+    """Atomically publish one checkpoint step.
+
+    `aux_arrays` maps sidecar names to flat array dicts (e.g. the
+    monitor's `{"tendency_history": {...}}`); each is written as
+    ``<name>.npz`` inside the step directory *before* the atomic
+    publish, so weights and sidecars commit — and are garbage-collected
+    — together.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
+    for name, arrays in (aux_arrays or {}).items():
+        np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, **(extra or {})}, f)
     if os.path.exists(final):
@@ -76,6 +87,24 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None):
         assert arr.shape == leaf.shape, f"{p}: ckpt {arr.shape} != {leaf.shape}"
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves), manifest
+
+
+def load_aux(ckpt_dir: str, name: str,
+             step: int | None = None) -> dict[str, np.ndarray] | None:
+    """Load a sidecar ``<name>.npz`` saved via `save(aux_arrays=...)`.
+
+    Returns the arrays dict, or None when the checkpoint (or the
+    sidecar) doesn't exist — older checkpoints without the sidecar
+    restore cleanly.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", f"{name}.npz")
+    if not os.path.exists(path):
+        return None
+    with np.load(path, allow_pickle=False) as data:
+        return {k: data[k] for k in data.files}
 
 
 def _gc(ckpt_dir: str, keep: int) -> None:

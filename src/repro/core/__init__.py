@@ -27,8 +27,19 @@ from repro.core.bigvat import bigvat, BigVATResult, nearest_prototype_assign
 from repro.core.approx_mst import (approx_vat, boruvka_mst, knn_graph_anchored,
                                    mst_vat_order, ApproxStats,
                                    ApproxVATResult, MSTEdges)
-from repro.core.diagnostics import activation_report, embedding_tendency, router_tendency, TendencyReport
 from repro.core.cluster import kmeans, dbscan, adjusted_rand_index, pca
+
+_DIAG_NAMES = ("activation_report", "embedding_tendency", "router_tendency",
+               "TendencyReport")
+
+
+def __getattr__(name):
+    # Lazy: diagnostics now lives in repro.monitor.probes, which itself
+    # imports repro.core primitives — an eager import here would cycle.
+    if name in _DIAG_NAMES:
+        from repro.core import diagnostics
+        return getattr(diagnostics, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "vat", "vat_batch", "vat_batch_from_dist", "vat_from_dist",

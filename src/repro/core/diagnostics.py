@@ -1,71 +1,21 @@
-"""VAT as a first-class training diagnostic.
+"""VAT as a first-class training diagnostic (compat shim).
 
-This is where the paper's technique plugs into the LM framework: cluster-
-tendency assessment of *activation streams* during training/serving.
+The implementation moved to `repro.monitor.probes` when the monitor
+subsystem absorbed one-shot diagnostics into the continuous
+probes -> history -> drift pipeline.  This module keeps the original
+import surface alive:
 
-* ``embedding_tendency`` — VAT + Hopkins over a sample of token embeddings;
-  a collapsing embedding table loses block structure (score -> 0).
-* ``router_tendency``   — VAT over MoE router logits; healthy top-k routing
-  shows multiple dark blocks (k_est > 1), a collapsed router shows one.
-* ``activation_report`` — generic entry point the train loop calls every N
-  steps; cheap (sVAT-sampled, device-resident, no host sync inside jit).
+* ``embedding_tendency`` — VAT + Hopkins over a sample of token embeddings.
+* ``router_tendency``   — VAT over MoE router logits.
+* ``activation_report`` — generic entry point; sVAT-sampled AND
+  Hopkins-bounded, so a diag step is O(s²) regardless of batch x seq.
+
+New code should import from ``repro.monitor`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from repro.monitor.probes import (TendencyReport, activation_report,
+                                  embedding_tendency, router_tendency)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.hopkins import hopkins
-from repro.core.svat import maximin_sample
-from repro.core.vat import block_structure_score, vat_from_dist
-from repro.kernels import ops as kops
-
-
-class TendencyReport(NamedTuple):
-    hopkins: jax.Array        # scalar in [0, 1]
-    block_score: jax.Array    # diagonal-contrast score in [0, 1]
-    k_est: jax.Array          # estimated number of diagonal blocks
-    rstar: jax.Array          # (s, s) VAT image of the sample
-
-
-@functools.partial(jax.jit, static_argnames=("sample",))
-def activation_report(acts: jax.Array, key: jax.Array, *,
-                      sample: int = 128) -> TendencyReport:
-    """Cluster-tendency report for a (n, d) activation matrix.
-
-    Subsamples to `sample` points by maximin so the VAT cost is O(s^2),
-    independent of batch size.
-    """
-    acts = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
-    n = acts.shape[0]
-    s = min(sample, n)
-    k_s, k_h = jax.random.split(key)
-    idx = maximin_sample(acts, s, k_s)
-    sub = acts[idx]
-    R = kops.pairwise_dist(sub)
-    res = vat_from_dist(R)
-    score, k_est = block_structure_score(res.rstar)
-    return TendencyReport(
-        hopkins=hopkins(acts, k_h),
-        block_score=score,
-        k_est=k_est,
-        rstar=res.rstar,
-    )
-
-
-def embedding_tendency(embed_table: jax.Array, key: jax.Array,
-                       sample: int = 128) -> TendencyReport:
-    """Tendency of a (vocab, d) embedding table (collapse detector)."""
-    return activation_report(embed_table, key, sample=sample)
-
-
-def router_tendency(router_logits: jax.Array, key: jax.Array,
-                    sample: int = 128) -> TendencyReport:
-    """Tendency of (tokens, n_experts) router logits (specialization check).
-
-    k_est ~ 1 => router collapse; k_est >~ top_k => healthy specialization.
-    """
-    return activation_report(router_logits, key, sample=sample)
+__all__ = ["TendencyReport", "activation_report", "embedding_tendency",
+           "router_tendency"]

@@ -231,10 +231,14 @@ def _dense_block(p, h, cfg, cos, sin, cache=None, pos=None, causal=True):
     return h, new_cache
 
 
-def _moe_block(p, h, cfg, cos, sin, cache=None, pos=None):
+def _moe_block(p, h, cfg, cos, sin, cache=None, pos=None, taps=False):
     a, new_cache = _attn(p, rms_norm(h, p["ln1"], cfg.norm_eps), cfg, cos, sin,
                          cache=cache, pos=pos)
     h = h + a
+    if taps:
+        y, aux, logits = moe_ffn(p, rms_norm(h, p["ln2"], cfg.norm_eps), cfg,
+                                 return_logits=True)
+        return h + y, aux, new_cache, logits
     y, aux = moe_ffn(p, rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
     return h + y, aux, new_cache
 
@@ -265,16 +269,25 @@ def _rope_tables(cfg, positions):
 
 
 def forward(params: dict, cfg: ModelConfig, batch: dict, *,
-            return_hidden: bool = False):
+            return_hidden: bool = False, taps: bool = False):
     """Full-sequence forward. Returns (logits (B,S,V) f32, aux_loss scalar),
     or (final hidden states, aux) with return_hidden=True (chunked-CE path).
 
     batch: tokens (B,S[-n_patches]); vlm adds patches (B,n_patches,D);
     audio adds enc_frames (B,enc_seq,D).
+
+    With ``taps=True`` (a trace-time static flag) the scanned layer bodies
+    additionally emit their per-layer outputs as scan ys, and forward
+    returns ``(primary, aux, taps_dict)`` where taps_dict has
+    ``"layer_out"`` — stacked (L, B, S, D) hidden states after each layer
+    (outer super-blocks for hybrid, decoder layers for audio) — and, for
+    the moe family, ``"router_logits"`` — stacked (L, T, E) float32 router
+    logits.  This is the monitor subsystem's intercept hook: everything
+    stays device-resident, no host sync.
     """
     if cfg.family == "audio":
         return _forward_encdec(params, cfg, batch,
-                               return_hidden=return_hidden)
+                               return_hidden=return_hidden, taps=taps)
 
     tokens = batch["tokens"]
     h = _embed_tokens(params, cfg, tokens)
@@ -284,25 +297,35 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
     h = sharding.hint(h, "dp", "model" if cfg.seq_shard else None, None)
     cos, sin = _rope_tables(cfg, jnp.arange(S))
     aux = jnp.zeros((), jnp.float32)
+    tap_tree = None
 
     fam = cfg.family
     if fam in ("dense", "vlm"):
         def body(h, lp):
             h, _ = _dense_block(lp, h, cfg, cos, sin)
-            return h, None
-        h, _ = lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+            return h, (h if taps else None)
+        h, ys = lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+        if taps:
+            tap_tree = {"layer_out": ys}
     elif fam == "moe":
         def body(carry, lp):
             h, aux = carry
+            if taps:
+                h, a, _, logits = _moe_block(lp, h, cfg, cos, sin, taps=True)
+                return (h, aux + a), (h, logits)
             h, a, _ = _moe_block(lp, h, cfg, cos, sin)
             return (h, aux + a), None
-        (h, aux), _ = lax.scan(_maybe_remat(body, cfg), (h, aux),
-                               params["layers"])
+        (h, aux), ys = lax.scan(_maybe_remat(body, cfg), (h, aux),
+                                params["layers"])
+        if taps:
+            tap_tree = {"layer_out": ys[0], "router_logits": ys[1]}
     elif fam == "ssm":
         def body(h, lp):
             h, _ = rwkv_block(lp, h, cfg)
-            return h, None
-        h, _ = lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+            return h, (h if taps else None)
+        h, ys = lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+        if taps:
+            tap_tree = {"layer_out": ys}
     elif fam == "hybrid":
         shared = params["shared_attn"]
 
@@ -314,8 +337,10 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
         def outer(h, lps):
             h, _ = lax.scan(inner, h, lps)
             h, _ = _dense_block(shared, h, cfg, cos, sin)
-            return h, None
-        h, _ = lax.scan(_maybe_remat(outer, cfg), h, params["layers"])
+            return h, (h if taps else None)
+        h, ys = lax.scan(_maybe_remat(outer, cfg), h, params["layers"])
+        if taps:
+            tap_tree = {"layer_out": ys}
     else:
         raise ValueError(fam)
 
@@ -324,9 +349,10 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
         aux = aux + _mtp_loss(params, cfg, h, batch, cos, sin)
     if cfg.family == "vlm":
         h = h[:, batch["patches"].shape[1]:, :]
-    if return_hidden:
-        return h, aux
-    return _lm_head(params, cfg, h), aux
+    primary = h if return_hidden else _lm_head(params, cfg, h)
+    if taps:
+        return primary, aux, tap_tree
+    return primary, aux
 
 
 def _mtp_loss(params, cfg, h, batch, cos, sin):
@@ -346,7 +372,7 @@ def _mtp_loss(params, cfg, h, batch, cos, sin):
     return 0.3 * ce / jnp.maximum(cnt, 1.0)
 
 
-def _forward_encdec(params, cfg, batch, *, return_hidden=False):
+def _forward_encdec(params, cfg, batch, *, return_hidden=False, taps=False):
     """Whisper: encoder over precomputed frame embeddings + causal decoder."""
     frames = batch["enc_frames"]
     B = frames.shape[0]
@@ -366,11 +392,13 @@ def _forward_encdec(params, cfg, batch, *, return_hidden=False):
 
     def dec_body(h, lp):
         h, _ = _dec_block(lp, h, enc_out, cfg, cos_d, sin_d)
-        return h, None
-    hd_, _ = lax.scan(_maybe_remat(dec_body, cfg), hd_, params["layers"])
-    if return_hidden:
-        return hd_, jnp.zeros((), jnp.float32)
-    return _lm_head(params, cfg, hd_), jnp.zeros((), jnp.float32)
+        return h, (h if taps else None)
+    hd_, ys = lax.scan(_maybe_remat(dec_body, cfg), hd_, params["layers"])
+    aux = jnp.zeros((), jnp.float32)
+    primary = hd_ if return_hidden else _lm_head(params, cfg, hd_)
+    if taps:
+        return primary, aux, {"layer_out": ys}
+    return primary, aux
 
 
 def _dec_block(lp, h, enc_out, cfg, cos, sin, cache=None, pos=None,

@@ -34,11 +34,15 @@ def dense_ffn(p, h, cfg, prefix="w"):
     return inner @ p[f"{prefix}_down"]
 
 
-def moe_ffn(p, h, cfg):
+def moe_ffn(p, h, cfg, *, return_logits=False):
     """MoE FFN: returns (out (B,S,D), aux_loss scalar).
 
     p: router (D,E); e_gate/e_up (E,D,F); e_down (E,F,D);
        optional shared-expert weights s_gate/s_up/s_down.
+
+    With ``return_logits=True`` also returns the (T, E) float32 router
+    logits so diagnostics (monitor router probes) can assess routing
+    health without recomputing the forward pass.
     """
     B, S, D = h.shape
     E, K = cfg.n_experts, cfg.top_k
@@ -106,4 +110,6 @@ def moe_ffn(p, h, cfg):
 
     if cfg.n_shared_experts > 0:
         y = y + dense_ffn(p, h, cfg, prefix="s").reshape(T, D)
+    if return_logits:
+        return y.reshape(B, S, D), aux, logits
     return y.reshape(B, S, D), aux

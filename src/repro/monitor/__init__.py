@@ -1,0 +1,132 @@
+"""Continuous training-diagnostics subsystem: probes -> history -> drift.
+
+`TendencyMonitor` is the train loop's one-stop object: each diag step it
+runs the compiled probe program (one dispatch), appends per-probe
+summaries to an append-only `TendencyHistory` (serialized atomically
+alongside checkpoints), and feeds per-probe `DriftDetector`s whose
+OK/WARN/COLLAPSE states surface in the loop's log line.
+
+Determinism: the probe key is fold_in(PRNGKey(seed), step), the history
+round-trips bitwise through the checkpoint, and detectors replay the
+restored history on resume — an interrupted+resumed run reproduces the
+uninterrupted run's history (and drift states) exactly.
+
+See docs/monitoring.md for the probe spec, history schema, thresholds,
+and overhead guidance.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.monitor.drift import (COLLAPSE, OK, STATE_CODES, STATE_NAMES,
+                                 STATES, WARN, DriftConfig, DriftDetector,
+                                 worst_state)
+from repro.monitor.history import FIELDS, HISTORY_SCHEMA, TendencyHistory
+from repro.monitor.probes import (ProbeSpec, TendencyReport, TendencyTrace,
+                                  activation_report, callable_fingerprint,
+                                  default_probes, embedding_tendency,
+                                  encode_batch, model_fingerprint,
+                                  probe_dispatch_stats, router_tendency,
+                                  run_probes)
+
+AUX_NAME = "tendency_history"
+
+
+class TendencyMonitor:
+    """Probe program + history + drift detectors for one training run."""
+
+    def __init__(self, cfg, *, specs=None, drift: DriftConfig | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.specs = tuple(specs) if specs is not None else default_probes(cfg)
+        self.seed = int(seed)
+        self.drift_config = drift or DriftConfig()
+        self.history = TendencyHistory(tuple(s.name for s in self.specs))
+        self.detectors = {s.name: DriftDetector(self.drift_config)
+                          for s in self.specs}
+
+    # ------------------------------------------------------ observe ----
+
+    def observe(self, step: int, params, batch) -> dict:
+        """Run one diag step; returns {probe: {field..., "state"}}.
+
+        One compiled dispatch, one host sync; deterministic in
+        (seed, step) so resumed runs reproduce uninterrupted ones.
+        """
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), int(step))
+        traces = jax.device_get(run_probes(self.cfg, self.specs,
+                                           params, batch, key))
+        summaries = {}
+        for spec in self.specs:
+            tr = traces[spec.name]
+            summaries[spec.name] = {
+                "hopkins": float(tr.hopkins),
+                "block_score": float(tr.block_score),
+                "k_est": float(tr.k_est),
+            }
+        self.history.append(step, summaries)
+        for name, s in summaries.items():
+            s["state"] = self.detectors[name].update(
+                s["block_score"], s["k_est"], s["hopkins"])
+        return summaries
+
+    # ---------------------------------------------------- states ----
+
+    def states(self) -> dict:
+        """Current {probe: state} map."""
+        return {s.name: self.detectors[s.name].state for s in self.specs}
+
+    def worst_state(self) -> str:
+        return worst_state(self.states().values())
+
+    @staticmethod
+    def status_line(summaries: dict) -> str:
+        """Compact per-probe status string for the train log line."""
+        parts = []
+        for name, s in summaries.items():
+            parts.append(f"{name}={s.get('state', OK)}"
+                         f"(score={s['block_score']:.2f},"
+                         f"k={s['k_est']:.0f})")
+        return " ".join(parts)
+
+    # ------------------------------------------------- persistence ----
+
+    def save_arrays(self) -> dict:
+        """aux_arrays payload for `ckpt.save` (history rides the ckpt)."""
+        return {AUX_NAME: self.history.to_arrays()}
+
+    def restore(self, ckpt_dir: str, upto_step: int) -> bool:
+        """Restore history from a checkpoint dir and replay drift state.
+
+        Truncates to rows <= upto_step (the restored weights' step) and
+        replays the rows through fresh detectors, reproducing the live
+        states deterministically.  Returns False (and starts fresh) if
+        no history was saved or the probe set changed.
+        """
+        from repro.checkpoint import ckpt
+        arrays = ckpt.load_aux(ckpt_dir, AUX_NAME)
+        if arrays is None:
+            return False
+        hist = TendencyHistory.from_arrays(arrays)
+        if hist.probes != tuple(s.name for s in self.specs):
+            return False
+        hist.truncate(int(upto_step))
+        self.history = hist
+        self.detectors = {s.name: DriftDetector(self.drift_config)
+                          for s in self.specs}
+        for i in range(len(hist)):
+            for name, s in hist.row(i).items():
+                self.detectors[name].update(s["block_score"], s["k_est"],
+                                            s["hopkins"])
+        return True
+
+
+__all__ = [
+    "AUX_NAME", "COLLAPSE", "DriftConfig", "DriftDetector", "FIELDS",
+    "HISTORY_SCHEMA", "OK", "ProbeSpec", "STATES", "STATE_CODES",
+    "STATE_NAMES", "TendencyHistory", "TendencyMonitor", "TendencyReport",
+    "TendencyTrace", "WARN", "activation_report", "callable_fingerprint",
+    "default_probes", "embedding_tendency", "encode_batch",
+    "model_fingerprint", "probe_dispatch_stats", "router_tendency",
+    "run_probes", "worst_state",
+]

@@ -1,0 +1,121 @@
+"""Append-only, schema-versioned tendency history.
+
+`TendencyHistory` records one row per diag step: the step number plus
+(hopkins, block_score, k_est) per probe.  It serializes to a flat dict
+of numpy arrays (`to_arrays`/`from_arrays`) that `checkpoint/ckpt.py`
+writes atomically inside the checkpoint step directory, so history and
+weights commit (or are garbage-collected) together — an interrupted and
+resumed run reproduces history bitwise identical to an uninterrupted
+run.
+
+Bitwise discipline: npz *file bytes* are not stable (zip timestamps), so
+equality is defined over the deserialized arrays via `digest()` — a
+sha256 over the schema version, probe names, step vector, and each field
+array's raw bytes in a canonical order.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+HISTORY_SCHEMA = 1
+FIELDS = ("hopkins", "block_score", "k_est")
+
+
+class TendencyHistory:
+    """Append-only per-probe tendency record.
+
+    Rows are keyed by strictly-increasing step numbers; values are
+    stored as float32 (the serialized dtype), so an append followed by a
+    round-trip is exact.
+    """
+
+    def __init__(self, probes: tuple[str, ...]):
+        if not probes:
+            raise ValueError("TendencyHistory needs at least one probe")
+        self.probes = tuple(str(p) for p in probes)
+        self.steps: list[int] = []
+        self._data: dict[str, dict[str, list[np.float32]]] = {
+            p: {f: [] for f in FIELDS} for p in self.probes}
+
+    # ------------------------------------------------------ record ----
+
+    def append(self, step: int, summaries: dict) -> None:
+        """Append one diag step: {probe: {field: value}} (append-only)."""
+        step = int(step)
+        if self.steps and step <= self.steps[-1]:
+            raise ValueError(
+                f"append-only: step {step} <= last step {self.steps[-1]}")
+        missing = [p for p in self.probes if p not in summaries]
+        if missing:
+            raise ValueError(f"missing probes in summary: {missing}")
+        self.steps.append(step)
+        for p in self.probes:
+            for f in FIELDS:
+                self._data[p][f].append(np.float32(summaries[p][f]))
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def series(self, probe: str, field: str) -> np.ndarray:
+        """(T,) float32 series of one probe field."""
+        return np.asarray(self._data[probe][field], np.float32)
+
+    def row(self, i: int) -> dict:
+        """{probe: {field: float}} for history row i."""
+        return {p: {f: float(self._data[p][f][i]) for f in FIELDS}
+                for p in self.probes}
+
+    def truncate(self, max_step: int) -> None:
+        """Drop rows with step > max_step (resume-from-checkpoint)."""
+        keep = sum(1 for s in self.steps if s <= max_step)
+        self.steps = self.steps[:keep]
+        for p in self.probes:
+            for f in FIELDS:
+                self._data[p][f] = self._data[p][f][:keep]
+
+    # --------------------------------------------------- serialize ----
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Flat arrays dict for atomic serialization alongside a ckpt."""
+        out: dict[str, np.ndarray] = {
+            "schema": np.asarray([HISTORY_SCHEMA], np.int64),
+            "steps": np.asarray(self.steps, np.int64),
+            "probes": np.asarray(self.probes),
+        }
+        for p in self.probes:
+            for f in FIELDS:
+                out[f"{p}/{f}"] = self.series(p, f)
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "TendencyHistory":
+        schema = int(np.asarray(arrays["schema"]).reshape(-1)[0])
+        if schema > HISTORY_SCHEMA:
+            raise ValueError(f"history schema {schema} is newer than "
+                             f"supported ({HISTORY_SCHEMA})")
+        probes = tuple(str(p) for p in np.asarray(arrays["probes"]))
+        hist = cls(probes)
+        hist.steps = [int(s) for s in np.asarray(arrays["steps"])]
+        for p in probes:
+            for f in FIELDS:
+                col = np.asarray(arrays[f"{p}/{f}"], np.float32)
+                hist._data[p][f] = [np.float32(v) for v in col]
+        return hist
+
+    def digest(self) -> str:
+        """Canonical content hash — the bitwise-equality primitive."""
+        h = hashlib.sha256()
+        h.update(f"schema={HISTORY_SCHEMA}".encode())
+        h.update(("probes=" + ",".join(self.probes)).encode())
+        h.update(np.asarray(self.steps, np.int64).tobytes())
+        for p in self.probes:
+            for f in FIELDS:
+                h.update(self.series(p, f).tobytes())
+        return h.hexdigest()
+
+    def nbytes_per_step(self) -> float:
+        """Serialized array bytes per recorded step (growth rate)."""
+        per_row = 8 + 4 * len(self.probes) * len(FIELDS)
+        return float(per_row)

@@ -1,0 +1,312 @@
+"""Declarative tendency probes over a training step.
+
+A `ProbeSpec` names one tensor stream inside the model — the embedding
+table, a layer's activations (captured from `models/model.py`'s scanned
+forward pass via the ``taps=True`` aux-output hook), MoE router logits,
+or a gradient leaf — and how to summarize it (maximin sample size,
+optional rstar thumbnail).  `build_probe_program` compiles the whole
+probe tree into ONE jitted program per diag step: a single dispatch runs
+the tapped forward pass (and one backward pass iff any grad probe is
+present) and emits a dict of pytree-registered `TendencyTrace`s, one per
+probe, with no host sync inside jit.
+
+Cost discipline: every probe is O(s²) in its `sample` size regardless of
+batch x seq — VAT runs on a maximin sample and Hopkins on a bounded
+uniform subsample (`hopkins_cap`, default 4*s), never the full (n, d)
+activation matrix.
+
+The legacy `core/diagnostics.py` entry points (`activation_report`,
+`embedding_tendency`, `router_tendency`, `TendencyReport`) now live here
+and are re-exported there for back-compat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hopkins import hopkins
+from repro.core.svat import maximin_sample
+from repro.core.vat import block_structure_score, vat_from_dist
+from repro.kernels import ops as kops
+
+# ------------------------------------------------------------ census ----
+
+# Trace-time census (house pattern, cf. serve._TRACE_CENSUS): the
+# counters move only when jax *traces* — a warm diag step moves neither.
+# "programs" counts compiled probe programs, "traces" counts trace
+# events; the monitor test pins one diag step == exactly one program.
+_DIAG_CENSUS = {"programs": 0, "traces": 0}
+
+
+def probe_dispatch_stats() -> dict:
+    """Snapshot of the probe-program census: {"programs", "traces"}."""
+    return dict(_DIAG_CENSUS)
+
+
+# ------------------------------------------------------------- specs ----
+
+_KINDS = ("embedding", "layer", "router", "grad")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """One declarative probe: which tensor stream, how to summarize it.
+
+    kind:
+      "embedding" — the (V, D) token embedding table.
+      "layer"     — per-layer activations from the tapped forward pass;
+                    `layer` indexes the stacked (L, B, S, D) tap (-1 =
+                    final layer).
+      "router"    — MoE router logits (L, T, E) from the tapped forward
+                    pass; `layer` indexes as above.  MoE configs only.
+      "grad"      — a gradient leaf of the training loss; `target` is a
+                    "/"-joined path into the params tree (e.g. "embed",
+                    "layers/w_up").
+
+    sample:    maximin sample size s; the probe costs O(s²).
+    thumbnail: side of the optional downsampled rstar image carried in
+               the trace (0 = no thumbnail; scalars only).
+    """
+    name: str
+    kind: str
+    layer: int = -1
+    target: str = "embed"
+    sample: int = 128
+    thumbnail: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown probe kind {self.kind!r}; "
+                             f"expected one of {_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TendencyTrace:
+    """Per-probe tendency summary emitted by the probe program.
+
+    A registered pytree: (hopkins, block_score, k_est, thumbnail) are
+    children (device arrays), `spec` is static aux data — so a traces
+    dict flows through jit / device_get / tree_map untouched.
+    """
+    hopkins: jax.Array       # scalar f32 in [0, 1]
+    block_score: jax.Array   # scalar f32 in [0, 1]
+    k_est: jax.Array         # scalar, estimated number of diagonal blocks
+    thumbnail: jax.Array | None  # (t, t) f32 downsampled rstar, or None
+    spec: ProbeSpec
+
+
+jax.tree_util.register_pytree_node(
+    TendencyTrace,
+    lambda t: ((t.hopkins, t.block_score, t.k_est, t.thumbnail), t.spec),
+    lambda spec, kids: TendencyTrace(*kids, spec=spec),
+)
+
+
+def default_probes(cfg, *, sample: int = 128,
+                   thumbnail: int = 0) -> tuple[ProbeSpec, ...]:
+    """Default probe tree for a model config.
+
+    Embedding table + final-layer activations + embedding gradient, plus
+    router logits for MoE families.  The embedding probe comes first —
+    the train loop's legacy vat_block_score/vat_k_est/hopkins metric
+    keys are fed from it.
+    """
+    specs = [
+        ProbeSpec("embed_table", "embedding", sample=sample,
+                  thumbnail=thumbnail),
+        ProbeSpec("acts_final", "layer", layer=-1, sample=sample,
+                  thumbnail=thumbnail),
+    ]
+    if cfg.family == "moe":
+        specs.append(ProbeSpec("router", "router", layer=-1, sample=sample,
+                               thumbnail=thumbnail))
+    specs.append(ProbeSpec("grad_embed", "grad", target="embed",
+                           sample=sample, thumbnail=thumbnail))
+    return tuple(specs)
+
+
+# ------------------------------------------------------ trace innards ----
+
+
+def _trace_parts(acts, key, *, sample, thumbnail, hopkins_cap=0):
+    """Shared tendency math: (hopkins, block_score, k_est, rstar, thumb).
+
+    VAT runs on a maximin sample of s points; Hopkins runs on a bounded
+    *uniform* subsample (maximin would bias it toward 0.5) of at most
+    `hopkins_cap` points (default 4*s) so the whole trace stays O(s²)
+    regardless of the activation matrix height.
+    """
+    acts = acts.reshape(-1, acts.shape[-1]).astype(jnp.float32)
+    n = acts.shape[0]
+    s = min(sample, n)
+    k_s, k_h, k_u = jax.random.split(key, 3)
+    idx = maximin_sample(acts, s, k_s)
+    sub = acts[idx]
+    R = kops.pairwise_dist(sub)
+    res = vat_from_dist(R)
+    score, k_est = block_structure_score(res.rstar)
+    cap = hopkins_cap if hopkins_cap > 0 else 4 * s
+    if n > cap:
+        hx = acts[jax.random.choice(k_u, n, (cap,), replace=False)]
+    else:
+        hx = acts
+    h = hopkins(hx, k_h)
+    thumb = None
+    if thumbnail > 0:
+        t = min(thumbnail, s)
+        ti = jnp.round(jnp.linspace(0, s - 1, t)).astype(jnp.int32)
+        thumb = res.rstar[ti][:, ti]
+    return h, score, k_est, res.rstar, thumb
+
+
+class TendencyReport(NamedTuple):
+    hopkins: jax.Array        # scalar in [0, 1]
+    block_score: jax.Array    # diagonal-contrast score in [0, 1]
+    k_est: jax.Array          # estimated number of diagonal blocks
+    rstar: jax.Array          # (s, s) VAT image of the sample
+
+
+@functools.partial(jax.jit, static_argnames=("sample", "hopkins_cap"))
+def activation_report(acts: jax.Array, key: jax.Array, *,
+                      sample: int = 128,
+                      hopkins_cap: int = 0) -> TendencyReport:
+    """Cluster-tendency report for a (n, d) activation matrix.
+
+    Subsamples to `sample` points by maximin so the VAT cost is O(s^2),
+    and bounds the Hopkins input to `hopkins_cap` (default 4*sample)
+    uniformly-sampled rows — the whole report is O(s²), independent of
+    batch size.
+    """
+    h, score, k_est, rstar, _ = _trace_parts(
+        acts, key, sample=sample, thumbnail=0, hopkins_cap=hopkins_cap)
+    return TendencyReport(hopkins=h, block_score=score, k_est=k_est,
+                          rstar=rstar)
+
+
+def embedding_tendency(embed_table: jax.Array, key: jax.Array,
+                       sample: int = 128) -> TendencyReport:
+    """Tendency of a (vocab, d) embedding table (collapse detector)."""
+    return activation_report(embed_table, key, sample=sample)
+
+
+def router_tendency(router_logits: jax.Array, key: jax.Array,
+                    sample: int = 128) -> TendencyReport:
+    """Tendency of (tokens, n_experts) router logits (specialization check).
+
+    k_est ~ 1 => router collapse; k_est >~ top_k => healthy specialization.
+    """
+    return activation_report(router_logits, key, sample=sample)
+
+
+# ----------------------------------------------------- probe program ----
+
+
+def _leaf(tree, path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def _select(spec: ProbeSpec, params, taps, grads):
+    if spec.kind == "embedding":
+        return params["embed"]
+    if spec.kind == "layer":
+        return taps["layer_out"][spec.layer]
+    if spec.kind == "router":
+        if "router_logits" not in taps:
+            raise ValueError(f"probe {spec.name!r}: router probes need a "
+                             "moe-family config")
+        return taps["router_logits"][spec.layer]
+    if spec.kind == "grad":
+        return _leaf(grads, spec.target)
+    raise ValueError(spec.kind)
+
+
+@functools.lru_cache(maxsize=64)
+def _probe_program(cfg, specs: tuple[ProbeSpec, ...]):
+    """Compile the probe tree into one jitted program.
+
+    lru-cached on (cfg, specs) so repeated monitors (across train calls,
+    tests, benches) reuse the compiled program; the census distinguishes
+    cache hits (no movement) from rebuilds.
+    """
+    from repro.models import model as M
+    from repro.train import steps as S
+
+    need_taps = any(s.kind in ("layer", "router") for s in specs)
+    need_grads = any(s.kind == "grad" for s in specs)
+
+    def diag(params, batch, key):
+        _DIAG_CENSUS["traces"] += 1
+        taps = {}
+        if need_taps:
+            _, _, taps = M.forward(params, cfg, batch, taps=True)
+        grads = None
+        if need_grads:
+            if "labels" not in batch:
+                raise ValueError("grad probes need a batch with 'labels'")
+            grads = jax.grad(lambda p: S.loss_fn(p, cfg, batch)[0])(params)
+        out = {}
+        for i, spec in enumerate(specs):
+            arr = _select(spec, params, taps, grads)
+            h, score, k_est, _, thumb = _trace_parts(
+                arr, jax.random.fold_in(key, i),
+                sample=spec.sample, thumbnail=spec.thumbnail)
+            out[spec.name] = TendencyTrace(hopkins=h, block_score=score,
+                                           k_est=k_est, thumbnail=thumb,
+                                           spec=spec)
+        return out
+
+    _DIAG_CENSUS["programs"] += 1
+    return jax.jit(diag)
+
+
+def run_probes(cfg, specs, params, batch, key):
+    """Run the probe tree: one dispatch -> {name: TendencyTrace}."""
+    return _probe_program(cfg, tuple(specs))(params, batch, key)
+
+
+# ------------------------------------------- embeddings front-end ----
+
+
+def encode_batch(params, cfg, batch) -> jax.Array:
+    """Final hidden states of a forward pass, flattened to (B*S, d_model).
+
+    The DeepVAT front-end: `FastVAT.fit_embeddings` runs the rung ladder
+    on these activations instead of raw inputs.
+    """
+    from repro.models import model as M
+    b = {k: jnp.asarray(v) for k, v in batch.items()}
+    h, _ = M.forward(params, cfg, b, return_hidden=True)
+    return h.reshape(-1, h.shape[-1]).astype(jnp.float32)
+
+
+def model_fingerprint(cfg, params) -> str:
+    """Stable short fingerprint of (config, weights) for ResultMeta.
+
+    Hashes the architecture identity plus the first embedding row, so
+    two checkpoints of the same arch fingerprint differently but a
+    re-created identical model fingerprints the same.
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    n_params = sum(int(np.prod(x.shape)) for x in leaves)
+    head = np.asarray(jax.device_get(
+        params["embed"][0, : min(8, params["embed"].shape[-1])]),
+        np.float32).tobytes()
+    ident = f"{cfg.name}:{cfg.family}:{cfg.n_layers}:{cfg.d_model}:{n_params}"
+    return f"{cfg.name}@{hashlib.sha1(ident.encode() + head).hexdigest()[:12]}"
+
+
+def callable_fingerprint(fn) -> str:
+    """Best-effort short fingerprint of an arbitrary encoder callable."""
+    code = getattr(fn, "__code__", None)
+    payload = code.co_code if code is not None else repr(fn).encode()
+    name = getattr(fn, "__qualname__", type(fn).__name__)
+    return f"{name}@{hashlib.sha1(payload).hexdigest()[:12]}"

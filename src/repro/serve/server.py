@@ -113,6 +113,12 @@ class ServeConfig:
         compatibility (the approx rung has no batched fitter yet).
       seed: the single seed baked into every program's ResultMeta —
         served results match solo fits of the same seed.
+      drift_window: opt-in serving-side drift detection (0 = off, the
+        default — the warm path stays byte-identical).  When > 0, every
+        served result's (block_score, k_est) summary feeds a
+        ``repro.monitor.drift.DriftDetector`` whose StreamingVAT window
+        holds this many summaries; the current OK/WARN/COLLAPSE state
+        is surfaced on ``stats().drift``.
     """
     window_s: float = 0.002
     max_batch: int = 8
@@ -123,6 +129,7 @@ class ServeConfig:
     turbo: bool | None = None
     knn_k: int = 15
     seed: int = 0
+    drift_window: int = 0
 
 
 def resolve_key(n: int, d: int, *, method: str = "auto",
@@ -245,7 +252,11 @@ def _unpack(key: ProgramKey, res: TendencyResult, lane: int,
 
 @dataclasses.dataclass(frozen=True)
 class ServeStats:
-    """Point-in-time server counters (scheduler + program cache)."""
+    """Point-in-time server counters (scheduler + program cache).
+
+    ``drift`` is the serving-side tendency drift state ("OK" / "WARN" /
+    "COLLAPSE") when ``ServeConfig.drift_window`` is enabled, else None.
+    """
     cache: CacheStats
     submitted: int
     dispatched_batches: int
@@ -253,6 +264,7 @@ class ServeStats:
     timeouts: int
     rejected: int
     pending: int
+    drift: str | None = None
 
     @property
     def coalesce_rate(self) -> float:
@@ -275,6 +287,11 @@ class TendencyServer:
                  clock=time.monotonic):
         self.config = config
         self._clock = clock
+        self._drift = None
+        if config.drift_window > 0:
+            from repro.monitor.drift import DriftConfig, DriftDetector
+            self._drift = DriftDetector(
+                DriftConfig(window=config.drift_window))
         self._cache = ProgramCache(capacity=config.cache_capacity)
         self._core = CoalescerCore(window=config.window_s,
                                    max_batch=config.max_batch,
@@ -378,7 +395,9 @@ class TendencyServer:
                               dispatched_requests=self._core.dispatched_requests,
                               timeouts=self._core.timeouts,
                               rejected=self._core.rejected,
-                              pending=self._core.pending)
+                              pending=self._core.pending,
+                              drift=(None if self._drift is None
+                                     else self._drift.state))
 
     # --------------------------------------------------------- lifecycle --
 
@@ -449,8 +468,15 @@ class TendencyServer:
                                 key.n_bucket, key.b_bucket)
             res = jax.block_until_ready(program(jnp.asarray(packed)))
             for lane, req in enumerate(batch.requests):
-                req.future.set_result(
-                    _unpack(key, res, lane, req.n, self.config.seed))
+                lane_res = _unpack(key, res, lane, req.n, self.config.seed)
+                if self._drift is not None:
+                    # drift only runs on the dispatcher thread; stats()
+                    # reads the state attribute (GIL-atomic) elsewhere
+                    from repro.core.vat import block_structure_score
+                    score, k = block_structure_score(
+                        jnp.asarray(lane_res.rstar))
+                    self._drift.update(float(score), float(k))
+                req.future.set_result(lane_res)
         except Exception as exc:  # noqa: BLE001 — fail futures, not thread
             for req in batch.requests:
                 if not req.future.done():

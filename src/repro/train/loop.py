@@ -13,9 +13,13 @@ Survivability posture (designed for 1000+ nodes, exercised here on CPU):
   here the deadline path is exercised directly).
 * **elastic re-mesh** — checkpoints hold unsharded logical tensors, so a
   restart may come up on a different device count and re-shard.
-* **VAT diagnostics** — every `diag_every` steps the paper's technique
-  runs over the embedding table and (for MoE) router logits; a collapse
-  (block_score -> 0 or k_est -> 1) is reported alongside loss.
+* **tendency monitor** — every `diag_every` steps the `repro.monitor`
+  subsystem runs its compiled probe program (embedding table, per-layer
+  activations, MoE router logits, gradient leaves) in ONE dispatch,
+  appends to a `TendencyHistory` serialized atomically alongside the
+  checkpoint, and reports per-probe OK/WARN/COLLAPSE drift states in
+  the log line.  A collapse (block_score -> 0 and k_est -> 1) is the
+  embedding/router degeneracy signature.
 """
 from __future__ import annotations
 
@@ -26,31 +30,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
-from repro.core.diagnostics import embedding_tendency
 from repro.data.tokens import SyntheticCorpus, make_batch
 from repro.checkpoint import ckpt
+from repro.monitor import STATE_CODES, TendencyMonitor
 from repro.train import steps as S
 
 
 def train(cfg: ModelConfig, tc: TrainConfig, shape: ShapeConfig,
           *, steps: int | None = None, log: Callable[[str], None] = print,
           step_deadline_s: float = 0.0, param_dtype=jnp.float32,
-          interrupt_at: int | None = None):
+          interrupt_at: int | None = None,
+          monitor: TendencyMonitor | None = None):
     """Run (or resume) training; returns (state, history list of metric dicts).
 
     interrupt_at: test hook — raise KeyboardInterrupt after that step to
     simulate a node failure between checkpoint and completion.
+    monitor: optional pre-built TendencyMonitor (custom probes/thresholds);
+    defaults to `TendencyMonitor(cfg, seed=tc.seed)`.
     """
     steps = steps or tc.total_steps
     train_step = jax.jit(S.build_train_step(cfg, tc), donate_argnums=(0,))
     corpus = SyntheticCorpus(cfg.vocab, seed=tc.seed)
+    mon = monitor if monitor is not None else TendencyMonitor(cfg, seed=tc.seed)
 
     state = S.init_state(cfg, tc, jax.random.PRNGKey(tc.seed), param_dtype)
     start = 0
     restored, manifest = ckpt.restore(tc.ckpt_dir, state)
     if restored is not None:
         state, start = restored, manifest["step"]
-        log(f"[resume] restored step {start} from {tc.ckpt_dir}")
+        mon.restore(tc.ckpt_dir, start)
+        log(f"[resume] restored step {start} from {tc.ckpt_dir} "
+            f"({len(mon.history)} tendency rows)")
 
     history = []
     skipped = 0
@@ -66,13 +76,20 @@ def train(cfg: ModelConfig, tc: TrainConfig, shape: ShapeConfig,
         state, metrics = train_step(state, batch)
 
         if (step + 1) % tc.diag_every == 0:
-            rep = embedding_tendency(state.params["embed"],
-                                     jax.random.PRNGKey(step))
-            metrics = dict(metrics, vat_block_score=rep.block_score,
-                           vat_k_est=rep.k_est, hopkins=rep.hopkins)
+            summ = mon.observe(step + 1, state.params, batch)
+            emb = summ[mon.specs[0].name]
+            metrics = dict(metrics, vat_block_score=emb["block_score"],
+                           vat_k_est=emb["k_est"], hopkins=emb["hopkins"])
+            for name, s in summ.items():
+                metrics[f"tendency/{name}/block_score"] = s["block_score"]
+                metrics[f"tendency/{name}/k_est"] = s["k_est"]
+                metrics[f"tendency/{name}/hopkins"] = s["hopkins"]
+                metrics[f"tendency/{name}/state"] = STATE_CODES[s["state"]]
+            log(f"[tendency] step {step + 1}: {mon.status_line(summ)}")
         history.append({k: float(v) for k, v in metrics.items()})
         if (step + 1) % tc.ckpt_every == 0 or step == steps - 1:
-            path = ckpt.save(tc.ckpt_dir, step + 1, state)
+            path = ckpt.save(tc.ckpt_dir, step + 1, state,
+                             aux_arrays=mon.save_arrays())
             log(f"[ckpt] step {step + 1} -> {path}")
         if step % 10 == 0:
             log(f"step {step}: loss={history[-1]['loss']:.4f}")

@@ -1,0 +1,245 @@
+"""Tendency-monitor subsystem: bitwise history resume, probe pytree
+round-trip, drift state machine, one-program dispatch census, and the
+embeddings front-end rung."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import FastVAT
+from repro.checkpoint import ckpt
+from repro.configs import smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.data.tokens import make_batch
+from repro.models import model as M
+from repro.monitor import (AUX_NAME, COLLAPSE, OK, WARN, DriftConfig,
+                           DriftDetector, ProbeSpec, TendencyHistory,
+                           TendencyMonitor, TendencyTrace, default_probes,
+                           probe_dispatch_stats, worst_state)
+from repro.train.loop import train
+
+SHAPE = ShapeConfig("tiny", 32, 4, "train")
+
+
+def _tc(tmpdir, **kw):
+    kw.setdefault("lr", 1e-2)
+    kw.setdefault("total_steps", 8)
+    kw.setdefault("ckpt_every", 4)
+    kw.setdefault("diag_every", 2)
+    return TrainConfig(ckpt_dir=str(tmpdir), **kw)
+
+
+def _saved_history(ckpt_dir):
+    arrays = ckpt.load_aux(str(ckpt_dir), AUX_NAME)
+    assert arrays is not None, "checkpoint should carry a tendency sidecar"
+    return TendencyHistory.from_arrays(arrays)
+
+
+# ------------------------------------------------- bitwise resume pin ----
+
+
+def test_history_bitwise_identical_after_interrupt_resume(tmp_path):
+    """The acceptance pin: killed+resumed run serializes the same history
+    (digest over schema + probes + steps + field bytes) as an
+    uninterrupted run."""
+    cfg = smoke_config("gemma-2b")
+    a, b = tmp_path / "a", tmp_path / "b"
+    train(cfg, _tc(a), SHAPE, log=lambda s: None)
+    with pytest.raises(KeyboardInterrupt):
+        train(cfg, _tc(b), SHAPE, log=lambda s: None, interrupt_at=5)
+    train(cfg, _tc(b), SHAPE, log=lambda s: None)
+    ha, hb = _saved_history(a), _saved_history(b)
+    assert ha.steps == [2, 4, 6, 8]
+    assert ha.steps == hb.steps
+    assert ha.probes == hb.probes
+    assert ha.digest() == hb.digest()
+
+
+def test_train_loop_surfaces_per_probe_metrics(tmp_path):
+    cfg = smoke_config("gemma-2b")
+    logs = []
+    _, hist = train(cfg, _tc(tmp_path), SHAPE, log=logs.append)
+    diag = [h for h in hist if "vat_block_score" in h]
+    assert len(diag) == 4                      # steps 2, 4, 6, 8
+    row = diag[-1]
+    for name in ("embed_table", "acts_final", "grad_embed"):
+        for field in ("block_score", "k_est", "hopkins", "state"):
+            assert f"tendency/{name}/{field}" in row
+    # legacy keys are fed from the embedding probe
+    assert row["vat_block_score"] == row["tendency/embed_table/block_score"]
+    assert any("[tendency]" in line for line in logs)
+
+
+# --------------------------------------------------- history schema ----
+
+
+def test_history_append_only_and_roundtrip():
+    h = TendencyHistory(("p", "q"))
+    row = {"p": {"hopkins": 0.7, "block_score": 0.5, "k_est": 3.0},
+           "q": {"hopkins": 0.6, "block_score": 0.4, "k_est": 2.0}}
+    h.append(10, row)
+    with pytest.raises(ValueError):            # non-increasing step
+        h.append(10, row)
+    with pytest.raises(ValueError):            # missing probe
+        h.append(20, {"p": row["p"]})
+    h.append(20, row)
+    back = TendencyHistory.from_arrays(h.to_arrays())
+    assert back.steps == [10, 20]
+    assert back.digest() == h.digest()
+    back.truncate(10)
+    assert back.steps == [10]
+    assert back.digest() != h.digest()
+    bad = h.to_arrays()
+    bad["schema"] = np.asarray([99], np.int64)
+    with pytest.raises(ValueError):
+        TendencyHistory.from_arrays(bad)
+
+
+# ------------------------------------------------ probe pytree shape ----
+
+
+def test_trace_dict_is_a_pytree():
+    spec = ProbeSpec("p", "embedding", sample=16)
+    tr = TendencyTrace(hopkins=jnp.float32(0.8), block_score=jnp.float32(0.5),
+                       k_est=jnp.float32(3.0), thumbnail=jnp.zeros((4, 4)),
+                       spec=spec)
+    traces = {"p": tr}
+    leaves, treedef = jax.tree_util.tree_flatten(traces)
+    assert len(leaves) == 4                    # 3 scalars + thumbnail
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back["p"].spec == spec              # static aux survives
+    assert float(back["p"].block_score) == 0.5
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, traces)
+    assert float(doubled["p"].hopkins) == pytest.approx(1.6)
+
+
+def test_probe_spec_validates_kind():
+    with pytest.raises(ValueError):
+        ProbeSpec("bad", "activations")
+
+
+def test_default_probes_router_only_for_moe():
+    dense = smoke_config("gemma-2b")
+    moe = smoke_config("phi3.5-moe-42b-a6.6b")
+    assert [s.kind for s in default_probes(dense)] == \
+        ["embedding", "layer", "grad"]
+    assert "router" in [s.kind for s in default_probes(moe)]
+    # embedding probe first: it feeds the legacy metric keys
+    assert default_probes(moe)[0].kind == "embedding"
+
+
+# ------------------------------------------------ drift state machine ----
+
+
+def test_drift_collapse_trajectory():
+    """Synthetic embedding collapse: score 0.8 -> 0, k 5 -> 1 must pass
+    through WARN and end in COLLAPSE; that is the acceptance pin."""
+    det = DriftDetector(DriftConfig())
+    states = []
+    for i in range(20):
+        t = i / 19.0
+        states.append(det.update(0.8 * (1 - t) ** 2, 5.0 - 4.0 * t, 0.7))
+    assert states[-1] == COLLAPSE
+    assert WARN in states                      # degradation seen on the way
+    assert states[0] == OK                     # warm-up never alerts
+
+
+def test_drift_healthy_trajectory_stays_ok():
+    rng = np.random.default_rng(0)
+    det = DriftDetector(DriftConfig())
+    states = [det.update(0.75 + 0.03 * rng.standard_normal(), 5.0, 0.8)
+              for _ in range(40)]
+    assert set(states) == {OK}
+
+
+def test_drift_warn_on_relative_drop_without_collapse():
+    det = DriftDetector(DriftConfig())
+    for _ in range(6):
+        det.update(0.8, 5.0, 0.8)
+    state = OK
+    for _ in range(12):
+        state = det.update(0.3, 5.0, 0.8)      # big drop, k stays healthy
+    assert state == WARN                       # not COLLAPSE: k_est held up
+
+
+def test_worst_state_ordering():
+    assert worst_state([OK, OK]) == OK
+    assert worst_state([OK, WARN]) == WARN
+    assert worst_state([WARN, COLLAPSE, OK]) == COLLAPSE
+
+
+# --------------------------------------------- one-program census pin ----
+
+
+def test_one_diag_step_is_one_program():
+    """A diag step compiles exactly one probe program; re-observing with
+    the same (cfg, specs) dispatches warm — no new program, no retrace."""
+    cfg = smoke_config("gemma-2b")
+    # unique sample size => fresh lru_cache entry even across test runs
+    specs = default_probes(cfg, sample=37)
+    mon = TendencyMonitor(cfg, specs=specs, seed=3)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE).items()}
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    before = probe_dispatch_stats()
+    mon.observe(1, params, batch)
+    after_first = probe_dispatch_stats()
+    assert after_first["programs"] - before["programs"] == 1
+    assert after_first["traces"] - before["traces"] == 1
+
+    mon.observe(2, params, batch)
+    after_second = probe_dispatch_stats()
+    assert after_second == after_first         # warm: nothing moved
+    assert len(mon.history) == 2
+
+
+def test_observe_is_deterministic_in_seed_and_step():
+    cfg = smoke_config("gemma-2b")
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE).items()}
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    a = TendencyMonitor(cfg, seed=7).observe(5, params, batch)
+    b = TendencyMonitor(cfg, seed=7).observe(5, params, batch)
+    assert a == b
+    c = TendencyMonitor(cfg, seed=8).observe(5, params, batch)
+    assert a != c
+
+
+# ------------------------------------------- embeddings front-end rung ----
+
+
+def test_fit_embeddings_routes_through_rung_ladder():
+    cfg = smoke_config("gemma-2b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SHAPE)
+    fv = FastVAT()
+    res = fv.fit_embeddings(params, cfg, batch).result
+    n = SHAPE.global_batch * SHAPE.seq_len
+    assert res.meta.method == "embed"
+    assert res.meta.n == n
+    assert res.meta.encoder is not None and res.meta.encoder.startswith(
+        cfg.name + "@")
+    assert res.order.shape == (n,)
+    rep = fv.assess()
+    assert rep.method == "embed"
+    assert np.isfinite(rep.hopkins)
+
+
+def test_fit_with_encoder_callable():
+    rng = np.random.default_rng(0)
+    X = np.vstack([rng.normal(0, 0.3, (60, 6)),
+                   rng.normal(4, 0.3, (60, 6))]).astype(np.float32)
+
+    def encoder(x):
+        return jnp.tanh(jnp.asarray(x) @ jnp.eye(6, 3))
+
+    fv = FastVAT(seed=0)
+    res = fv.fit(X, encoder=encoder).result
+    assert res.meta.method == "embed"
+    assert "encoder@" in res.meta.encoder      # qualname ends in .encoder
+    assert res.order.shape == (120,)
+    assert fv.assess().clustered                # two clear blobs survive
+
+
+def test_embed_method_without_encoder_raises():
+    with pytest.raises(ValueError, match="encoder"):
+        FastVAT(method="embed").fit(np.zeros((10, 3), np.float32))
