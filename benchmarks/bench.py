@@ -38,6 +38,13 @@ benchmarks/README.md):
             multi-client load with the coalesce rate and cache hit
             rate on record.  Rows carry the schema-v5 ``percentiles``
             object.
+  faults  — the robustness tax (ISSUE 9): warm served fits with input
+            admission on vs off (the per-request validation overhead),
+            and a poisoned 4-lane coalesced batch recovered through the
+            batch-split ladder vs the same batch clean (what graceful
+            degradation costs when it actually fires).  Scheduling-
+            heavy timings — CI gates this table at the looser 1.5
+            threshold.
   monitor — the training-diagnostics subsystem (ISSUE 8): jitted
             train-step wall time with the tendency monitor off vs
             observing every N steps vs every step (the amortized
@@ -58,7 +65,8 @@ v5 adds the optional per-row ``percentiles`` object ({p50_us, p99_us})
 for tables measured under load, where best-of-reps would hide the tail.
 Schema v6 adds the optional per-row ``bytes_per_step`` number — the
 serialized growth rate of a continuously-recorded artifact (the tendency
-monitor's history).
+monitor's history).  Schema v7 adds no row fields; it marks snapshots
+that carry the ``faults`` resilience table.
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
@@ -82,7 +90,8 @@ import jax.numpy as jnp
 import numpy as np
 
 TABLES = ("table1", "table2", "table3", "table4", "batched", "ivat",
-          "metrics", "flash", "turbo", "approx", "serve", "monitor")
+          "metrics", "flash", "turbo", "approx", "serve", "monitor",
+          "faults")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
@@ -113,6 +122,9 @@ _SERVE_LOAD_SMOKE = (16, 4)
 # monitor overhead loop: (seq, batch, steps per measured loop, diag_every)
 _MONITOR_SHAPE = (64, 8, 20, 20)
 _MONITOR_SHAPE_SMOKE = (32, 4, 8, 4)
+# faults table: per-request points for the admission/recovery timings
+_FAULTS_SIZES = (90, 512)
+_FAULTS_SIZES_SMOKE = (48,)
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -585,12 +597,93 @@ def bench_monitor(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
+def bench_faults(smoke: bool, reps: int) -> list[dict]:
+    """The robustness tax (ISSUE 9): admission overhead + split recovery.
+
+    Four rows per request size:
+
+      warm_fit_unvalidated — p50 warm served fit, admission checks off
+                             (the PR-8 warm path, the baseline).
+      warm_fit_validated   — the same fit with the O(n·d) admission
+                             pass on (the default); ``derived``
+                             carries the overhead ratio — the pin is
+                             "validation is noise on a warm fit".
+      batch_clean_4lane    — wall time for a 4-lane coalesced batch,
+                             submit-to-all-resolved, nothing armed.
+      batch_split_recovery — the same 4-lane batch with one lane
+                             poisoned via the ``serve.execute`` fault
+                             site: the ladder retries, splits, serves
+                             the three survivors solo, and fails the
+                             poison typed.  ``derived`` carries the
+                             recovery-vs-clean ratio (bounded retry
+                             backoff included — that IS the recovery
+                             latency).
+    """
+    from concurrent.futures import wait
+
+    from repro import faults as F
+    from repro.serve import ServeConfig, TendencyServer
+    warm_reps = max(8, reps * 4)
+    rows = []
+    for n in (_FAULTS_SIZES_SMOKE if smoke else _FAULTS_SIZES):
+        rng = np.random.default_rng(n)
+        tag = f"n{n}"
+        X = rng.normal(size=(n, 8)).astype(np.float32)
+
+        p50s = {}
+        for validate in (False, True):
+            config = ServeConfig(window_s=0.002, max_batch=8,
+                                 validate=validate)
+            with TendencyServer(config) as srv:
+                srv.fit(X)                       # cold compile absorbed
+                lat = []
+                for _ in range(warm_reps):
+                    t0 = time.perf_counter()
+                    srv.fit(X)
+                    lat.append(time.perf_counter() - t0)
+            p50s[validate] = float(np.percentile(lat, 50))
+        rows.append(_row("faults", f"{tag}/warm_fit_unvalidated",
+                         p50s[False]))
+        rows.append(_row("faults", f"{tag}/warm_fit_validated", p50s[True],
+                         validation_overhead=round(
+                             p50s[True] / p50s[False], 3)))
+
+        datasets = [rng.normal(size=(n, 8)).astype(np.float32)
+                    for _ in range(4)]
+        config = ServeConfig(window_s=0.2, max_batch=4)
+        with TendencyServer(config) as srv:
+            srv.warm(n, 8, batch=4)              # the coalesced program
+            srv.warm(n, 8, batch=1)              # the split-lane program
+
+            def batch_once() -> float:
+                t0 = time.perf_counter()
+                futs = [srv.submit(Xi, tag=f"lane{i}")
+                        for i, Xi in enumerate(datasets)]
+                wait(futs, timeout=300)
+                return time.perf_counter() - t0
+
+            t_clean = min(batch_once() for _ in range(reps))
+            F.arm("serve.execute", times=-1,
+                  match=lambda ctx: "lane0" in ctx.get("tags", ()))
+            try:
+                t_recover = min(batch_once() for _ in range(reps))
+            finally:
+                F.disarm_all()
+        rows.append(_row("faults", f"{tag}/batch_clean_4lane", t_clean,
+                         lanes=4))
+        rows.append(_row("faults", f"{tag}/batch_split_recovery", t_recover,
+                         lanes=4, survivors=3,
+                         recovery_vs_clean=round(t_recover / t_clean, 2)))
+    return rows
+
+
 _BENCHES = {"table1": bench_table1, "table2": bench_table2,
             "table3": bench_table3, "table4": bench_table4,
             "batched": bench_batched, "ivat": bench_ivat,
             "metrics": bench_metrics, "flash": bench_flash,
             "turbo": bench_turbo, "approx": bench_approx,
-            "serve": bench_serve, "monitor": bench_monitor}
+            "serve": bench_serve, "monitor": bench_monitor,
+            "faults": bench_faults}
 assert set(_BENCHES) == set(TABLES)
 
 
@@ -603,7 +696,7 @@ def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
         print(f"# bench: {t} ...", file=sys.stderr)
         rows.extend(_BENCHES[t](smoke, reps))
     return {
-        "schema_version": 6,
+        "schema_version": 7,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {
             "platform": platform.platform(),

@@ -12,10 +12,10 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 #: Older snapshot versions this validator still accepts (the committed
 #: BENCH_*.json trajectory must keep validating as the schema grows).
-ACCEPTED_VERSIONS = (2, 3, 4, 5, 6)
+ACCEPTED_VERSIONS = (2, 3, 4, 5, 6, 7)
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
@@ -33,6 +33,9 @@ _ROW_KEYS_V3 = _ROW_KEYS | {"peak_bytes"}
 # serialized growth rate of a continuously-recorded artifact (the
 # tendency monitor's history), so storage-cost regressions land on the
 # perf record like wall time and peak_bytes do.
+# v7 adds NO row fields; it marks snapshots new enough to carry the
+# ``faults`` resilience table (admission overhead, batch-split recovery
+# latency — ISSUE 9), gated in CI at the looser faults=1.5 threshold.
 _PCT_KEYS = {"p50_us", "p99_us"}
 
 

@@ -14,7 +14,7 @@ from __future__ import annotations
 __all__ = [
     "FastVAT", "assess_tendency",
     "TendencyResult", "TendencyReport", "ResultMeta",
-    "METRICS", "select_method",
+    "METRICS", "select_method", "InvalidInput",
 ]
 
 _API_NAMES = frozenset(__all__)

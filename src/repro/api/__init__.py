@@ -24,6 +24,8 @@ from repro.api.registry import (FLASH_SHARD_MIN_N, MEDIUM_N, SMALL_N, Rung,
                                 RungOptions, get_rung, register,
                                 select_method)
 from repro.api.result import (ResultMeta, TendencyReport, TendencyResult)
+from repro.api.validation import (MIN_POINTS, InvalidInput,
+                                  validate_dissimilarity, validate_points)
 
 __all__ = [
     "FastVAT", "assess_tendency",
@@ -31,4 +33,6 @@ __all__ = [
     "METRICS", "COMPUTED_METRICS", "validate_metric",
     "Rung", "RungOptions", "register", "get_rung", "registry",
     "select_method", "METHODS", "SMALL_N", "MEDIUM_N", "FLASH_SHARD_MIN_N",
+    "InvalidInput", "MIN_POINTS", "validate_points",
+    "validate_dissimilarity",
 ]

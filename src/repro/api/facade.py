@@ -66,6 +66,8 @@ from repro import core
 from repro.api import registry
 from repro.api.metrics import as_dissimilarity, validate_metric
 from repro.api.registry import SMALL_N, RungOptions, select_method
+from repro.api.validation import (InvalidInput, validate_dissimilarity,
+                                  validate_points)
 from repro.api.result import (SALT_ASSESS, SALT_HOPKINS, ResultMeta,
                               TendencyReport, TendencyResult)
 from repro.core.bigvat import DEFAULT_BLOCK
@@ -105,12 +107,19 @@ class FastVAT:
                   model (components repaired, repair weight).
     seed:         the single seed every sampling path (device and host
                   side) derives from — see ``ResultMeta``.
+    validate:     admission-check inputs before they reach a kernel
+                  (one O(n·d) pass: finite values, real dtype, n >= 4,
+                  non-degenerate) and fail with the typed
+                  ``InvalidInput`` — the kernels' min/argmin folds are
+                  silent on NaN/Inf and would return garbage orderings
+                  otherwise.  ``False`` skips the pass for trusted hot
+                  loops.
     """
 
     def __init__(self, method: str = "auto", *, metric: str = "euclidean",
                  sample_size: int = 256, block: int = DEFAULT_BLOCK,
                  use_pallas: bool = False, turbo: bool | None = None,
-                 knn_k: int = 15, seed: int = 0):
+                 knn_k: int = 15, seed: int = 0, validate: bool = True):
         methods = registry.methods()
         if method not in methods:
             raise ValueError(f"method must be one of {methods}, "
@@ -124,6 +133,7 @@ class FastVAT:
         self.turbo = turbo
         self.knn_k = knn_k
         self.seed = seed
+        self.validate = validate
         self.method_resolved: str | None = None
         self.result: TendencyResult | None = None
         self._X = None
@@ -195,7 +205,14 @@ class FastVAT:
             return self._fit_embed_front(X, encoder)
         precomputed = self.metric == "precomputed"
         if precomputed:
+            if self.validate:
+                validate_dissimilarity(X)
             X = as_dissimilarity(X)
+        elif self.validate and self.method != "embed":
+            # the embed rung validates its *activations* (see
+            # _fit_embed_front); raw fit(X) without an encoder is the
+            # rung's own "encoder required" error, not an admission case
+            validate_points(X)
         n = int(X.shape[0])
         method = (self.method if self.method != "auto"
                   else select_method(n, precomputed=precomputed))
@@ -240,6 +257,8 @@ class FastVAT:
             fingerprint = str(encoder)
         if acts.ndim > 2:
             acts = acts.reshape(-1, acts.shape[-1])
+        if self.validate:
+            validate_points(acts, name="activations")
         n = int(acts.shape[0])
         meta = dataclasses.replace(self._meta("embed", n, batch=None),
                                    encoder=fingerprint)
@@ -296,8 +315,12 @@ class FastVAT:
         """
         precomputed = self.metric == "precomputed"
         if precomputed:
+            if self.validate:
+                validate_dissimilarity(Xs)
             Xs = as_dissimilarity(Xs, batched=True)
         else:
+            if self.validate:
+                validate_points(Xs, batched=True)
             Xs = jnp.asarray(np.asarray(Xs, np.float32))
             if Xs.ndim != 3:
                 raise ValueError(f"fit_many wants a (b, n, d) stack, got "

@@ -13,10 +13,24 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro import faults
+
+
+class CorruptSidecar(RuntimeError):
+    """An aux sidecar exists but cannot be read (truncated/corrupt zip).
+
+    ``load_aux`` raises this only under ``strict=True``; the default
+    policy is recover-and-warn (return None), because a torn sidecar
+    must never abort a training resume — the weights checkpoint itself
+    is still valid (ISSUE 9 recovery policy, docs/robustness.md).
+    """
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -48,7 +62,12 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: dict | None = None,
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
     for name, arrays in (aux_arrays or {}).items():
-        np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
+        aux_path = os.path.join(tmp, f"{name}.npz")
+        np.savez(aux_path, **arrays)
+        # fault-injection site: chaos tests corrupt/truncate the sidecar
+        # file through the real write path (disarmed: a no-op)
+        faults.fault_point("ckpt.aux_write", path=aux_path,
+                           context={"name": name, "step": step})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, **(extra or {})}, f)
     if os.path.exists(final):
@@ -89,13 +108,21 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None):
     return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves), manifest
 
 
-def load_aux(ckpt_dir: str, name: str,
-             step: int | None = None) -> dict[str, np.ndarray] | None:
+def load_aux(ckpt_dir: str, name: str, step: int | None = None, *,
+             strict: bool = False) -> dict[str, np.ndarray] | None:
     """Load a sidecar ``<name>.npz`` saved via `save(aux_arrays=...)`.
 
     Returns the arrays dict, or None when the checkpoint (or the
     sidecar) doesn't exist — older checkpoints without the sidecar
     restore cleanly.
+
+    An *unreadable* sidecar (truncated file, torn zip directory, a
+    member that fails CRC) is recovered per the ISSUE 9 policy: by
+    default it warns and returns None — the caller resumes as if the
+    sidecar were missing, because the weights checkpoint is still good.
+    Readable members of a partially-torn archive are salvaged and
+    returned (per-row verification downstream decides how much of them
+    to trust).  ``strict=True`` raises :class:`CorruptSidecar` instead.
     """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
@@ -103,8 +130,24 @@ def load_aux(ckpt_dir: str, name: str,
     path = os.path.join(ckpt_dir, f"step_{step:08d}", f"{name}.npz")
     if not os.path.exists(path):
         return None
-    with np.load(path, allow_pickle=False) as data:
-        return {k: data[k] for k in data.files}
+    try:
+        # fault-injection site: chaos tests model read failures (raise)
+        # or corrupt the file in place just before the real read
+        faults.fault_point("ckpt.aux_read", path=path,
+                           context={"name": name, "step": step})
+        with np.load(path, allow_pickle=False) as data:
+            out = {}
+            for k in data.files:
+                out[k] = data[k]      # per-member read may hit a bad CRC
+            return out
+    except Exception as exc:  # noqa: BLE001 — torn zip/CRC/pickle refuse
+        if strict:
+            raise CorruptSidecar(
+                f"sidecar {path} is unreadable: {exc!r}") from exc
+        warnings.warn(f"[ckpt] sidecar {name!r} at step {step} is "
+                      f"unreadable ({exc!r}); resuming without it",
+                      RuntimeWarning, stacklevel=2)
+        return None
 
 
 def _gc(ckpt_dir: str, keep: int) -> None:

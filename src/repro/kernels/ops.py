@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.kernels import ref
 from repro.kernels.ivat_update import MAX_FUSED_N, ivat_from_vat_pallas
 from repro.kernels.knn_graph import (MAX_PALLAS_K, XLA_BLOCK,
@@ -28,6 +29,20 @@ from repro.kernels.prim_update import masked_argmin_pallas
 
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _dispatch_site(op: str, use_pallas: bool) -> None:
+    """The ``kernels.dispatch`` fault-injection site (ISSUE 9).
+
+    Called at the top of every public wrapper — i.e. at *trace* time
+    when the wrapper runs under jit — so an armed fault here models a
+    kernel compile/build failure: fresh traces raise, already-compiled
+    programs are untouched.  Disarmed (production) this is one dict
+    truthiness check; it adds nothing to the jaxpr, so the dispatch
+    census stays byte-identical (pinned by tests/test_resilience.py).
+    """
+    faults.fault_point("kernels.dispatch",
+                       context={"op": op, "use_pallas": use_pallas})
 
 
 def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
@@ -49,6 +64,7 @@ def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
     Returns:
       (n, m) float32 dissimilarity matrix ((n, n) when Y is None).
     """
+    _dispatch_site("pairwise_dist", use_pallas)
     if use_pallas:
         R = pairwise_dist_pallas(X, Y, metric=metric, block=block,
                                  interpret=_interpret())
@@ -76,6 +92,7 @@ def pairwise_dist_batch(X: jax.Array, *, metric: str = "euclidean",
     Returns:
       (b, n, n) float32 stack with exactly-zero diagonals.
     """
+    _dispatch_site("pairwise_dist_batch", use_pallas)
     if use_pallas:
         R = pairwise_dist_pallas_batch(X, metric=metric, block=block,
                                        interpret=_interpret())
@@ -109,6 +126,7 @@ def knn_graph(X: jax.Array, *, k: int, metric: str = "euclidean",
       (dist (n, k) f32 ascending per row, idx (n, k) i32) — idx[i, 0] is
       i's nearest neighbour; a point is never its own neighbour.
     """
+    _dispatch_site("knn_graph", use_pallas)
     if use_pallas and k <= MAX_PALLAS_K:
         return knn_graph_pallas(X, k=k, metric=metric,
                                 block=block if block is not None else 256,
@@ -131,6 +149,7 @@ def knn_graph_batch(X: jax.Array, *, k: int, metric: str = "euclidean",
     Returns:
       (dist (b, n, k) f32, idx (b, n, k) i32).
     """
+    _dispatch_site("knn_graph_batch", use_pallas)
     if use_pallas and k <= MAX_PALLAS_K:
         return knn_graph_pallas_batch(
             X, k=k, metric=metric,
@@ -154,6 +173,7 @@ def masked_argmin(vals: jax.Array, mask: jax.Array, *,
     Returns:
       (f32 scalar min, i32 scalar argmin), first-index tie-breaking.
     """
+    _dispatch_site("masked_argmin", use_pallas)
     if use_pallas:
         return masked_argmin_pallas(vals, mask, block=block,
                                     interpret=_interpret())
@@ -189,6 +209,7 @@ def prim_stream_step(X: jax.Array, aux: jax.Array, q: jax.Array,
       (new_mind, edge, next) with the input's leading shape — see
       ``ref.prim_stream_step_ref``.
     """
+    _dispatch_site("prim_stream_step", use_pallas)
     batched = X.ndim == 3
     if use_pallas:
         step = (prim_stream_step_pallas_batch if batched
@@ -230,6 +251,7 @@ def prim_persist(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
       (order, edges) with the input's leading shape — (n,)/(b, n) i32
       and f32; bitwise-identical across every path for every metric.
     """
+    _dispatch_site("prim_persist", use_pallas)
     if X.ndim == 3:
         return jax.vmap(lambda Xi, ai, ii: ref.prim_persist_ref(
             Xi, ai, ii, metric=metric))(X, aux, i0)
@@ -271,6 +293,7 @@ def prim_frontier_step(X: jax.Array, aux: jax.Array, xq: jax.Array,
       (new_mind (n,) f32, value f32 scalar, idx i32 scalar) — first-index
       tie-breaking, identical across both paths.
     """
+    _dispatch_site("prim_frontier_step", use_pallas)
     if use_pallas:
         selected = jnp.isinf(mind)
         new_mind, value, idx = prim_frontier_step_pallas(
@@ -333,6 +356,7 @@ def ivat_from_vat(rstar: jax.Array, *, use_pallas: bool = False) -> jax.Array:
     Returns:
       (n, n) or (b, n, n) float32 max-min path distance matrix/stack.
     """
+    _dispatch_site("ivat_from_vat", use_pallas)
     n = rstar.shape[-1]
     if use_pallas and n <= MAX_FUSED_N:
         return ivat_from_vat_pallas(rstar, interpret=_interpret())

@@ -1,0 +1,246 @@
+"""Chaos driver: scripted fault schedules against a live TendencyServer.
+
+The command-line twin of tests/test_resilience.py (ISSUE 9): each
+scenario arms a deterministic fault schedule from ``repro.faults``,
+drives the real serving stack on a virtual clock (injected ``clock`` +
+``sleep`` — zero real waits), and asserts the EXACT
+``ServeStats.resilience`` counter trajectory plus bitwise-correct
+survivor results.  Any mismatch prints the expectation diff and exits
+non-zero — CI runs this as the ``chaos`` job.
+
+  PYTHONPATH=src python -m repro.launch.chaos --smoke
+  PYTHONPATH=src python -m repro.launch.chaos --scenarios poison,breaker
+
+Scenarios:
+
+  poison     one poisoned lane of a 4-lane coalesced batch: batchmates
+             bitwise-correct, the poison fails typed, split/retry
+             counters pinned.
+  fallback   a primary whose program build fails is served by the next
+             rung down the fallback chain (error -> coarser result).
+  breaker    repeated primary failures trip the breaker, the cooldown
+             probe re-opens it, a healthy probe closes it.
+  admission  non-finite / degenerate inputs are refused typed at
+             submit, counted, and never reach a batch.
+  disarmed   all faults disarmed: served results bitwise-equal solo
+             fits and every resilience counter is zero.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro import faults
+from repro.api import FastVAT, InvalidInput
+from repro.serve import (BreakerConfig, ExecutionError, ResilienceStats,
+                         RetryPolicy, ServeConfig, TendencyServer)
+
+
+class _VirtualClock:
+    """Monotonic clock the scenarios advance by hand (no real waits)."""
+
+    def __init__(self):
+        self._t = 0.0
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        self._t += dt
+
+
+def _blobs(n: int, d: int = 3, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    return np.concatenate([
+        rng.normal(size=(half, d)),
+        rng.normal(size=(n - half, d)) + 6.0]).astype(np.float32)
+
+
+def _server(clock, **cfg) -> TendencyServer:
+    cfg.setdefault("window_s", 999.0)     # flushes come from max_batch
+    cfg.setdefault("retry", RetryPolicy(max_attempts=2, jitter=0.0))
+    return TendencyServer(ServeConfig(**cfg), clock=clock,
+                          sleep=lambda s: None)
+
+
+def _solo(X: np.ndarray, method: str):
+    return FastVAT(method=method).fit(X).result
+
+
+def _same(a, b) -> bool:
+    for f in ("order", "rstar", "ivat_image"):
+        va, vb = getattr(a, f), getattr(b, f)
+        if (va is None) != (vb is None):
+            return False
+        if va is not None and not np.array_equal(np.asarray(va),
+                                                 np.asarray(vb)):
+            return False
+    return True
+
+
+def _expect(problems: list, what: str, got, want) -> None:
+    if got != want:
+        problems.append(f"{what}: expected {want!r}, got {got!r}")
+
+
+# ---------------------------------------------------------- scenarios ----
+
+def scenario_poison(problems: list) -> None:
+    srv = _server(_VirtualClock(), max_batch=4)
+    try:
+        faults.arm("serve.execute", times=-1,
+                   match=lambda ctx: "poison" in ctx.get("tags", ()))
+        data = {tag: _blobs(48, seed=i)
+                for i, tag in enumerate(("a", "b", "poison", "c"))}
+        futs = {tag: srv.submit(X, method="vat", tag=tag)
+                for tag, X in data.items()}       # 4th submit flushes
+        for tag in ("a", "b", "c"):
+            served = futs[tag].result(timeout=300)
+            if not _same(served, _solo(data[tag], "vat")):
+                problems.append(f"survivor {tag!r} diverged from solo fit")
+        try:
+            futs["poison"].result(timeout=300)
+            problems.append("poison lane produced a result; expected "
+                            "ExecutionError")
+        except ExecutionError as exc:
+            if not isinstance(exc.__cause__, faults.FaultInjected):
+                problems.append(f"poison cause: {exc.__cause__!r}")
+        _expect(problems, "poison counters", srv.stats().resilience,
+                ResilienceStats(splits=1, retries=2, failed=1))
+    finally:
+        srv.close()
+        faults.disarm_all()
+
+
+def scenario_fallback(problems: list) -> None:
+    srv = _server(_VirtualClock(), max_batch=1)
+    try:
+        faults.arm("serve.build", times=-1,
+                   match=lambda ctx: ctx.get("rung") == "ivat")
+        X = _blobs(48)
+        served = srv.submit(X, method="ivat").result(timeout=300)
+        _expect(problems, "fallback rung", served.meta.method, "vat")
+        if not _same(served, _solo(X, "vat")):
+            problems.append("fallback result diverged from solo vat fit")
+        _expect(problems, "fallback counters", srv.stats().resilience,
+                ResilienceStats(fallbacks=1, retries=1, degraded=1))
+    finally:
+        srv.close()
+        faults.disarm_all()
+
+
+def scenario_breaker(problems: list) -> None:
+    clock = _VirtualClock()
+    srv = _server(clock, max_batch=1, retry=RetryPolicy(max_attempts=1),
+                  breaker=BreakerConfig(threshold=2, cooldown_s=10.0))
+    try:
+        faults.arm("serve.build", times=-1,
+                   match=lambda ctx: ctx.get("rung") == "ivat")
+        X = _blobs(48)
+        for _ in range(2):                        # trip: 2 primary fails
+            srv.submit(X, method="ivat").result(timeout=300)
+        _expect(problems, "tripped state",
+                srv.breaker_state(48, 3, method="ivat"), "OPEN")
+        built = faults.stats()["serve.build"]["fired"]
+        srv.submit(X, method="ivat").result(timeout=300)  # pinned
+        _expect(problems, "pinned primary attempts",
+                faults.stats()["serve.build"]["fired"], built)
+        clock.advance(10.0)
+        srv.submit(X, method="ivat").result(timeout=300)  # probe, fails
+        _expect(problems, "re-opened state",
+                srv.breaker_state(48, 3, method="ivat"), "OPEN")
+        faults.disarm("serve.build")              # "deploy the fix"
+        clock.advance(10.0)
+        served = srv.submit(X, method="ivat").result(timeout=300)
+        _expect(problems, "recovered rung", served.meta.method, "ivat")
+        _expect(problems, "recovered state",
+                srv.breaker_state(48, 3, method="ivat"), "CLOSED")
+        _expect(problems, "breaker counters", srv.stats().resilience,
+                ResilienceStats(fallbacks=4, degraded=4, breaker_opens=2,
+                                breaker_probes=2))
+    finally:
+        srv.close()
+        faults.disarm_all()
+
+
+def scenario_admission(problems: list) -> None:
+    srv = _server(_VirtualClock(), max_batch=1)
+    try:
+        bad = _blobs(32)
+        bad[0, 0] = np.nan
+        for X, reason in ((bad, "non_finite"),
+                          (np.ones((16, 3), np.float32), "degenerate")):
+            try:
+                srv.submit(X)
+                problems.append(f"{reason} input was admitted")
+            except InvalidInput as exc:
+                _expect(problems, "admission reason", exc.reason, reason)
+        _expect(problems, "admission counters", srv.stats().resilience,
+                ResilienceStats(invalid_rejects=2))
+    finally:
+        srv.close()
+
+
+def scenario_disarmed(problems: list) -> None:
+    _expect(problems, "armed faults before disarmed run",
+            faults.armed(), {})
+    srv = _server(_VirtualClock(), max_batch=1)
+    try:
+        X = _blobs(48)
+        served = srv.submit(X, method="vat").result(timeout=300)
+        if not _same(served, _solo(X, "vat")):
+            problems.append("disarmed served result diverged from solo fit")
+        _expect(problems, "disarmed counters", srv.stats().resilience,
+                ResilienceStats())
+    finally:
+        srv.close()
+
+
+SCENARIOS = {
+    "poison": scenario_poison,
+    "fallback": scenario_fallback,
+    "breaker": scenario_breaker,
+    "admission": scenario_admission,
+    "disarmed": scenario_disarmed,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="scripted fault schedules against the serving layer")
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS),
+                    help=f"comma-separated subset of {tuple(SCENARIOS)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for CI symmetry; the schedules are "
+                         "already CI-sized")
+    args = ap.parse_args(argv)
+
+    names = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    if unknown := set(names) - set(SCENARIOS):
+        ap.error(f"unknown scenarios {sorted(unknown)}; choose from "
+                 f"{tuple(SCENARIOS)}")
+
+    failed = 0
+    for name in names:
+        problems: list[str] = []
+        SCENARIOS[name](problems)
+        status = "PASS" if not problems else "FAIL"
+        print(f"chaos/{name:<10s} {status}")
+        for p in problems:
+            print(f"    {p}", file=sys.stderr)
+        failed += bool(problems)
+    leftover = faults.armed()
+    if leftover:
+        print(f"chaos: faults left armed after run: {sorted(leftover)}",
+              file=sys.stderr)
+        faults.disarm_all()
+        failed += 1
+    print(f"chaos: {len(names) - failed}/{len(names)} scenarios clean")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

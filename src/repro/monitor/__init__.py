@@ -16,6 +16,8 @@ and overhead guidance.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 from repro.monitor.drift import (COLLAPSE, OK, STATE_CODES, STATE_NAMES,
@@ -102,12 +104,31 @@ class TendencyMonitor:
         replays the rows through fresh detectors, reproducing the live
         states deterministically.  Returns False (and starts fresh) if
         no history was saved or the probe set changed.
+
+        Corruption policy (ISSUE 9, docs/robustness.md): a sidecar that
+        fails strict verification is salvaged via
+        `TendencyHistory.recover` — truncate to the last verifiable row,
+        WARN, and resume; only a structurally unreadable sidecar (or one
+        with zero verifiable rows) falls back to a fresh history.
         """
         from repro.checkpoint import ckpt
         arrays = ckpt.load_aux(ckpt_dir, AUX_NAME)
         if arrays is None:
             return False
-        hist = TendencyHistory.from_arrays(arrays)
+        try:
+            hist = TendencyHistory.from_arrays(arrays)
+        except Exception as exc:  # noqa: BLE001 — recover-and-warn policy
+            recovered = TendencyHistory.recover(arrays)
+            if recovered is None or len(recovered[0]) == 0:
+                warnings.warn(
+                    f"[monitor] history sidecar unrecoverable ({exc!r}); "
+                    "starting fresh", RuntimeWarning, stacklevel=2)
+                return False
+            hist, dropped = recovered
+            warnings.warn(
+                f"[monitor] history sidecar failed verification ({exc!r});"
+                f" recovered {len(hist)} rows, dropped {dropped}",
+                RuntimeWarning, stacklevel=2)
         if hist.probes != tuple(s.name for s in self.specs):
             return False
         hist.truncate(int(upto_step))

@@ -18,8 +18,13 @@ from repro.serve.bucketing import (MIN_BUCKET, bucket_batch, bucket_n,
                                    real_positions, restrict)
 from repro.serve.cache import (CacheStats, ProgramCache, ProgramKey,
                                mesh_fingerprint)
+from repro.api.validation import InvalidInput
 from repro.serve.coalesce import (Backpressure, Batch, CoalescerCore,
-                                  DeadlineExceeded, ServeError, ServeRequest)
+                                  DeadlineExceeded, ExecutionError,
+                                  ServeError, ServeRequest)
+from repro.serve.resilience import (BreakerConfig, CircuitBreaker,
+                                    ResilienceStats, RetryPolicy,
+                                    breaker_family, fallback_chain)
 from repro.serve.server import (PADDED_RUNGS, SERVABLE, ServeConfig,
                                 ServeStats, TendencyServer, resolve_key,
                                 trace_census, reset_trace_census)
@@ -29,7 +34,9 @@ __all__ = [
     "pack_batch", "pad_rows", "real_positions", "restrict",
     "CacheStats", "ProgramCache", "ProgramKey", "mesh_fingerprint",
     "Backpressure", "Batch", "CoalescerCore", "DeadlineExceeded",
-    "ServeError", "ServeRequest",
+    "ExecutionError", "InvalidInput", "ServeError", "ServeRequest",
+    "BreakerConfig", "CircuitBreaker", "ResilienceStats", "RetryPolicy",
+    "breaker_family", "fallback_chain",
     "PADDED_RUNGS", "SERVABLE", "ServeConfig", "ServeStats",
     "TendencyServer", "resolve_key", "trace_census", "reset_trace_census",
 ]

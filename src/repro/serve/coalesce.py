@@ -49,6 +49,12 @@ class DeadlineExceeded(ServeError):
     """The request was still queued when its deadline passed."""
 
 
+class ExecutionError(ServeError):
+    """The request's dispatch failed after the whole degradation ladder
+    (every fallback level, every retry) was exhausted.  ``__cause__``
+    carries the last underlying error."""
+
+
 @dataclasses.dataclass
 class ServeRequest:
     """One queued fit request.

@@ -59,16 +59,22 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.api.metrics import validate_metric
 from repro.api.registry import (RungOptions, get_rung, select_method,
                                 select_method_for_slo)
 from repro.api.result import ResultMeta, TendencyResult
+from repro.api.validation import InvalidInput, validate_points
 from repro.serve.bucketing import (bucket_batch, bucket_n, ensure_bucketable,
                                    pack_batch, real_positions, restrict)
 from repro.serve.cache import (CacheStats, ProgramCache, ProgramKey,
                                mesh_fingerprint)
 from repro.serve.coalesce import (Batch, CoalescerCore, DeadlineExceeded,
-                                  ServeError, ServeRequest)
+                                  ExecutionError, ServeError, ServeRequest)
+from repro.serve.resilience import (BreakerConfig, CircuitBreaker,
+                                    ResilienceCounters, ResilienceStats,
+                                    RetryPolicy, breaker_family,
+                                    fallback_chain)
 
 #: Rungs the server dispatches — exactly the batch-capable registry set.
 SERVABLE = ("vat", "ivat", "flashvat")
@@ -119,6 +125,17 @@ class ServeConfig:
         ``repro.monitor.drift.DriftDetector`` whose StreamingVAT window
         holds this many summaries; the current OK/WARN/COLLAPSE state
         is surfaced on ``stats().drift``.
+      validate: admission-check every submitted X (finite, real dtype,
+        n >= 4, non-degenerate) and refuse poison with the typed
+        :class:`~repro.api.validation.InvalidInput` *before* it can
+        join a coalesced batch (rejects counted on
+        ``stats().resilience.invalid_rejects``).
+      retry: bounded jittered retry schedule applied at each fallback
+        level (see ``repro.serve.resilience``).
+      breaker: circuit-breaker thresholds; after ``breaker.threshold``
+        consecutive primary failures a key family is pinned to its
+        fallback chain until ``breaker.cooldown_s`` elapses on the
+        server clock, then re-probed once.
     """
     window_s: float = 0.002
     max_batch: int = 8
@@ -130,6 +147,9 @@ class ServeConfig:
     knn_k: int = 15
     seed: int = 0
     drift_window: int = 0
+    validate: bool = True
+    retry: RetryPolicy = RetryPolicy()
+    breaker: BreakerConfig = BreakerConfig()
 
 
 def resolve_key(n: int, d: int, *, method: str = "auto",
@@ -197,6 +217,9 @@ def _build_program(key: ProgramKey, seed: int):
     if key.b_bucket < 1:
         raise ValueError(f"program wants a concrete lane count, got "
                          f"b_bucket={key.b_bucket} (call with_batch first)")
+    faults.fault_point("serve.build", context={"key": key,
+                                               "rung": key.rung,
+                                               "use_pallas": key.use_pallas})
     rung = get_rung(key.rung)
     meta = ResultMeta(method=key.rung, metric=key.metric, n=key.n_bucket,
                       batch=key.b_bucket, seed=seed,
@@ -256,6 +279,9 @@ class ServeStats:
 
     ``drift`` is the serving-side tendency drift state ("OK" / "WARN" /
     "COLLAPSE") when ``ServeConfig.drift_window`` is enabled, else None.
+    ``resilience`` carries the degradation-ladder counters (fallbacks,
+    splits, retries, breaker state, admission rejects) — all zero /
+    empty on a healthy server; see ``repro.serve.resilience``.
     """
     cache: CacheStats
     submitted: int
@@ -265,6 +291,7 @@ class ServeStats:
     rejected: int
     pending: int
     drift: str | None = None
+    resilience: ResilienceStats = ResilienceStats()
 
     @property
     def coalesce_rate(self) -> float:
@@ -281,12 +308,16 @@ class TendencyServer:
       config: scheduling + program-shaping knobs.
       clock: monotonic time source — injectable so the deterministic
         rig can drive the same scheduling logic with a virtual clock.
+      sleep: blocking wait used for retry backoff (and armed delay
+        faults) — injectable alongside ``clock`` so chaos tests advance
+        a virtual clock instead of really sleeping.
     """
 
     def __init__(self, config: ServeConfig = ServeConfig(), *,
-                 clock=time.monotonic):
+                 clock=time.monotonic, sleep=time.sleep):
         self.config = config
         self._clock = clock
+        self._sleep = sleep
         self._drift = None
         if config.drift_window > 0:
             from repro.monitor.drift import DriftConfig, DriftDetector
@@ -296,8 +327,11 @@ class TendencyServer:
         self._core = CoalescerCore(window=config.window_s,
                                    max_batch=config.max_batch,
                                    max_pending=config.max_pending)
+        self._counters = ResilienceCounters()
+        self._breakers: dict[str, CircuitBreaker] = {}
         self._cv = threading.Condition()
         self._ready: deque[Batch] = deque()
+        self._inflight: list[ServeRequest] = []
         self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="tendency-serve-dispatch")
@@ -324,10 +358,18 @@ class TendencyServer:
           :class:`~repro.api.result.TendencyResult`.
 
         Raises:
+          InvalidInput: admission refused X (non-finite / bad dtype /
+            degenerate) — the request never reached a batch.
           Backpressure: the bounded queue is full.
           ServeError: the server is closed.
           ValueError: unservable shape/metric/method.
         """
+        if self.config.validate:
+            try:
+                validate_points(X)
+            except InvalidInput:
+                self._counters.bump("invalid_rejects")
+                raise
         X = np.asarray(X, dtype=np.float32)
         if X.ndim != 2:
             raise ValueError(f"submit wants an (n, d) matrix, got shape "
@@ -397,7 +439,21 @@ class TendencyServer:
                               rejected=self._core.rejected,
                               pending=self._core.pending,
                               drift=(None if self._drift is None
-                                     else self._drift.state))
+                                     else self._drift.state),
+                              resilience=self._counters.snapshot(
+                                  self._breakers))
+
+    def breaker_state(self, n: int, d: int, *, metric: str = "euclidean",
+                      method: str = "auto",
+                      slo_ms: float | None = None) -> str:
+        """Breaker state ("CLOSED"/"OPEN"/"HALF_OPEN") for the key
+        family an (n, d) request resolves to — introspection for tests
+        and the chaos CLI."""
+        from repro.serve.resilience import CLOSED
+        key = resolve_key(n, d, method=method, metric=metric,
+                          config=self.config, slo_ms=slo_ms)
+        b = self._breakers.get(breaker_family(key))
+        return CLOSED if b is None else b.state
 
     # --------------------------------------------------------- lifecycle --
 
@@ -430,6 +486,38 @@ class TendencyServer:
                 f"{req.deadline - req.arrival:.3f}s in queue"))
 
     def _run(self) -> None:
+        """Dispatcher entry: run the loop; if it ever dies on an
+        unexpected error, fail every outstanding future with a typed
+        ServeError instead of leaving callers hanging on result()."""
+        try:
+            self._run_loop()
+        except BaseException as exc:  # noqa: BLE001 — last-resort failsafe
+            self._emergency_shutdown(exc)
+
+    def _emergency_shutdown(self, exc: BaseException) -> None:
+        """The dispatcher died: close the server and fail everything
+        queued (core groups, ready batches) so no future hangs."""
+        stranded: list[ServeRequest] = []
+        with self._cv:
+            self._closed = True
+            try:
+                batches, expired = self._core.drain(float("inf"))
+            except Exception:  # noqa: BLE001 — even a broken core drains
+                batches, expired = [], []
+                for reqs in getattr(self._core, "_groups", {}).values():
+                    stranded.extend(reqs)
+            for b in list(self._ready) + list(batches):
+                stranded.extend(b.requests)
+            stranded.extend(expired)
+            stranded.extend(self._inflight)   # the batch that killed us
+            self._ready.clear()
+            self._inflight = []
+        for req in stranded:
+            if not req.future.done():
+                req.future.set_exception(ServeError(
+                    f"dispatcher thread died: {exc!r}"))
+
+    def _run_loop(self) -> None:
         """Dispatcher loop: replay coalescer events, execute batches
         outside the lock, exit after a drained close."""
         while True:
@@ -450,34 +538,126 @@ class TendencyServer:
                     expired = list(expired) + late
                 todo = list(self._ready)
                 self._ready.clear()
+                # Track the pulled batches: if _execute dies on a
+                # BaseException, _emergency_shutdown must still see (and
+                # fail) these requests — they are in no other structure.
+                self._inflight = [r for b in todo for r in b.requests]
                 closed = self._closed
             for req in expired:
                 self._fail_expired(req)
             for batch in todo:
                 self._execute(batch)
+            with self._cv:
+                self._inflight = []
             if closed:
                 return
 
     def _execute(self, batch: Batch) -> None:
-        """Compile-or-fetch the program and resolve every lane's future."""
-        key = batch.key.with_batch(bucket_batch(len(batch.requests)))
+        """Serve one flushed batch through the degradation ladder.
+
+        Order of defenses (see ``repro.serve.resilience``):
+
+          1. dispatch the whole batch down the fallback chain with
+             bounded retries (breaker-gated primary);
+          2. if the *batch* still fails and has >1 lanes, split it and
+             retry every lane solo — one poison request must not take
+             its batchmates down (their solo results are produced by
+             the identical program family, so they stay bitwise-equal
+             to their solo fits);
+          3. a single lane that exhausts the ladder fails its future
+             with the typed :class:`ExecutionError` — never the thread.
+        """
+        requests = [r for r in batch.requests if not r.future.done()]
+        if not requests:
+            return
         try:
-            program = self._cache.get(
-                key, lambda: _build_program(key, self.config.seed))
-            packed = pack_batch([r.X for r in batch.requests],
-                                key.n_bucket, key.b_bucket)
-            res = jax.block_until_ready(program(jnp.asarray(packed)))
-            for lane, req in enumerate(batch.requests):
-                lane_res = _unpack(key, res, lane, req.n, self.config.seed)
-                if self._drift is not None:
-                    # drift only runs on the dispatcher thread; stats()
-                    # reads the state attribute (GIL-atomic) elsewhere
-                    from repro.core.vat import block_structure_score
-                    score, k = block_structure_score(
-                        jnp.asarray(lane_res.rstar))
-                    self._drift.update(float(score), float(k))
-                req.future.set_result(lane_res)
-        except Exception as exc:  # noqa: BLE001 — fail futures, not thread
-            for req in batch.requests:
-                if not req.future.done():
-                    req.future.set_exception(exc)
+            res, used_key = self._dispatch_ladder(batch.key, requests)
+        except Exception as exc:  # noqa: BLE001 — ladder exhausted
+            if len(requests) > 1:
+                self._counters.bump("splits")
+                for req in requests:
+                    self._execute(Batch(key=batch.key, requests=[req],
+                                        created=batch.created))
+                return
+            self._counters.bump("failed")
+            err = ExecutionError(
+                f"request (n={requests[0].n}, rung={batch.key.rung}) "
+                f"failed after exhausting the degradation ladder: {exc!r}")
+            err.__cause__ = exc
+            requests[0].future.set_exception(err)
+            return
+        for lane, req in enumerate(requests):
+            lane_res = _unpack(used_key, res, lane, req.n, self.config.seed)
+            if self._drift is not None:
+                # drift only runs on the dispatcher thread; stats()
+                # reads the state attribute (GIL-atomic) elsewhere
+                from repro.core.vat import block_structure_score
+                score, k = block_structure_score(
+                    jnp.asarray(lane_res.rstar))
+                self._drift.update(float(score), float(k))
+            req.future.set_result(lane_res)
+
+    def _breaker(self, family: str) -> CircuitBreaker:
+        b = self._breakers.get(family)
+        if b is None:
+            b = CircuitBreaker(self.config.breaker)
+            self._breakers[family] = b
+        return b
+
+    def _run_once(self, key: ProgramKey,
+                  requests: list[ServeRequest]) -> TendencyResult:
+        """One program dispatch attempt at a concrete chain level."""
+        faults.fault_point(
+            "serve.execute",
+            context={"key": key, "lanes": len(requests),
+                     "tags": [r.tag for r in requests]},
+            sleep=self._sleep)
+        program = self._cache.get(
+            key, lambda: _build_program(key, self.config.seed))
+        packed = pack_batch([r.X for r in requests],
+                            key.n_bucket, key.b_bucket)
+        return jax.block_until_ready(program(jnp.asarray(packed)))
+
+    def _dispatch_ladder(self, group_key: ProgramKey,
+                         requests: list[ServeRequest]):
+        """Fallback chain + bounded retry + circuit breaker.
+
+        Returns (batched TendencyResult, the concrete key that served
+        it); raises the last underlying error when every level of the
+        chain is exhausted.  Counter semantics (pinned by the chaos
+        suite): ``retries`` += 1 per same-level re-attempt,
+        ``fallbacks`` += 1 per level transition (including the
+        breaker-pinned skip of the primary), ``degraded`` += lanes
+        served by a non-primary level.
+        """
+        b = bucket_batch(len(requests))
+        chain = [k.with_batch(b) for k in fallback_chain(group_key)]
+        breaker = self._breaker(breaker_family(group_key))
+        start = 0
+        if len(chain) > 1 and not breaker.allow_primary(self._clock()):
+            start = 1                      # pinned to the fallback chain
+            self._counters.bump("fallbacks")
+        last_exc: Exception | None = None
+        for level in range(start, len(chain)):
+            key = chain[level]
+            for attempt in range(self.config.retry.max_attempts):
+                if attempt:
+                    self._counters.bump("retries")
+                    self._sleep(self.config.retry.delay_s(
+                        attempt - 1, seed=self.config.seed))
+                try:
+                    res = self._run_once(key, requests)
+                except Exception as exc:  # noqa: BLE001 — degrade, don't die
+                    last_exc = exc
+                    continue
+                if level == 0:
+                    breaker.record_success(self._clock())
+                else:
+                    self._counters.bump("degraded", len(requests))
+                return res, key
+            if level == 0:
+                breaker.record_failure(self._clock())
+            if level + 1 < len(chain):
+                self._counters.bump("fallbacks")
+        assert last_exc is not None
+        raise last_exc

@@ -228,10 +228,12 @@ def test_rung_capability_flags():
 
 #: The documented public surface (docs/api.md) — every name must import.
 PUBLIC_ROOT = ("FastVAT", "assess_tendency", "TendencyResult",
-               "TendencyReport", "ResultMeta", "METRICS", "select_method")
+               "TendencyReport", "ResultMeta", "METRICS", "select_method",
+               "InvalidInput")
 PUBLIC_API = PUBLIC_ROOT + ("Rung", "RungOptions", "register", "get_rung",
                             "registry", "METHODS", "SMALL_N", "MEDIUM_N",
-                            "COMPUTED_METRICS", "validate_metric")
+                            "COMPUTED_METRICS", "validate_metric",
+                            "validate_points", "validate_dissimilarity")
 
 
 def test_api_stability_every_documented_name_imports():

@@ -1,0 +1,177 @@
+"""Unit tests for the deterministic fault-injection registry (ISSUE 9).
+
+Covers the registry contract the chaos suite builds on: site-name
+validation, count scheduling (after/times), match predicates, every
+fault kind (raise / delay / corrupt / truncate over bytes, arrays, flat
+dicts, and files), determinism of the corruption choices, and the
+zero-overhead disarmed fast path.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import repro.faults as faults
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.disarm_all()
+    yield
+    faults.disarm_all()
+
+
+SITE = "serve.execute"
+
+
+class TestRegistry:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown injection site"):
+            faults.arm("serve.exeucte")  # typo'd on purpose
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="kind"):
+            faults.arm(SITE, kind="explode")
+
+    def test_arm_disarm_roundtrip(self):
+        faults.arm(SITE)
+        assert faults.is_armed(SITE)
+        assert SITE in faults.armed()
+        faults.disarm(SITE)
+        assert not faults.is_armed(SITE)
+        assert faults.armed() == {}
+
+    def test_disarm_all(self):
+        faults.arm(SITE)
+        faults.arm("serve.build")
+        faults.disarm_all()
+        assert faults.armed() == {}
+
+    def test_injected_context_manager_disarms(self):
+        with faults.injected(SITE):
+            assert faults.is_armed(SITE)
+            with pytest.raises(faults.FaultInjected):
+                faults.fault_point(SITE)
+        assert not faults.is_armed(SITE)
+
+    def test_disarmed_fast_path_returns_data(self):
+        payload = np.arange(5)
+        out = faults.fault_point(SITE, data=payload)
+        assert out is payload          # identity: untouched, uncopied
+
+    def test_armed_other_site_returns_data(self):
+        faults.arm("serve.build")
+        payload = b"abc"
+        assert faults.fault_point(SITE, data=payload) is payload
+
+
+class TestScheduling:
+    def test_times_limits_firings(self):
+        faults.arm(SITE, times=2)
+        for _ in range(2):
+            with pytest.raises(faults.FaultInjected):
+                faults.fault_point(SITE)
+        faults.fault_point(SITE)       # third hit: clean
+        assert faults.stats()[SITE] == {"hits": 3, "fired": 2}
+
+    def test_after_skips_initial_hits(self):
+        faults.arm(SITE, after=2, times=1)
+        faults.fault_point(SITE)
+        faults.fault_point(SITE)
+        with pytest.raises(faults.FaultInjected):
+            faults.fault_point(SITE)
+        faults.fault_point(SITE)
+        assert faults.stats()[SITE] == {"hits": 4, "fired": 1}
+
+    def test_times_forever(self):
+        faults.arm(SITE, times=-1)
+        for _ in range(5):
+            with pytest.raises(faults.FaultInjected):
+                faults.fault_point(SITE)
+
+    def test_match_gates_hit_counting(self):
+        faults.arm(SITE, times=1,
+                   match=lambda ctx: "poison" in ctx.get("tags", []))
+        faults.fault_point(SITE, context={"tags": ["clean"]})
+        with pytest.raises(faults.FaultInjected):
+            faults.fault_point(SITE, context={"tags": ["clean", "poison"]})
+        # the non-matching visit did not consume the firing budget
+        assert faults.stats()[SITE] == {"hits": 1, "fired": 1}
+
+
+class TestKinds:
+    def test_raise_default_exception_carries_site(self):
+        faults.arm(SITE)
+        with pytest.raises(faults.FaultInjected) as ei:
+            faults.fault_point(SITE)
+        assert ei.value.site == SITE
+
+    def test_raise_custom_exception_and_message(self):
+        faults.arm(SITE, exc=OSError, message="disk on fire")
+        with pytest.raises(OSError, match="disk on fire"):
+            faults.fault_point(SITE)
+
+    def test_delay_uses_injected_sleep(self):
+        slept = []
+        faults.arm(SITE, kind="delay", delay_s=1.5)
+        faults.fault_point(SITE, sleep=slept.append)
+        assert slept == [1.5]
+
+    def test_corrupt_bytes_deterministic(self):
+        payload = bytes(range(64))
+        faults.arm(SITE, kind="corrupt", times=-1, seed=7)
+        a = faults.fault_point(SITE, data=payload)
+        b = faults.fault_point(SITE, data=payload)
+        assert a == b != payload
+        assert len(a) == len(payload)
+        diff = [i for i in range(64) if a[i] != payload[i]]
+        assert len(diff) == 1          # exactly one flipped byte
+        assert 0 < diff[0] < 63        # away from both ends
+
+    def test_corrupt_array_copies(self):
+        arr = np.zeros(16, np.float32)
+        faults.arm(SITE, kind="corrupt")
+        out = faults.fault_point(SITE, data=arr)
+        assert not np.array_equal(out, arr)
+        assert np.array_equal(arr, np.zeros(16, np.float32))  # original safe
+
+    def test_corrupt_dict_flips_one_value(self):
+        d = {"a": np.zeros(8, np.float32), "b": np.ones(8, np.float32)}
+        faults.arm(SITE, kind="corrupt", seed=0)
+        out = faults.fault_point(SITE, data=d)
+        changed = [k for k in d if not np.array_equal(out[k], d[k])]
+        assert len(changed) == 1
+
+    def test_truncate_bytes(self):
+        faults.arm(SITE, kind="truncate")
+        out = faults.fault_point(SITE, data=bytes(range(10)))
+        assert out == bytes(range(5))
+
+    def test_truncate_array(self):
+        faults.arm(SITE, kind="truncate")
+        out = faults.fault_point(SITE, data=np.arange(10))
+        assert out.shape == (5,)
+
+    def test_corrupt_file_in_place(self, tmp_path):
+        p = os.path.join(tmp_path, "blob.bin")
+        original = bytes(range(256))
+        with open(p, "wb") as f:
+            f.write(original)
+        faults.arm(SITE, kind="corrupt", seed=3)
+        faults.fault_point(SITE, path=p)
+        with open(p, "rb") as f:
+            raw = f.read()
+        assert len(raw) == 256 and raw != original
+
+    def test_truncate_file_in_place(self, tmp_path):
+        p = os.path.join(tmp_path, "blob.bin")
+        with open(p, "wb") as f:
+            f.write(bytes(256))
+        faults.arm(SITE, kind="truncate")
+        faults.fault_point(SITE, path=p)
+        assert os.path.getsize(p) == 128
+
+    def test_unsupported_payload_type(self):
+        faults.arm(SITE, kind="corrupt")
+        with pytest.raises(TypeError, match="cannot corrupt"):
+            faults.fault_point(SITE, data=[1, 2, 3])

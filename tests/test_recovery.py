@@ -1,0 +1,274 @@
+"""Corrupt-state recovery: history integrity + checkpoint sidecars
+(ISSUE 9 satellite c + the tentpole's recovery rung).
+
+Pins the recovery policy end to end:
+
+* schema-2 history carries per-row uint64 checksums + the digest;
+  `from_arrays` (strict) refuses a flipped byte, `recover` salvages the
+  longest verifiable prefix.
+* `ckpt.load_aux` survives truncated / byte-flipped / missing sidecars:
+  warn + return None by default, typed `CorruptSidecar` under strict.
+* `TendencyMonitor.restore` degrades instead of crashing: truncate to
+  the last verifiable row (WARN) or start fresh — and a resumed train
+  run completes either way.  The bitwise digest-identity pin for the
+  UNcorrupted interrupt+resume path stays in test_monitor.py.
+"""
+import numpy as np
+import pytest
+
+import repro.faults as faults
+from repro.checkpoint import ckpt
+from repro.checkpoint.ckpt import CorruptSidecar
+from repro.configs import smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.monitor import AUX_NAME, TendencyHistory, TendencyMonitor
+from repro.train.loop import train
+
+SHAPE = ShapeConfig("tiny", 32, 4, "train")
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.disarm_all()
+    yield
+    faults.disarm_all()
+
+
+def _history(steps=(2, 4, 6, 8, 10), probes=("p", "q")):
+    h = TendencyHistory(probes)
+    for i, s in enumerate(steps):
+        h.append(s, {p: {"hopkins": 0.5 + 0.01 * i + 0.1 * j,
+                         "block_score": 0.4 + 0.02 * i,
+                         "k_est": float(2 + (i + j) % 3)}
+                     for j, p in enumerate(probes)})
+    return h
+
+
+def _truncated_digest(h, keep_rows):
+    ref = TendencyHistory.from_arrays(h.to_arrays())
+    ref.truncate(h.steps[keep_rows - 1] if keep_rows else -1)
+    return ref.digest()
+
+
+# =================================================== history schema 2 ===
+
+def test_to_arrays_carries_integrity_metadata():
+    h = _history()
+    arrays = h.to_arrays()
+    assert int(arrays["schema"][0]) == 2
+    assert arrays["row_check"].dtype == np.uint64
+    assert arrays["row_check"].shape == (len(h),)
+    assert bytes(arrays["digest"]) == bytes.fromhex(h.digest())
+    back = TendencyHistory.from_arrays(arrays)
+    assert back.digest() == h.digest()
+
+
+def test_schema1_payload_loads_unverified():
+    h = _history()
+    arrays = h.to_arrays()
+    del arrays["row_check"], arrays["digest"]
+    arrays["schema"] = np.asarray([1], np.int64)
+    back = TendencyHistory.from_arrays(arrays)
+    assert back.steps == h.steps
+    assert back.digest() == h.digest()
+
+
+def test_from_arrays_detects_flipped_value():
+    h = _history()
+    arrays = h.to_arrays()
+    arrays["p/hopkins"] = arrays["p/hopkins"].copy()
+    arrays["p/hopkins"][3] += np.float32(0.25)
+    with pytest.raises(ValueError, match="checksum mismatch at step 8"):
+        TendencyHistory.from_arrays(arrays)
+
+
+def test_from_arrays_detects_tampered_steps():
+    h = _history()
+    arrays = h.to_arrays()
+    arrays["steps"] = arrays["steps"].copy()
+    arrays["steps"][1] = 5
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        TendencyHistory.from_arrays(arrays)
+
+
+def test_from_arrays_detects_row_check_length_mismatch():
+    arrays = _history().to_arrays()
+    arrays["row_check"] = arrays["row_check"][:2]
+    with pytest.raises(ValueError, match="row_check length"):
+        TendencyHistory.from_arrays(arrays)
+
+
+def test_recover_truncates_to_verifiable_prefix():
+    h = _history()
+    arrays = h.to_arrays()
+    arrays["q/k_est"] = arrays["q/k_est"].copy()
+    arrays["q/k_est"][2] = np.float32(99.0)       # poison row index 2
+    out = TendencyHistory.recover(arrays)
+    assert out is not None
+    hist, dropped = out
+    assert hist.steps == [2, 4] and dropped == 3
+    assert hist.digest() == _truncated_digest(h, 2)
+
+
+def test_recover_tampered_row_check_truncates():
+    h = _history()
+    arrays = h.to_arrays()
+    arrays["row_check"] = arrays["row_check"].copy()
+    arrays["row_check"][1] ^= np.uint64(1)
+    hist, dropped = TendencyHistory.recover(arrays)
+    assert hist.steps == [2] and dropped == 4
+    assert hist.digest() == _truncated_digest(h, 1)
+
+
+def test_recover_clean_payload_keeps_everything():
+    h = _history()
+    hist, dropped = TendencyHistory.recover(h.to_arrays())
+    assert dropped == 0
+    assert hist.digest() == h.digest()
+
+
+def test_recover_schema1_nonmonotonic_steps():
+    arrays = _history().to_arrays()
+    del arrays["row_check"], arrays["digest"]
+    arrays["schema"] = np.asarray([1], np.int64)
+    arrays["steps"] = np.asarray([2, 4, 3, 8, 10], np.int64)
+    hist, dropped = TendencyHistory.recover(arrays)
+    assert hist.steps == [2, 4] and dropped == 3
+
+
+def test_recover_structurally_unreadable_returns_none():
+    arrays = _history().to_arrays()
+    del arrays["probes"]
+    assert TendencyHistory.recover(arrays) is None
+    assert TendencyHistory.recover({"probes": np.asarray([])}) is None
+
+
+def test_deserialize_fault_site_corrupts_payload():
+    h = _history()
+    arrays = h.to_arrays()
+    keys = sorted(arrays)
+    seed = keys.index("p/block_score")            # target a field column
+    with faults.injected("history.deserialize", kind="corrupt", seed=seed):
+        with pytest.raises(ValueError, match="mismatch"):
+            TendencyHistory.from_arrays(arrays)
+    # the fault mutated from_arrays' private copy, not the caller's dict
+    assert TendencyHistory.from_arrays(arrays).digest() == h.digest()
+
+
+# ================================================== checkpoint sidecar ==
+
+def _save_with_history(tmp_path, step=4, arrays=None):
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    arrays = arrays if arrays is not None else _history().to_arrays()
+    ckpt.save(str(tmp_path), step, tree, aux_arrays={AUX_NAME: arrays})
+    return arrays
+
+
+def test_sidecar_roundtrip_clean(tmp_path):
+    _save_with_history(tmp_path)
+    back = ckpt.load_aux(str(tmp_path), AUX_NAME)
+    assert TendencyHistory.from_arrays(back).steps == [2, 4, 6, 8, 10]
+
+
+def test_missing_sidecar_returns_none(tmp_path):
+    ckpt.save(str(tmp_path), 4, {"w": np.zeros(3, np.float32)})
+    assert ckpt.load_aux(str(tmp_path), AUX_NAME) is None
+
+
+def test_truncated_sidecar_recovered(tmp_path):
+    with faults.injected("ckpt.aux_write", kind="truncate"):
+        _save_with_history(tmp_path)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert ckpt.load_aux(str(tmp_path), AUX_NAME) is None
+    with pytest.raises(CorruptSidecar):
+        ckpt.load_aux(str(tmp_path), AUX_NAME, strict=True)
+
+
+def test_byte_flipped_sidecar_recovered(tmp_path):
+    with faults.injected("ckpt.aux_write", kind="corrupt", seed=11):
+        _save_with_history(tmp_path)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert ckpt.load_aux(str(tmp_path), AUX_NAME) is None
+
+
+def test_read_fault_recovered_and_strict(tmp_path):
+    _save_with_history(tmp_path)
+    with faults.injected("ckpt.aux_read", exc=OSError, times=-1,
+                         message="injected I/O error"):
+        with pytest.warns(RuntimeWarning, match="unreadable"):
+            assert ckpt.load_aux(str(tmp_path), AUX_NAME) is None
+        with pytest.raises(CorruptSidecar, match="unreadable"):
+            ckpt.load_aux(str(tmp_path), AUX_NAME, strict=True)
+    assert ckpt.load_aux(str(tmp_path), AUX_NAME) is not None  # disarmed
+
+
+def test_weights_survive_sidecar_corruption(tmp_path):
+    """The recovery policy's whole point: a torn sidecar never blocks
+    restoring the weights checkpoint it rides with."""
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    with faults.injected("ckpt.aux_write", kind="truncate"):
+        ckpt.save(str(tmp_path), 4, tree,
+                  aux_arrays={AUX_NAME: _history().to_arrays()})
+    restored, manifest = ckpt.restore(
+        str(tmp_path), {"w": np.zeros(6, np.float32)})
+    assert manifest["step"] == 4
+    assert np.array_equal(np.asarray(restored["w"]), tree["w"])
+
+
+# ================================================== monitor recovery ====
+
+def _tc(tmpdir, **kw):
+    kw.setdefault("lr", 1e-2)
+    kw.setdefault("total_steps", 8)
+    kw.setdefault("ckpt_every", 4)
+    kw.setdefault("diag_every", 2)
+    return TrainConfig(ckpt_dir=str(tmpdir), **kw)
+
+
+def test_monitor_restore_recovers_verifiable_prefix(tmp_path):
+    cfg = smoke_config("gemma-2b")
+    mon = TendencyMonitor(cfg)
+    probes = tuple(s.name for s in mon.specs)
+    good = _history(steps=(2, 4, 6), probes=probes)
+    arrays = good.to_arrays()
+    col = f"{probes[0]}/hopkins"
+    arrays[col] = arrays[col].copy()
+    arrays[col][2] += np.float32(1.0)             # poison the last row
+    _save_with_history(tmp_path, step=6, arrays=arrays)
+    with pytest.warns(RuntimeWarning, match="recovered 2 rows, dropped 1"):
+        assert mon.restore(str(tmp_path), upto_step=6)
+    assert mon.history.steps == [2, 4]
+    assert mon.history.digest() == _truncated_digest(good, 2)
+    assert set(mon.states()) == set(probes)       # detectors replayed
+
+
+def test_monitor_restore_unrecoverable_starts_fresh(tmp_path):
+    cfg = smoke_config("gemma-2b")
+    mon = TendencyMonitor(cfg)
+    probes = tuple(s.name for s in mon.specs)
+    arrays = _history(steps=(2, 4), probes=probes).to_arrays()
+    arrays["row_check"] = arrays["row_check"].copy()
+    arrays["row_check"][:] ^= np.uint64(1)        # no verifiable prefix
+    _save_with_history(tmp_path, step=4, arrays=arrays)
+    with pytest.warns(RuntimeWarning, match="unrecoverable"):
+        assert not mon.restore(str(tmp_path), upto_step=4)
+    assert len(mon.history) == 0
+
+
+def test_train_resume_survives_corrupt_sidecar(tmp_path):
+    """Degradation, not collapse: a resumed run whose history sidecar
+    was torn on disk restarts the history fresh and still completes."""
+    cfg = smoke_config("gemma-2b")
+    with pytest.raises(KeyboardInterrupt):
+        train(cfg, _tc(tmp_path), SHAPE, log=lambda s: None, interrupt_at=5)
+    step = ckpt.latest_step(str(tmp_path))
+    assert step == 4
+    sidecar = f"{tmp_path}/step_{step:08d}/{AUX_NAME}.npz"
+    with open(sidecar, "r+b") as f:               # tear it mid-file
+        f.truncate(200)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        _, hist = train(cfg, _tc(tmp_path), SHAPE, log=lambda s: None)
+    saved = ckpt.load_aux(str(tmp_path), AUX_NAME)
+    assert saved is not None
+    resumed = TendencyHistory.from_arrays(saved)
+    assert resumed.steps == [6, 8]                # fresh past the tear

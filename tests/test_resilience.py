@@ -1,0 +1,425 @@
+"""Chaos tests for the graceful-degradation ladder (ISSUE 9 tentpole).
+
+Three layers:
+
+* Unit: RetryPolicy determinism/bounds, the clock-free CircuitBreaker
+  state machine, fallback_chain composition, breaker_family identity.
+* Admission: the typed InvalidInput refusal at FastVAT.fit/fit_many and
+  TendencyServer.submit, across rungs (satellite a).
+* Integration: a real threaded TendencyServer on a VirtualClock with an
+  injectable no-op sleep — armed faults drive the ladder and the tests
+  pin EXACT ResilienceStats counter trajectories (the acceptance
+  scenarios of ISSUE 9), including the poison-lane batch split, the
+  build-fault fallback chain, the breaker trip/cooldown/probe cycle,
+  and the dispatcher-death failsafe (satellite b).
+"""
+import numpy as np
+import pytest
+
+import repro.faults as faults
+from repro.api import FastVAT, InvalidInput
+from repro.serve import (BreakerConfig, CircuitBreaker, ExecutionError,
+                         ResilienceStats, RetryPolicy, ServeConfig,
+                         ServeError, TendencyServer, breaker_family,
+                         fallback_chain)
+from repro.serve.resilience import CLOSED, HALF_OPEN, OPEN
+
+from _serve_clock import VirtualClock, make_key
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.disarm_all()
+    yield
+    faults.disarm_all()
+
+
+def _blobs(n, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    return np.concatenate([
+        rng.normal(size=(half, d)),
+        rng.normal(size=(n - half, d)) + 6.0]).astype(np.float32)
+
+
+def _solo(X, method):
+    return FastVAT(method=method).fit(X).result
+
+
+def _same_result(a, b) -> bool:
+    for f in ("order", "rstar", "ivat_image", "sample_idx",
+              "extension_labels", "group_sizes"):
+        va, vb = getattr(a, f), getattr(b, f)
+        if (va is None) != (vb is None):
+            return False
+        if va is not None and not np.array_equal(np.asarray(va),
+                                                 np.asarray(vb)):
+            return False
+    return True
+
+
+# ====================================================== unit: retry ====
+
+def test_retry_policy_deterministic_and_bounded():
+    pol = RetryPolicy(max_attempts=3, backoff_s=0.01, backoff_cap_s=0.05,
+                      jitter=0.25)
+    a = [pol.delay_s(i, seed=7) for i in range(5)]
+    b = [pol.delay_s(i, seed=7) for i in range(5)]
+    assert a == b                       # deterministic in (seed, attempt)
+    for i, delay in enumerate(a):
+        base = min(0.05, 0.01 * 2 ** i)
+        assert base * 0.75 <= delay <= base * 1.25
+    assert pol.delay_s(0, seed=1) != pol.delay_s(0, seed=2)
+
+
+def test_retry_policy_no_jitter_exact():
+    pol = RetryPolicy(backoff_s=0.01, backoff_cap_s=1.0, jitter=0.0)
+    assert pol.delay_s(0) == 0.01
+    assert pol.delay_s(3) == 0.08
+
+
+def test_retry_policy_rejects_zero_attempts():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+
+
+# ==================================================== unit: breaker ====
+
+def test_breaker_opens_after_threshold():
+    b = CircuitBreaker(BreakerConfig(threshold=3, cooldown_s=10.0))
+    assert b.state == CLOSED
+    for t in range(2):
+        b.record_failure(float(t))
+        assert b.state == CLOSED and b.allow_primary(float(t))
+    b.record_failure(2.0)
+    assert b.state == OPEN and b.opens == 1
+    assert not b.allow_primary(11.9)     # cooldown not elapsed
+    assert b.allow_primary(12.0)         # -> HALF_OPEN probe
+    assert b.state == HALF_OPEN and b.probes == 1
+    assert not b.allow_primary(12.0)     # only ONE probe admitted
+
+
+def test_breaker_halfopen_failure_reopens():
+    b = CircuitBreaker(BreakerConfig(threshold=2, cooldown_s=5.0))
+    b.record_failure(0.0)
+    b.record_failure(0.0)
+    assert b.state == OPEN
+    assert b.allow_primary(5.0)          # probe
+    b.record_failure(5.0)
+    assert b.state == OPEN and b.opens == 2
+    assert b.allow_primary(10.0)         # second probe after new cooldown
+    b.record_success(10.0)
+    assert b.state == CLOSED and b.failures == 0
+
+
+def test_breaker_success_resets_consecutive_count():
+    b = CircuitBreaker(BreakerConfig(threshold=2))
+    b.record_failure(0.0)
+    b.record_success(0.0)
+    b.record_failure(0.0)
+    assert b.state == CLOSED             # never two *consecutive* failures
+
+
+# ============================================== unit: fallback chain ====
+
+def test_fallback_chain_vat_plain_has_no_fallback():
+    key = make_key(rung="vat")
+    assert fallback_chain(key) == (key,)
+
+
+def test_fallback_chain_pallas_drops_to_xla():
+    key = make_key(rung="vat", use_pallas=True)
+    chain = fallback_chain(key)
+    assert [k.use_pallas for k in chain] == [True, False]
+    assert all(k.rung == "vat" for k in chain)
+
+
+def test_fallback_chain_ivat_steps_down_to_vat():
+    key = make_key(rung="ivat")
+    chain = fallback_chain(key)
+    assert [k.rung for k in chain] == ["ivat", "vat"]
+    assert chain[0].n_bucket == chain[1].n_bucket   # same padding proof
+
+
+def test_fallback_chain_ivat_pallas_full_ladder():
+    chain = fallback_chain(make_key(rung="ivat", use_pallas=True))
+    assert [(k.rung, k.use_pallas) for k in chain] == [
+        ("ivat", True), ("ivat", False), ("vat", False)]
+
+
+def test_fallback_chain_flashvat_turbo():
+    chain = fallback_chain(make_key(n=300, rung="flashvat",
+                                    use_pallas=True, turbo=None))
+    assert [(k.use_pallas, k.turbo) for k in chain] == [
+        (True, None), (False, None), (False, False)]
+    # stepwise flashvat is already the bottom: nothing below it
+    assert fallback_chain(make_key(n=300, rung="flashvat",
+                                   turbo=False)) == \
+        (make_key(n=300, rung="flashvat", turbo=False),)
+
+
+def test_breaker_family_is_lane_count_agnostic():
+    key = make_key(rung="ivat")
+    assert breaker_family(key.with_batch(1)) == \
+        breaker_family(key.with_batch(8))
+    assert breaker_family(make_key(rung="vat")) != \
+        breaker_family(make_key(rung="ivat"))
+
+
+# ================================================ admission (sat. a) ====
+
+@pytest.mark.parametrize("method", ["vat", "ivat", "flashvat"])
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_fit_rejects_non_finite_across_rungs(method, bad):
+    X = _blobs(64)
+    X[7, 1] = bad
+    with pytest.raises(InvalidInput) as ei:
+        FastVAT(method=method).fit(X)
+    assert ei.value.reason == "non_finite"
+
+
+def test_fit_validate_false_skips_admission():
+    X = _blobs(32)
+    X[3, 0] = np.nan
+    res = FastVAT(method="vat", validate=False).fit(X)
+    assert res.order().shape == (32,)    # garbage-in tolerated on opt-out
+
+
+def test_fit_rejects_too_few_points_and_degenerate():
+    with pytest.raises(InvalidInput) as ei:
+        FastVAT().fit(np.zeros((3, 2), np.float32))
+    assert ei.value.reason == "too_few_points"
+    with pytest.raises(InvalidInput) as ei:
+        FastVAT().fit(np.ones((16, 2), np.float32))
+    assert ei.value.reason == "degenerate"
+
+
+def test_fit_rejects_bad_dtype():
+    with pytest.raises(InvalidInput) as ei:
+        FastVAT().fit(np.array([["a", "b"]] * 8))
+    assert ei.value.reason == "dtype"
+
+
+def test_fit_precomputed_rejects_non_finite():
+    X = _blobs(16)
+    D = np.linalg.norm(X[:, None] - X[None, :], axis=-1)
+    D[3, 5] = D[5, 3] = np.nan
+    with pytest.raises(InvalidInput) as ei:
+        FastVAT(metric="precomputed").fit(D.astype(np.float32))
+    assert ei.value.reason == "non_finite"
+
+
+def test_fit_many_names_poison_lane():
+    Xs = np.stack([_blobs(32), _blobs(32, seed=1)])
+    Xs[1, 5, 0] = np.inf
+    with pytest.raises(InvalidInput, match=r"lane\(s\) \[1\]"):
+        FastVAT(method="vat").fit_many(Xs)
+
+
+# ========================================== server chaos integration ====
+
+def _chaos_server(**cfg):
+    cfg.setdefault("window_s", 999.0)
+    cfg.setdefault("retry", RetryPolicy(max_attempts=2, jitter=0.0))
+    clock = VirtualClock()
+    srv = TendencyServer(ServeConfig(**cfg), clock=clock,
+                         sleep=lambda s: None)
+    return srv, clock
+
+
+def test_submit_admission_rejects_and_counts():
+    srv, _ = _chaos_server(max_batch=1)
+    try:
+        X = _blobs(32)
+        X[0, 0] = np.nan
+        with pytest.raises(InvalidInput):
+            srv.submit(X)
+        with pytest.raises(InvalidInput):
+            srv.submit(np.ones((16, 3), np.float32))
+        stats = srv.stats().resilience
+        assert stats.invalid_rejects == 2
+        assert stats == ResilienceStats(invalid_rejects=2)  # nothing else
+    finally:
+        srv.close()
+
+
+def test_poison_lane_fails_alone_batchmates_bitwise_correct():
+    """ISSUE 9 acceptance: one poisoned lane of a 4-lane coalesced batch
+    fails typed; the other three get results bitwise-equal to solo fits."""
+    srv, _ = _chaos_server(max_batch=4)
+    try:
+        faults.arm("serve.execute", times=-1,
+                   match=lambda ctx: "poison" in ctx.get("tags", ()))
+        Xs = {tag: _blobs(48, seed=i)
+              for i, tag in enumerate(["a", "b", "poison", "c"])}
+        futs = {tag: srv.submit(X, method="vat", tag=tag)
+                for tag, X in Xs.items()}    # 4th submit flushes the batch
+        for tag in ("a", "b", "c"):
+            served = futs[tag].result(timeout=120)
+            assert _same_result(served, _solo(Xs[tag], "vat"))
+        with pytest.raises(ExecutionError) as ei:
+            futs["poison"].result(timeout=120)
+        assert isinstance(ei.value.__cause__, faults.FaultInjected)
+        assert ei.value.__cause__.site == "serve.execute"
+        stats = srv.stats().resilience
+        # batch level: 2 attempts -> 1 retry, then split; solo poison
+        # lane: 2 attempts -> 1 retry, ladder exhausted -> failed.
+        # vat-without-pallas has no fallback level, so fallbacks == 0.
+        assert stats.splits == 1
+        assert stats.retries == 2
+        assert stats.failed == 1
+        assert stats.fallbacks == 0
+        assert stats.degraded == 0
+        assert stats.breakers == ()
+    finally:
+        srv.close()
+
+
+def test_build_fault_served_via_fallback_chain():
+    """ISSUE 9 acceptance: a primary whose program BUILD fails is served
+    by the next chain level — an error turned into a (coarser) result."""
+    srv, _ = _chaos_server(max_batch=1)
+    try:
+        faults.arm("serve.build", times=-1,
+                   match=lambda ctx: ctx.get("rung") == "ivat")
+        X = _blobs(48)
+        served = srv.submit(X, method="ivat").result(timeout=120)
+        assert served.meta.method == "vat"     # stepped down one rung
+        assert _same_result(served, _solo(X, "vat"))
+        stats = srv.stats().resilience
+        assert stats.fallbacks == 1
+        assert stats.retries == 1              # 2 attempts at the primary
+        assert stats.degraded == 1
+        assert stats.failed == 0 and stats.splits == 0
+    finally:
+        srv.close()
+
+
+def test_breaker_trips_pins_fallback_and_reprobes():
+    """ISSUE 9 acceptance: repeated primary failures open the breaker
+    (fallback pinned, no primary attempts), cooldown admits one probe,
+    and a healthy probe closes it — all on the virtual clock."""
+    srv, clock = _chaos_server(
+        max_batch=1, retry=RetryPolicy(max_attempts=1),
+        breaker=BreakerConfig(threshold=2, cooldown_s=10.0))
+    try:
+        faults.arm("serve.build", times=-1,
+                   match=lambda ctx: ctx.get("rung") == "ivat")
+        X = _blobs(48)
+
+        def ivat_fit():
+            return srv.submit(X, method="ivat").result(timeout=120)
+
+        ivat_fit()                             # failure 1: still CLOSED
+        assert srv.breaker_state(48, 3, method="ivat") == CLOSED
+        ivat_fit()                             # failure 2: trips OPEN
+        assert srv.breaker_state(48, 3, method="ivat") == OPEN
+
+        built_before = faults.stats()["serve.build"]["fired"]
+        served = ivat_fit()                    # pinned: no primary attempt
+        assert served.meta.method == "vat"
+        assert faults.stats()["serve.build"]["fired"] == built_before
+
+        stats = srv.stats().resilience
+        assert stats.breaker_opens == 1
+        assert stats.breaker_probes == 0
+        assert stats.degraded == 3
+        assert stats.fallbacks == 3            # 2 failures + 1 pinned skip
+        assert stats.breakers and stats.breakers[0][1] == OPEN
+        assert stats.open_breakers == 1
+
+        clock.advance(10.0)                    # cooldown elapses
+        ivat_fit()                             # probe fires... and fails
+        stats = srv.stats().resilience
+        assert stats.breaker_probes == 1
+        assert stats.breaker_opens == 2        # HALF_OPEN failure reopens
+        assert srv.breaker_state(48, 3, method="ivat") == OPEN
+
+        faults.disarm("serve.build")           # "deploy the fix"
+        clock.advance(10.0)
+        served = ivat_fit()                    # healthy probe: recovers
+        assert served.meta.method == "ivat"
+        assert _same_result(served, _solo(X, "ivat"))
+        assert srv.breaker_state(48, 3, method="ivat") == CLOSED
+        stats = srv.stats().resilience
+        assert stats.breaker_probes == 2
+        assert stats.breakers == ()            # healthy again
+    finally:
+        srv.close()
+
+
+def test_transient_fault_absorbed_by_retry():
+    srv, _ = _chaos_server(max_batch=1)
+    try:
+        faults.arm("serve.execute", times=1)   # fires once, then clean
+        X = _blobs(48)
+        served = srv.submit(X, method="vat").result(timeout=120)
+        assert _same_result(served, _solo(X, "vat"))
+        stats = srv.stats().resilience
+        assert stats.retries == 1
+        assert stats.failed == 0 and stats.fallbacks == 0
+    finally:
+        srv.close()
+
+
+def test_delay_fault_runs_on_injected_sleep():
+    slept = []
+    clock = VirtualClock()
+    srv = TendencyServer(ServeConfig(window_s=999.0, max_batch=1),
+                         clock=clock, sleep=slept.append)
+    try:
+        faults.arm("serve.execute", kind="delay", delay_s=2.5)
+        X = _blobs(48)
+        srv.submit(X, method="vat").result(timeout=120)
+        assert 2.5 in slept                    # no real wall-clock sleep
+    finally:
+        srv.close()
+
+
+# =========================================== dispatcher death (sat. b) ==
+
+class _Die(BaseException):
+    """Not an Exception: sails past the ladder's handlers, killing the
+    dispatcher thread — the failsafe under test."""
+
+
+def test_dispatcher_death_fails_all_futures_typed():
+    srv, _ = _chaos_server(max_batch=2)
+    try:
+        faults.arm("serve.execute", exc=_Die, times=1)
+        q = srv.submit(_blobs(100), method="vat", tag="queued")  # other key
+        f1 = srv.submit(_blobs(48), method="vat", tag="x")
+        f2 = srv.submit(_blobs(48, seed=1), method="vat", tag="y")
+        # the 48-point pair flushed at max_batch and killed the thread;
+        # the queued 100-point request must fail too — never hang.
+        for fut in (f1, f2, q):
+            with pytest.raises(ServeError, match="dispatcher thread died"):
+                fut.result(timeout=120)
+        with pytest.raises(ServeError, match="closed"):
+            srv.submit(_blobs(48))
+    finally:
+        srv.close()                            # idempotent after death
+
+
+def test_close_dispatches_queued_requests():
+    """close() audit: requests still coalescing (window never elapsed)
+    are drained and served, not dropped."""
+    srv, _ = _chaos_server(max_batch=8)
+    X = _blobs(48)
+    fut = srv.submit(X, method="vat")
+    assert not fut.done()                      # window_s=999: still queued
+    srv.close()
+    assert _same_result(fut.result(timeout=120), _solo(X, "vat"))
+
+
+# ======================================= disarmed-path byte identity ====
+
+def test_disarmed_server_stats_all_zero():
+    srv, _ = _chaos_server(max_batch=1)
+    try:
+        X = _blobs(48)
+        served = srv.submit(X, method="vat").result(timeout=120)
+        assert _same_result(served, _solo(X, "vat"))
+        assert srv.stats().resilience == ResilienceStats()
+    finally:
+        srv.close()
