@@ -52,6 +52,13 @@ benchmarks/README.md):
             compiled probe-program dispatch), and the history's
             serialized growth rate on the schema-v6 ``bytes_per_step``
             field (a ``quality`` row — storage, not wall time).
+  numerics — the numerics shield's price tag (ISSUE 10): Gram-form vs
+            direct-form pairwise tiles on the same points (what the
+            condition-aware dispatch pays when it switches), the host
+            conditioning pre-pass (``numerics.resolve`` — κ statistics
+            + transform) on its own, and the end-to-end facade fit
+            under ``numerics="fast"`` vs the default ``auto`` on
+            ill-conditioned data — the shield tax on record.
   table2/table3 — the paper's Hopkins and clustering-alignment quality
             tables (us_per_call 0 — they record accuracy, not speed).
 
@@ -66,7 +73,8 @@ for tables measured under load, where best-of-reps would hide the tail.
 Schema v6 adds the optional per-row ``bytes_per_step`` number — the
 serialized growth rate of a continuously-recorded artifact (the tendency
 monitor's history).  Schema v7 adds no row fields; it marks snapshots
-that carry the ``faults`` resilience table.
+that carry the ``faults`` resilience table.  Schema v8 likewise adds no
+row fields; it marks snapshots that carry the ``numerics`` shield table.
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench            # full, ~minutes
@@ -91,7 +99,7 @@ import numpy as np
 
 TABLES = ("table1", "table2", "table3", "table4", "batched", "ivat",
           "metrics", "flash", "turbo", "approx", "serve", "monitor",
-          "faults")
+          "faults", "numerics")
 
 # (b, n, d) batched workloads; smoke keeps compile + run under CI budgets
 _BATCH_WORKLOADS = ((8, 256, 8), (16, 512, 8))
@@ -125,6 +133,9 @@ _MONITOR_SHAPE_SMOKE = (32, 4, 8, 4)
 # faults table: per-request points for the admission/recovery timings
 _FAULTS_SIZES = (90, 512)
 _FAULTS_SIZES_SMOKE = (48,)
+# numerics table: points for the gram-vs-direct + pre-pass timings
+_NUMERICS_SIZES = (2_048, 8_192)
+_NUMERICS_SIZES_SMOKE = (512,)
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -677,13 +688,109 @@ def bench_faults(smoke: bool, reps: int) -> list[dict]:
     return rows
 
 
+def bench_numerics(smoke: bool, reps: int) -> list[dict]:
+    """The numerics shield's price tag (ISSUE 10).
+
+    Seven rows per size, all measured on ill-conditioned points (a 1e4
+    common offset — the canonical Gram catastrophe the shield exists
+    for):
+
+      pairwise_gram    — the Gram-decomposition tile (the pre-shield
+                         fast path, what ``fast``/unconditioned ``auto``
+                         runs).
+      pairwise_direct  — the cancellation-free (x−y)² tile the auto
+                         policy switches to past KAPPA_SAFE; ``derived``
+                         carries the cost ratio the dispatch trades for
+                         its certified bound.
+      prepass_resolve  — the host-side conditioning pre-pass on its own
+                         (κ statistics + mean-center/rescale transform),
+                         the fixed per-fit tax every policy but ``fast``
+                         pays; κ and the decision are in ``derived``.
+      kappa            — schema-v4 ``quality`` row (us_per_call 0,
+                         exempt from the wall-time gate) putting the
+                         measured condition estimate and its
+                         post-conditioning value on the perf record.
+      fit_fast         — end-to-end ``FastVAT(numerics="fast")`` warm
+                         fit: the pre-shield baseline.
+      fit_safe         — the always-condition policy: the shield's
+                         worst-case price (``derived.cost_vs_fast``).
+      fit_auto         — the default policy (here: pre-pass +
+                         conditioned direct-form tiles, since the data
+                         is hostile); ``derived.shield_overhead`` is
+                         the headline — certified orderings on hostile
+                         data cost percents, not multiples.
+    """
+    from repro.api import FastVAT
+    from repro.kernels import ops as kops
+    from repro.numerics import resolve
+    rows = []
+    for n in (_NUMERICS_SIZES_SMOKE if smoke else _NUMERICS_SIZES):
+        rng = np.random.default_rng(n)
+        half = n // 2
+        X = np.concatenate([
+            rng.normal(size=(half, 8)),
+            rng.normal(size=(n - half, 8)) + 6.0]).astype(np.float32)
+        X += np.float32(1.0e4)
+        Xj = jnp.asarray(X)
+        tag = f"n{n}"
+
+        t_gram = _time(lambda A: kops.pairwise_dist(A, form="gram"),
+                       Xj, reps=reps)
+        t_dir = _time(lambda A: kops.pairwise_dist(A, form="direct"),
+                      Xj, reps=reps)
+        rows.append(_row("numerics", f"{tag}/pairwise_gram", t_gram,
+                         peak_bytes=_peak_bytes(
+                             lambda A: kops.pairwise_dist(A, form="gram"),
+                             Xj)))
+        rows.append(_row("numerics", f"{tag}/pairwise_direct", t_dir,
+                         peak_bytes=_peak_bytes(
+                             lambda A: kops.pairwise_dist(A, form="direct"),
+                             Xj),
+                         cost_vs_gram=round(t_dir / t_gram, 3)))
+
+        best = float("inf")
+        rep = None
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            _, rep = resolve(X, metric="euclidean")
+            best = min(best, time.perf_counter() - t0)
+        rows.append(_row("numerics", f"{tag}/prepass_resolve", best,
+                         form=rep.form, conditioned=rep.conditioned))
+        from repro.numerics import condition_stats
+        stats = condition_stats(X)
+        quality = _row("numerics", f"{tag}/kappa", 0.0,
+                       kappa=round(stats.kappa, 1),
+                       kappa_centered=round(stats.kappa_centered, 3))
+        quality["quality"] = True
+        rows.append(quality)
+
+        t_fit = {}
+        for mode in ("fast", "safe", "auto"):
+            fv = FastVAT(numerics=mode)
+            fv.fit(X)                            # warm the program cache
+            t_best = float("inf")
+            for _ in range(max(1, reps)):
+                t0 = time.perf_counter()
+                FastVAT(numerics=mode).fit(X)
+                t_best = min(t_best, time.perf_counter() - t0)
+            t_fit[mode] = t_best
+        rows.append(_row("numerics", f"{tag}/fit_fast", t_fit["fast"]))
+        rows.append(_row("numerics", f"{tag}/fit_safe", t_fit["safe"],
+                         cost_vs_fast=round(
+                             t_fit["safe"] / t_fit["fast"], 3)))
+        rows.append(_row("numerics", f"{tag}/fit_auto", t_fit["auto"],
+                         shield_overhead=round(
+                             t_fit["auto"] / t_fit["fast"], 3)))
+    return rows
+
+
 _BENCHES = {"table1": bench_table1, "table2": bench_table2,
             "table3": bench_table3, "table4": bench_table4,
             "batched": bench_batched, "ivat": bench_ivat,
             "metrics": bench_metrics, "flash": bench_flash,
             "turbo": bench_turbo, "approx": bench_approx,
             "serve": bench_serve, "monitor": bench_monitor,
-            "faults": bench_faults}
+            "faults": bench_faults, "numerics": bench_numerics}
 assert set(_BENCHES) == set(TABLES)
 
 
@@ -696,7 +803,7 @@ def run(tables=TABLES, *, smoke: bool = False, reps: int = 3) -> dict:
         print(f"# bench: {t} ...", file=sys.stderr)
         rows.extend(_BENCHES[t](smoke, reps))
     return {
-        "schema_version": 7,
+        "schema_version": 8,
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {
             "platform": platform.platform(),

@@ -12,10 +12,10 @@ from __future__ import annotations
 import json
 import sys
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 #: Older snapshot versions this validator still accepts (the committed
 #: BENCH_*.json trajectory must keep validating as the schema grows).
-ACCEPTED_VERSIONS = (2, 3, 4, 5, 6, 7)
+ACCEPTED_VERSIONS = (2, 3, 4, 5, 6, 7, 8)
 
 _TOP_KEYS = {"schema_version", "created_utc", "host", "config", "rows"}
 _HOST_KEYS = {"platform", "python", "jax", "backend", "cpu_count"}
@@ -36,6 +36,10 @@ _ROW_KEYS_V3 = _ROW_KEYS | {"peak_bytes"}
 # v7 adds NO row fields; it marks snapshots new enough to carry the
 # ``faults`` resilience table (admission overhead, batch-split recovery
 # latency — ISSUE 9), gated in CI at the looser faults=1.5 threshold.
+# v8 likewise adds NO row fields; it marks snapshots that carry the
+# ``numerics`` shield table (gram-vs-direct tile cost, the conditioning
+# pre-pass, fit-level shield overhead — ISSUE 10), gated in CI at the
+# looser numerics=1.5 threshold (host-driven timings).
 _PCT_KEYS = {"p50_us", "p99_us"}
 
 

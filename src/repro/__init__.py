@@ -15,6 +15,7 @@ __all__ = [
     "FastVAT", "assess_tendency",
     "TendencyResult", "TendencyReport", "ResultMeta",
     "METRICS", "select_method", "InvalidInput",
+    "NumericsPolicy", "NumericsReport",
 ]
 
 _API_NAMES = frozenset(__all__)

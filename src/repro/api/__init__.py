@@ -26,6 +26,7 @@ from repro.api.registry import (FLASH_SHARD_MIN_N, MEDIUM_N, SMALL_N, Rung,
 from repro.api.result import (ResultMeta, TendencyReport, TendencyResult)
 from repro.api.validation import (MIN_POINTS, InvalidInput,
                                   validate_dissimilarity, validate_points)
+from repro.numerics import NumericsPolicy, NumericsReport
 
 __all__ = [
     "FastVAT", "assess_tendency",
@@ -35,4 +36,5 @@ __all__ = [
     "select_method", "METHODS", "SMALL_N", "MEDIUM_N", "FLASH_SHARD_MIN_N",
     "InvalidInput", "MIN_POINTS", "validate_points",
     "validate_dissimilarity",
+    "NumericsPolicy", "NumericsReport",
 ]

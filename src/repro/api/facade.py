@@ -71,6 +71,8 @@ from repro.api.validation import (InvalidInput, validate_dissimilarity,
 from repro.api.result import (SALT_ASSESS, SALT_HOPKINS, ResultMeta,
                               TendencyReport, TendencyResult)
 from repro.core.bigvat import DEFAULT_BLOCK
+from repro.numerics import NumericsReport, as_policy
+from repro.numerics import resolve as resolve_numerics
 
 #: Method names at import time ("auto" + built-in rungs). The live list —
 #: including later third-party registrations — is ``registry.methods()``.
@@ -109,17 +111,28 @@ class FastVAT:
                   side) derives from — see ``ResultMeta``.
     validate:     admission-check inputs before they reach a kernel
                   (one O(n·d) pass: finite values, real dtype, n >= 4,
-                  non-degenerate) and fail with the typed
-                  ``InvalidInput`` — the kernels' min/argmin folds are
-                  silent on NaN/Inf and would return garbage orderings
-                  otherwise.  ``False`` skips the pass for trusted hot
-                  loops.
+                  non-degenerate, no zero-norm rows under cosine) and
+                  fail with the typed ``InvalidInput`` — the kernels'
+                  min/argmin folds are silent on NaN/Inf and would
+                  return garbage orderings otherwise.  ``False`` skips
+                  the pass for trusted hot loops.
+    numerics:     the numerics shield's policy — a
+                  ``repro.numerics.NumericsPolicy`` or a mode string
+                  ("fast" | "safe" | "auto", default "auto").  Before
+                  dispatch, ``numerics.resolve`` estimates the Gram
+                  -cancellation condition κ and picks the tile form
+                  (Gram vs direct) plus the conditioning transform;
+                  what actually ran lands on
+                  ``result.meta.numerics`` (a ``NumericsReport``).
+                  Precomputed and np.memmap input bypass the pre-pass
+                  (no point coordinates / out-of-core respectively).
     """
 
     def __init__(self, method: str = "auto", *, metric: str = "euclidean",
                  sample_size: int = 256, block: int = DEFAULT_BLOCK,
                  use_pallas: bool = False, turbo: bool | None = None,
-                 knn_k: int = 15, seed: int = 0, validate: bool = True):
+                 knn_k: int = 15, seed: int = 0, validate: bool = True,
+                 numerics="auto"):
         methods = registry.methods()
         if method not in methods:
             raise ValueError(f"method must be one of {methods}, "
@@ -134,6 +147,7 @@ class FastVAT:
         self.knn_k = knn_k
         self.seed = seed
         self.validate = validate
+        self.numerics = as_policy(numerics)
         self.method_resolved: str | None = None
         self.result: TendencyResult | None = None
         self._X = None
@@ -171,15 +185,29 @@ class FastVAT:
         fv._X = None if X is None else np.asarray(X)
         return fv
 
-    def _meta(self, method: str, n: int, batch: int | None) -> ResultMeta:
+    def _meta(self, method: str, n: int, batch: int | None,
+              numerics: NumericsReport | None = None) -> ResultMeta:
         return ResultMeta(method=method, metric=self.metric, n=n,
                           batch=batch, seed=self.seed,
                           sample_size=self.sample_size,
-                          use_pallas=self.use_pallas)
+                          use_pallas=self.use_pallas, numerics=numerics)
 
-    def _options(self) -> RungOptions:
+    def _options(self, num_form: str = "gram") -> RungOptions:
         return RungOptions(sample_size=self.sample_size, block=self.block,
-                           turbo=self.turbo, knn_k=self.knn_k)
+                           turbo=self.turbo, knn_k=self.knn_k,
+                           num_form=num_form)
+
+    def _numerics_prepass(self, X, *, batched: bool = False):
+        """Run the numerics shield on point input; (X', report | None).
+
+        np.memmap input is passed through untouched — the conditioning
+        transform would materialize an O(n·d) RAM copy and defeat the
+        bigvat rung's out-of-core contract.
+        """
+        if isinstance(X, np.memmap):
+            return X, None
+        return resolve_numerics(X, metric=self.metric,
+                                policy=self.numerics, batched=batched)
 
     # ------------------------------------------------------------- fit ----
 
@@ -212,7 +240,10 @@ class FastVAT:
             # the embed rung validates its *activations* (see
             # _fit_embed_front); raw fit(X) without an encoder is the
             # rung's own "encoder required" error, not an admission case
-            validate_points(X)
+            validate_points(X, metric=self.metric)
+        num_report = None
+        if not precomputed and self.method != "embed":
+            X, num_report = self._numerics_prepass(X)
         n = int(X.shape[0])
         method = (self.method if self.method != "auto"
                   else select_method(n, precomputed=precomputed))
@@ -227,8 +258,9 @@ class FastVAT:
                              f"got n={n}")
         if rung.check is not None:
             rung.check(n)
-        meta = self._meta(method, n, batch=None)
-        self.result = rung.fit(X, meta, self._options())
+        meta = self._meta(method, n, batch=None, numerics=num_report)
+        self.result = rung.fit(X, meta, self._options(
+            num_report.form if num_report is not None else "gram"))
         self.method_resolved = method
         self._X = X
         return self
@@ -258,12 +290,16 @@ class FastVAT:
         if acts.ndim > 2:
             acts = acts.reshape(-1, acts.shape[-1])
         if self.validate:
-            validate_points(acts, name="activations")
+            validate_points(acts, name="activations", metric=self.metric)
+        acts, num_report = self._numerics_prepass(acts)
         n = int(acts.shape[0])
-        meta = dataclasses.replace(self._meta("embed", n, batch=None),
-                                   encoder=fingerprint)
-        self.result = registry.get_rung("embed").fit(acts, meta,
-                                                     self._options())
+        meta = dataclasses.replace(
+            self._meta("embed", n, batch=None, numerics=num_report),
+            encoder=fingerprint)
+        self.result = registry.get_rung("embed").fit(
+            acts, meta,
+            self._options(num_report.form if num_report is not None
+                          else "gram"))
         self.method_resolved = "embed"
         self._X = acts
         return self
@@ -314,17 +350,20 @@ class FastVAT:
         over datasets yet).
         """
         precomputed = self.metric == "precomputed"
+        num_report = None
         if precomputed:
             if self.validate:
                 validate_dissimilarity(Xs)
             Xs = as_dissimilarity(Xs, batched=True)
         else:
             if self.validate:
-                validate_points(Xs, batched=True)
-            Xs = jnp.asarray(np.asarray(Xs, np.float32))
+                validate_points(Xs, batched=True, metric=self.metric)
+            Xs = np.asarray(Xs, np.float32)
             if Xs.ndim != 3:
                 raise ValueError(f"fit_many wants a (b, n, d) stack, got "
                                  f"shape {Xs.shape}")
+            Xs, num_report = self._numerics_prepass(Xs, batched=True)
+            Xs = jnp.asarray(Xs)
         b, n = int(Xs.shape[0]), int(Xs.shape[1])
         method = self.method
         if method == "auto":
@@ -357,8 +396,9 @@ class FastVAT:
                              f"got n={n}")
         if rung.check is not None:
             rung.check(n)
-        meta = self._meta(method, n, batch=b)
-        self.result = rung.fit_batch(Xs, meta, self._options())
+        meta = self._meta(method, n, batch=b, numerics=num_report)
+        self.result = rung.fit_batch(Xs, meta, self._options(
+            num_report.form if num_report is not None else "gram"))
         self.method_resolved = method
         self._X = np.asarray(Xs)
         return self

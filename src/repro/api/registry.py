@@ -79,12 +79,19 @@ class RungOptions(NamedTuple):
     fit input to an (n, d) activation matrix (DeepVAT-style).  The
     facade encodes before dispatch and leaves this None; set it when
     driving the rung directly through the registry.
+
+    ``num_form`` is the numerics shield's tile-form plan: "gram"
+    (default — the ‖x‖²+‖y‖²−2x·y trick, MXU-friendly) or "direct"
+    (per-coordinate (x−y)², no cancellation).  The facade sets it from
+    ``numerics.resolve``'s static dispatch decision; it is threaded to
+    every distance/traversal kernel a rung runs (see docs/numerics.md).
     """
     sample_size: int = 256
     block: int = 4096
     turbo: bool | None = None
     knn_k: int = 15
     encoder: Any = None
+    num_form: str = "gram"
 
 
 Fitter = Callable[[Any, ResultMeta, RungOptions], TendencyResult]
@@ -307,35 +314,36 @@ def _as_f32(X) -> jax.Array:
         np.asarray(X, np.float32))
 
 
-def _vat_result(data, meta: ResultMeta) -> core.VATResult:
+def _vat_result(data, meta: ResultMeta, opts: RungOptions) -> core.VATResult:
     if meta.metric == "precomputed":
         return core.vat_from_dist(_as_f32(data))
     return core.vat(_as_f32(data), use_pallas=meta.use_pallas,
-                    metric=meta.metric)
+                    metric=meta.metric, form=opts.num_form)
 
 
-def _vat_result_batch(data, meta: ResultMeta) -> core.VATResult:
+def _vat_result_batch(data, meta: ResultMeta,
+                      opts: RungOptions) -> core.VATResult:
     if meta.metric == "precomputed":
         return core.vat_batch_from_dist(_as_f32(data))
     return core.vat_batch(_as_f32(data), use_pallas=meta.use_pallas,
-                          metric=meta.metric)
+                          metric=meta.metric, form=opts.num_form)
 
 
 def _fit_vat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
-    res = _vat_result(data, meta)
+    res = _vat_result(data, meta, opts)
     return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=None,
                           sample_idx=None, extension_labels=None, meta=meta)
 
 
 def _fit_vat_batch(data, meta: ResultMeta,
                    opts: RungOptions) -> TendencyResult:
-    res = _vat_result_batch(data, meta)
+    res = _vat_result_batch(data, meta, opts)
     return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=None,
                           sample_idx=None, extension_labels=None, meta=meta)
 
 
 def _fit_ivat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
-    res = _vat_result(data, meta)
+    res = _vat_result(data, meta, opts)
     iv = core.ivat_from_vat(res.rstar, use_pallas=meta.use_pallas)
     return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=iv,
                           sample_idx=None, extension_labels=None, meta=meta)
@@ -343,7 +351,7 @@ def _fit_ivat(data, meta: ResultMeta, opts: RungOptions) -> TendencyResult:
 
 def _fit_ivat_batch(data, meta: ResultMeta,
                     opts: RungOptions) -> TendencyResult:
-    res = _vat_result_batch(data, meta)
+    res = _vat_result_batch(data, meta, opts)
     iv = core.ivat_from_vat(res.rstar, use_pallas=meta.use_pallas)
     return TendencyResult(order=res.order, rstar=res.rstar, ivat_image=iv,
                           sample_idx=None, extension_labels=None, meta=meta)
@@ -410,16 +418,20 @@ def _flash_order(Xj, meta: ResultMeta, opts: RungOptions):
     (same orderings bit for bit, per-device memory divided by P).
     ``turbo=True`` FORCES the solo persistent engine (the documented
     escape hatch from auto-sharding); ``turbo=False`` pins the PR-4
-    stepwise engine.
+    stepwise engine.  The sharded engine speaks the Gram tile form only,
+    so a "direct" numerics plan (``opts.num_form``) pins the solo
+    persistent engine instead — conditioned fits trade the mesh for the
+    cancellation-free tiles.
     """
     devs = jax.devices()
     if (opts.turbo is None and core.HAS_DISTRIBUTED and len(devs) > 1
-            and meta.n >= FLASH_SHARD_MIN_N):
+            and meta.n >= FLASH_SHARD_MIN_N and opts.num_form == "gram"):
         from jax.sharding import Mesh
         mesh = Mesh(np.array(devs), ("data",))
         return core.vat_matrix_free_sharded(Xj, mesh, metric=meta.metric,
                                             use_pallas=meta.use_pallas)
     return core.vat_matrix_free(Xj, metric=meta.metric,
+                                form=opts.num_form,
                                 use_pallas=meta.use_pallas,
                                 turbo=True if opts.turbo is None
                                 else opts.turbo)
@@ -443,7 +455,7 @@ def _band_render(Xj: jax.Array, order: jax.Array, meta: ResultMeta,
     sizes, mids = _flash_groups(n, m)
     rep_idx = order[jnp.asarray(mids)]
     Rrep = kops.pairwise_dist(Xj[rep_idx], use_pallas=meta.use_pallas,
-                              metric=meta.metric)
+                              metric=meta.metric, form=opts.num_form)
     iv = _rep_ivat(Rrep, meta.use_pallas)
     gid = jnp.asarray(np.repeat(np.arange(m, dtype=np.int32), sizes))
     labels = jnp.zeros((n,), jnp.int32).at[order].set(gid)
@@ -493,14 +505,15 @@ def _fit_flashvat_batch(data, meta: ResultMeta,
     """Batched Flash-VAT: one compiled program, per-lane exact orderings."""
     Xj = _as_f32(data)
     res = core.vat_matrix_free_batch(
-        Xj, metric=meta.metric, use_pallas=meta.use_pallas,
+        Xj, metric=meta.metric, form=opts.num_form,
+        use_pallas=meta.use_pallas,
         turbo=True if opts.turbo is None else opts.turbo)
     n, m = meta.n, min(opts.sample_size, meta.n)
     sizes, mids = _flash_groups(n, m)
     rep_idx = res.order[:, jnp.asarray(mids)]                    # (b, m)
     prot = jnp.take_along_axis(Xj, rep_idx[:, :, None], axis=1)  # (b, m, d)
     Rrep = kops.pairwise_dist_batch(prot, use_pallas=meta.use_pallas,
-                                    metric=meta.metric)
+                                    metric=meta.metric, form=opts.num_form)
     iv = jax.vmap(lambda R: _rep_ivat(R, meta.use_pallas))(Rrep)
     gid = jnp.asarray(np.repeat(np.arange(m, dtype=np.int32), sizes))
     labels = jax.vmap(

@@ -43,6 +43,7 @@ import jax
 from repro.core.approx_mst import ApproxStats
 from repro.core.bigvat import expand_image
 from repro.core.ivat import ivat_from_vat
+from repro.numerics.condition import NumericsReport
 
 # Salts for deriving independent streams from the one seed on ResultMeta.
 # Fit-time sampling (maximin starts), assessment (Hopkins probe keys) and
@@ -72,6 +73,12 @@ class ResultMeta:
       encoder: fingerprint of the encoder that produced the fitted
         activations (the "embed" front-end rung / ``fit_embeddings``);
         None when the fit ran on raw input points.
+      numerics: the numerics shield's plan for this fit
+        (``numerics.NumericsReport`` — frozen and hashable, so meta
+        stays valid pytree aux data): condition estimate κ, policy
+        mode, tile form, storage dtype, whether the conditioning
+        transform ran, and counted fallbacks.  None for fits that
+        bypass the pre-pass (precomputed input, ``from_result``).
     """
 
     method: str
@@ -83,6 +90,7 @@ class ResultMeta:
     use_pallas: bool = False
     approx: ApproxStats | None = None
     encoder: str | None = None
+    numerics: NumericsReport | None = None
 
     def jax_key(self, salt: int = SALT_FIT) -> jax.Array:
         """PRNG key for device-side sampling, derived from the one seed."""

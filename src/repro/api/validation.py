@@ -20,7 +20,12 @@ Checks (all O(n·d), one vectorized pass — skippable via
   * every value is finite (no NaN / +-Inf),
   * n >= ``MIN_POINTS`` (a VAT ordering of fewer points is degenerate),
   * the points are not all identical (zero variance — every pairwise
-    dissimilarity is 0 and the "ordering" is meaningless).
+    dissimilarity is 0 and the "ordering" is meaningless),
+  * under ``metric="cosine"``: no zero-norm rows — the kernels' eps
+    -guard silently maps them to distance 1.0 from everything, which
+    is a fabricated geometry, not the caller's data.  Skipping
+    validation (``validate=False``) keeps the documented eps-guard
+    semantics for callers who want exactly that.
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ MIN_POINTS = 4
 class InvalidInput(ValueError):
     """A request/dataset was rejected at admission (never reached a
     kernel or a serving batch).  ``reason`` is a stable machine-readable
-    tag: "dtype" | "non_finite" | "too_few_points" | "degenerate"."""
+    tag: "dtype" | "non_finite" | "too_few_points" | "degenerate" |
+    "zero_norm"."""
 
     def __init__(self, reason: str, message: str):
         self.reason = reason
@@ -49,13 +55,22 @@ def _as_real_array(X, name: str) -> np.ndarray:
     return arr
 
 
-def validate_points(X, *, batched: bool = False, name: str = "X") -> None:
+def validate_points(X, *, batched: bool = False, name: str = "X",
+                    metric: str | None = None) -> None:
     """Admission-check an (n, d) point matrix (or (b, n, d) stack).
+
+    Args:
+      X: the candidate points.
+      batched: expect a (b, n, d) stack instead of (n, d).
+      name: how to refer to X in error messages.
+      metric: the metric the fit will run, when known — enables
+        metric-specific checks (currently: cosine's zero-norm screen).
 
     Raises:
       InvalidInput: non-numeric dtype, non-finite values, n below
-        ``MIN_POINTS``, or an all-identical (zero-variance) dataset.
-        Batched input names the offending lane in the message.
+        ``MIN_POINTS``, an all-identical (zero-variance) dataset, or a
+        zero-norm row under ``metric="cosine"``.  Batched input names
+        the offending lane in the message.
     """
     arr = _as_real_array(X, name)
     want = 3 if batched else 2
@@ -94,6 +109,23 @@ def validate_points(X, *, batched: bool = False, name: str = "X") -> None:
             "degenerate",
             f"{name} has zero variance (all {n} points identical) — "
             "tendency is undefined")
+    if metric == "cosine":
+        norms = np.einsum("...nd,...nd->...n", np.asarray(arr, np.float64),
+                          np.asarray(arr, np.float64))
+        zero = norms == 0.0
+        if bool(zero.any()):
+            if batched:
+                lanes = np.flatnonzero(zero.any(axis=-1))
+                where = f" (lane(s) {lanes.tolist()})"
+            else:
+                where = f" (row(s) {np.flatnonzero(zero).tolist()})"
+            raise InvalidInput(
+                "zero_norm",
+                f"{name} has zero-norm rows{where}; cosine dissimilarity "
+                "is undefined for them (the kernels' eps-guard would "
+                "silently map them to distance 1.0 from everything) — "
+                "drop the rows or pass validate=False to keep the "
+                "eps-guard semantics")
 
 
 def validate_dissimilarity(D, *, name: str = "D") -> None:

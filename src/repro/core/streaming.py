@@ -83,13 +83,23 @@ class StreamingVAT:
     non-euclidean metrics that mean is the standard centroid surrogate,
     which preserves counts exactly and perturbs geometry by at most the
     thinning radius.
+
+    ``validate`` (default True) admission-checks each ingested chunk the
+    way the fit facades do — under a cosine stream a zero-norm point is
+    refused with the typed ``InvalidInput(reason="zero_norm")`` before
+    it can poison the reservoir (the eps-guard would otherwise place it
+    at distance 1.0 from everything, a fabricated geometry the maximin
+    thinning then preserves forever).  ``validate=False`` keeps the
+    documented eps-guard semantics.
     """
 
-    def __init__(self, cap: int, d: int, *, metric: str = "euclidean"):
+    def __init__(self, cap: int, d: int, *, metric: str = "euclidean",
+                 validate: bool = True):
         check_metric(metric)
         self.cap = cap
         self.d = d
         self.metric = metric
+        self.validate = validate
         self.pts = np.empty((0, d), np.float32)
         self.counts = np.empty((0,), np.int64)   # absorbed multiplicity
         self.n_seen = 0
@@ -105,8 +115,28 @@ class StreamingVAT:
           X: (m, d) array-like (or anything reshapeable to it) — the next
             m points of the stream, inserted one at a time into the
             maximin reservoir (absorb / evict per the class docstring).
+
+        Raises:
+          InvalidInput: with ``validate=True`` and ``metric="cosine"``,
+            a zero-norm point in the chunk (the whole chunk is refused
+            before any insertion, so the reservoir never holds a
+            partial chunk).
         """
         X = np.asarray(X, np.float32).reshape(-1, self.d)
+        if self.validate and self.metric == "cosine":
+            norms = np.einsum("nd,nd->n", np.asarray(X, np.float64),
+                              np.asarray(X, np.float64))
+            zero = np.flatnonzero(norms == 0.0)
+            if zero.size:
+                # lazy import: core must not pull the api package in at
+                # module-import time (facade imports core)
+                from repro.api.validation import InvalidInput
+                raise InvalidInput(
+                    "zero_norm",
+                    f"streamed chunk has zero-norm rows {zero.tolist()}; "
+                    "cosine dissimilarity is undefined for them — drop "
+                    "the rows or construct StreamingVAT(validate=False) "
+                    "to keep the eps-guard semantics")
         for x in X:
             self._insert(x)
         self.n_seen += len(X)

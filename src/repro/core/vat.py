@@ -96,9 +96,9 @@ def reorder(R: jax.Array, order: jax.Array) -> jax.Array:
     return R[order][:, order]
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "metric"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "metric", "form"))
 def vat(X: jax.Array, *, use_pallas: bool = False,
-        metric: str = "euclidean") -> VATResult:
+        metric: str = "euclidean", form: str = "gram") -> VATResult:
     """Full VAT on a data matrix.
 
     Args:
@@ -109,12 +109,15 @@ def vat(X: jax.Array, *, use_pallas: bool = False,
         Interpret mode on CPU; compiled on TPU.  Default is XLA.
       metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
         For an already-computed matrix use ``vat_from_dist`` instead.
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form (static; resolved host-side by ``numerics.resolve``).
 
     Returns:
       VATResult — rstar (n, n) reordered image, order (n,) int32
       permutation, dist (n, n) original dissimilarities.
     """
-    R = kops.pairwise_dist(X, use_pallas=use_pallas, metric=metric)
+    R = kops.pairwise_dist(X, use_pallas=use_pallas, metric=metric,
+                           form=form)
     order = vat_order(R, use_pallas_argmin=use_pallas)
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
 
@@ -136,9 +139,9 @@ def vat_from_dist(R: jax.Array, *,
     return VATResult(rstar=reorder(R, order), order=order, dist=R)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "metric"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "metric", "form"))
 def vat_batch(X: jax.Array, *, use_pallas: bool = False,
-              metric: str = "euclidean") -> VATResult:
+              metric: str = "euclidean", form: str = "gram") -> VATResult:
     """Batched VAT: assess a stack of datasets in one compiled program.
 
     Args:
@@ -149,6 +152,7 @@ def vat_batch(X: jax.Array, *, use_pallas: bool = False,
         default is the batched XLA path.
       metric: dissimilarity metric, one of ``kernels.ref.METRICS``.
         For precomputed (b, n, n) stacks use ``vat_batch_from_dist``.
+      form: "gram" (default) or "direct" — the numerics-policy tile form.
 
     Returns:
       VATResult whose fields carry a leading batch axis: rstar (b, n, n),
@@ -158,7 +162,8 @@ def vat_batch(X: jax.Array, *, use_pallas: bool = False,
     rows (the vmapped ``vat_order`` runs the same argmin/min-update steps
     per batch lane; no cross-dataset reduction exists anywhere).
     """
-    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas, metric=metric)
+    R = kops.pairwise_dist_batch(X, use_pallas=use_pallas, metric=metric,
+                                 form=form)
     return jax.vmap(
         lambda Ri: vat_from_dist(Ri, use_pallas_argmin=use_pallas))(R)
 
@@ -176,7 +181,7 @@ def vat_batch_from_dist(R: jax.Array, *,
 # Flash-VAT: matrix-free fused Prim ordering — exact VAT at O(n·d) memory.
 # ------------------------------------------------------------------------
 
-def _streamed_seed_pivot(Xf: jax.Array, *, metric: str,
+def _streamed_seed_pivot(Xf: jax.Array, *, metric: str, form: str = "gram",
                          use_pallas: bool = False) -> jax.Array:
     """VAT's seed vertex i0 = argmax_i max_j R[i, j], streamed.
 
@@ -195,7 +200,9 @@ def _streamed_seed_pivot(Xf: jax.Array, *, metric: str,
     (br, n) strip mining at n = 8192.
     """
     n, d = Xf.shape
-    per_entry = 4 * (d if metric == "manhattan" else 1)
+    broadcast = metric == "manhattan" or (form == "direct"
+                                          and metric != "cosine")
+    per_entry = 4 * (d if broadcast else 1)  # |diff|/(diff)^2 keep (bs,bs,d)
     bs = max(8, min(1024, int(((4 << 20) // per_entry) ** 0.5), n))
     n_pad = -(-n // bs) * bs
     Xp = jnp.pad(Xf, ((0, n_pad - n), (0, 0)))
@@ -208,7 +215,7 @@ def _streamed_seed_pivot(Xf: jax.Array, *, metric: str,
 
         def col_block(j, rm):
             yb = lax.dynamic_slice_in_dim(Xp, j * bs, bs, 0)
-            T = kops.pairwise_dist(xb, yb, metric=metric,
+            T = kops.pairwise_dist(xb, yb, metric=metric, form=form,
                                    use_pallas=use_pallas)
             cids = j * bs + lane
             T = jnp.where(cids[None, :] == rids[:, None], 0.0, T)  # diag
@@ -223,7 +230,7 @@ def _streamed_seed_pivot(Xf: jax.Array, *, metric: str,
     return jnp.argmax(rowmax[:n]).astype(jnp.int32)
 
 
-def _prim_stream_order(Xs, auxs, i0, n, *, metric, use_pallas, block):
+def _prim_stream_order(Xs, auxs, i0, n, *, metric, form, use_pallas, block):
     """Drive n-1 fused Prim steps from seed i0; shared by both paths.
 
     Args:
@@ -242,8 +249,8 @@ def _prim_stream_order(Xs, auxs, i0, n, *, metric, use_pallas, block):
     def body(t, carry):
         mind, sel, order, edges, q = carry
         mind, ev, nq = kops.prim_stream_step(
-            Xs, auxs, q, mind, sel, metric=metric, use_pallas=use_pallas,
-            block=block)
+            Xs, auxs, q, mind, sel, metric=metric, form=form,
+            use_pallas=use_pallas, block=block)
         return (mind, sel.at[nq].set(True), order.at[t].set(nq),
                 edges.at[t].set(ev), nq)
 
@@ -252,10 +259,11 @@ def _prim_stream_order(Xs, auxs, i0, n, *, metric, use_pallas, block):
     return FlashVATResult(order=order, edges=edges)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas",
-                                             "turbo"))
+@functools.partial(jax.jit, static_argnames=("metric", "form", "block",
+                                             "use_pallas", "turbo"))
 def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
-                    block: int = 1024, use_pallas: bool = False,
+                    form: str = "gram", block: int = 1024,
+                    use_pallas: bool = False,
                     turbo: bool = True) -> FlashVATResult:
     """Exact VAT ordering of X without ever materializing the (n, n) matrix.
 
@@ -287,6 +295,8 @@ def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
       metric: dissimilarity metric, one of ``kernels.ref.METRICS``
         ("precomputed" is meaningless here — the point is to never hold
         the matrix; use ``vat_from_dist`` if you already have it).
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form, shared by the seed scan and the traversal (static).
       block: X-tile length of the fused kernels (static).
       use_pallas: route the traversal (and the seed scan's pairwise
         tiles) through the Pallas kernels (interpret mode on CPU;
@@ -303,23 +313,26 @@ def vat_matrix_free(X: jax.Array, *, metric: str = "euclidean",
     n = X.shape[0]
     Xf = X.astype(jnp.float32)
     aux = kref.metric_aux_ref(Xf, metric=metric)
-    i0 = _streamed_seed_pivot(Xf, metric=metric, use_pallas=use_pallas)
+    i0 = _streamed_seed_pivot(Xf, metric=metric, form=form,
+                              use_pallas=use_pallas)
     if turbo:
         order, edges = kops.prim_persist(Xf, aux, i0, metric=metric,
-                                         block=block, use_pallas=use_pallas)
+                                         form=form, block=block,
+                                         use_pallas=use_pallas)
         return FlashVATResult(order=order, edges=edges)
     if use_pallas:
         Xs, auxs, _, bn = pad_points(Xf, aux, block=block)
     else:
         Xs, auxs, bn = Xf, aux, block
-    return _prim_stream_order(Xs, auxs, i0, n, metric=metric,
+    return _prim_stream_order(Xs, auxs, i0, n, metric=metric, form=form,
                               use_pallas=use_pallas, block=bn)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "use_pallas",
-                                             "turbo"))
+@functools.partial(jax.jit, static_argnames=("metric", "form", "block",
+                                             "use_pallas", "turbo"))
 def vat_matrix_free_batch(X: jax.Array, *, metric: str = "euclidean",
-                          block: int = 1024, use_pallas: bool = False,
+                          form: str = "gram", block: int = 1024,
+                          use_pallas: bool = False,
                           turbo: bool = True) -> FlashVATResult:
     """Batched Flash-VAT: exact matrix-free orderings for a (b, n, d) stack.
 
@@ -335,7 +348,8 @@ def vat_matrix_free_batch(X: jax.Array, *, metric: str = "euclidean",
 
     Args:
       X: (b, n, d) float — b independent datasets.
-      metric / block / use_pallas / turbo: as in ``vat_matrix_free``.
+      metric / form / block / use_pallas / turbo: as in
+        ``vat_matrix_free``.
 
     Returns:
       FlashVATResult with a leading batch axis: order (b, n) int32,
@@ -345,18 +359,21 @@ def vat_matrix_free_batch(X: jax.Array, *, metric: str = "euclidean",
         Xf = X.astype(jnp.float32)
         aux = kref.metric_aux_ref(Xf, metric=metric)
         i0 = jax.vmap(functools.partial(
-            _streamed_seed_pivot, metric=metric, use_pallas=use_pallas))(Xf)
+            _streamed_seed_pivot, metric=metric, form=form,
+            use_pallas=use_pallas))(Xf)
         order, edges = kops.prim_persist(Xf, aux, i0, metric=metric,
-                                         block=block, use_pallas=use_pallas)
+                                         form=form, block=block,
+                                         use_pallas=use_pallas)
         return FlashVATResult(order=order, edges=edges)
     if not use_pallas:
         return jax.vmap(functools.partial(
-            vat_matrix_free, metric=metric, block=block, turbo=False))(X)
+            vat_matrix_free, metric=metric, form=form, block=block,
+            turbo=False))(X)
     b, n, _ = X.shape
     Xf = X.astype(jnp.float32)
     aux = kref.metric_aux_ref(Xf, metric=metric)
     i0 = jax.vmap(functools.partial(
-        _streamed_seed_pivot, metric=metric, use_pallas=True))(Xf)
+        _streamed_seed_pivot, metric=metric, form=form, use_pallas=True))(Xf)
     Xp, auxp, n_pad, bn = pad_points(Xf, aux, block=block)
     lane = jnp.arange(b)
 
@@ -369,8 +386,8 @@ def vat_matrix_free_batch(X: jax.Array, *, metric: str = "euclidean",
     def body(t, carry):
         mind, sel, order, edges, q = carry
         mind, ev, nq = kops.prim_stream_step(
-            Xp, auxp, q, mind, sel, metric=metric, use_pallas=True,
-            block=bn)
+            Xp, auxp, q, mind, sel, metric=metric, form=form,
+            use_pallas=True, block=bn)
         return (mind, sel.at[lane, nq].set(True),
                 order.at[:, t].set(nq), edges.at[:, t].set(ev), nq)
 

@@ -67,6 +67,7 @@ SITES = (
     "ckpt.aux_write",       # checkpoint/ckpt.py sidecar file just written
     "ckpt.aux_read",        # checkpoint/ckpt.py::load_aux before reading
     "history.deserialize",  # monitor/history.py::TendencyHistory arrays
+    "kernels.numerics_trip",  # numerics/condition.py::resolve bf16 cert
 )
 
 

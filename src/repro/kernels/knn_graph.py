@@ -89,7 +89,10 @@ def _fold_topk(best_d, best_i, tile_d, tile_i, k: int):
 
 def _masked_tile(x, y, i, j, bm, bn, n, metric):
     """Distance tile with self-pairs and padded columns masked to +inf."""
-    d = _tile_dissim(x, y, metric)
+    # gram form always: the approx rung runs on data the numerics
+    # pre-pass has already conditioned when needed (post-transform
+    # kappa is tiny), so the cancellation-free direct tile buys nothing
+    d = _tile_dissim(x, y, metric, "gram")
     rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
     cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
     return jnp.where((cols == rows) | (cols >= n), jnp.inf, d), cols

@@ -46,8 +46,8 @@ def _dispatch_site(op: str, use_pallas: bool) -> None:
 
 
 def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
-                  metric: str = "euclidean", use_pallas: bool = False,
-                  block: int = 256) -> jax.Array:
+                  metric: str = "euclidean", form: str = "gram",
+                  use_pallas: bool = False, block: int = 256) -> jax.Array:
     """Pairwise dissimilarity matrix; Pallas-tiled on request, XLA otherwise.
 
     Args:
@@ -57,6 +57,8 @@ def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
       metric: one of ``kernels.ref.METRICS`` (euclidean | sqeuclidean |
         manhattan | cosine). "precomputed" is an API-layer concept and
         never reaches the kernels.
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form, resolved host-side by ``numerics.resolve`` (static).
       use_pallas: route through the MXU-tiled Pallas kernel (interpret
         mode on CPU; compiled on TPU). Default is the XLA reference path.
       block: Pallas output tile edge.
@@ -66,10 +68,10 @@ def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
     """
     _dispatch_site("pairwise_dist", use_pallas)
     if use_pallas:
-        R = pairwise_dist_pallas(X, Y, metric=metric, block=block,
+        R = pairwise_dist_pallas(X, Y, metric=metric, form=form, block=block,
                                  interpret=_interpret())
     else:
-        R = ref.pairwise_dissim_ref(X, Y, metric=metric)
+        R = ref.pairwise_dissim_ref(X, Y, metric=metric, form=form)
     if Y is None:  # exact zero diagonal for self-dissimilarities
         n = R.shape[0]
         R = R * (1.0 - jnp.eye(n, dtype=R.dtype))
@@ -77,13 +79,14 @@ def pairwise_dist(X: jax.Array, Y: jax.Array | None = None, *,
 
 
 def pairwise_dist_batch(X: jax.Array, *, metric: str = "euclidean",
-                        use_pallas: bool = False,
+                        form: str = "gram", use_pallas: bool = False,
                         block: int = 256) -> jax.Array:
     """Per-dataset self-dissimilarity matrices for a (b, n, d) stack.
 
     Args:
       X: (b, n, d) float — b independent datasets.
       metric: one of ``kernels.ref.METRICS``.
+      form: "gram" (default) or "direct" — the numerics-policy tile form.
       use_pallas: route through the batched-grid Pallas kernel
         (``pairwise_dist_pallas_batch``); default is a vmap of the XLA
         reference, which lowers to one batched dot_general.
@@ -94,11 +97,12 @@ def pairwise_dist_batch(X: jax.Array, *, metric: str = "euclidean",
     """
     _dispatch_site("pairwise_dist_batch", use_pallas)
     if use_pallas:
-        R = pairwise_dist_pallas_batch(X, metric=metric, block=block,
-                                       interpret=_interpret())
+        R = pairwise_dist_pallas_batch(X, metric=metric, form=form,
+                                       block=block, interpret=_interpret())
     else:
         R = jax.vmap(
-            lambda A: ref.pairwise_dissim_ref(A, metric=metric))(X)
+            lambda A: ref.pairwise_dissim_ref(A, metric=metric,
+                                              form=form))(X)
     n = R.shape[-1]
     return R * (1.0 - jnp.eye(n, dtype=R.dtype))
 
@@ -182,8 +186,8 @@ def masked_argmin(vals: jax.Array, mask: jax.Array, *,
 
 def prim_stream_step(X: jax.Array, aux: jax.Array, q: jax.Array,
                      mind: jax.Array, selected: jax.Array, *,
-                     metric: str = "euclidean", use_pallas: bool = False,
-                     block: int = 1024):
+                     metric: str = "euclidean", form: str = "gram",
+                     use_pallas: bool = False, block: int = 1024):
     """One fused matrix-free Prim step (the Flash-VAT hot loop).
 
     Recomputes pivot q's distance row tile-by-tile, folds it into the
@@ -202,6 +206,7 @@ def prim_stream_step(X: jax.Array, aux: jax.Array, q: jax.Array,
       mind: like aux — frontier distances (padded lanes +inf).
       selected: bool, like aux — visited mask (padded lanes True).
       metric: one of ``kernels.ref.METRICS``.
+      form: "gram" (default) or "direct" — the numerics-policy tile form.
       use_pallas: fused Pallas kernel vs the XLA reference step.
       block: Pallas VMEM tile length (must divide the padded n).
 
@@ -214,19 +219,20 @@ def prim_stream_step(X: jax.Array, aux: jax.Array, q: jax.Array,
     if use_pallas:
         step = (prim_stream_step_pallas_batch if batched
                 else prim_stream_step_pallas)
-        return step(X, aux, q, mind, selected, metric=metric, block=block,
-                    interpret=_interpret())
+        return step(X, aux, q, mind, selected, metric=metric, form=form,
+                    block=block, interpret=_interpret())
     if batched:
         return jax.vmap(
             lambda Xi, ai, qi, mi, si: ref.prim_stream_step_ref(
-                Xi, ai, qi, mi, si, metric=metric)
+                Xi, ai, qi, mi, si, metric=metric, form=form)
         )(X, aux, q, mind, selected)
-    return ref.prim_stream_step_ref(X, aux, q, mind, selected, metric=metric)
+    return ref.prim_stream_step_ref(X, aux, q, mind, selected, metric=metric,
+                                    form=form)
 
 
 def prim_persist(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
-                 metric: str = "euclidean", block: int = 1024,
-                 use_pallas: bool = False):
+                 metric: str = "euclidean", form: str = "gram",
+                 block: int = 1024, use_pallas: bool = False):
     """The whole Prim traversal in one dispatch (the Turbo engine).
 
     Solo (n, d) input runs the persistent path: the Pallas megakernel
@@ -244,6 +250,8 @@ def prim_persist(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
       aux: (n,) or (b, n) float32 — ``ref.metric_aux_ref`` of X.
       i0: i32 scalar or (b,) — seed vertex per dataset.
       metric: one of ``kernels.ref.METRICS``.
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form; the megakernel's pruning slack is debited per form.
       block: megakernel X-tile length.
       use_pallas: megakernel vs the XLA mirror (solo only).
 
@@ -254,19 +262,19 @@ def prim_persist(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
     _dispatch_site("prim_persist", use_pallas)
     if X.ndim == 3:
         return jax.vmap(lambda Xi, ai, ii: ref.prim_persist_ref(
-            Xi, ai, ii, metric=metric))(X, aux, i0)
+            Xi, ai, ii, metric=metric, form=form))(X, aux, i0)
     if use_pallas and persist_supported(X.shape[0], X.shape[1], block=block):
         order, edges, _ = prim_persist_pallas(X, aux, i0, metric=metric,
-                                              block=block,
+                                              form=form, block=block,
                                               interpret=_interpret())
         return order, edges
-    return ref.prim_persist_ref(X, aux, i0, metric=metric)
+    return ref.prim_persist_ref(X, aux, i0, metric=metric, form=form)
 
 
 def prim_frontier_step(X: jax.Array, aux: jax.Array, xq: jax.Array,
                        auxq: jax.Array, mind: jax.Array, *,
-                       metric: str = "euclidean", use_pallas: bool = False,
-                       block: int = 1024):
+                       metric: str = "euclidean", form: str = "gram",
+                       use_pallas: bool = False, block: int = 1024):
     """Fused frontier fold + masked argmin, pivot passed by value.
 
     The per-device body of the sharded matrix-free engine
@@ -286,6 +294,7 @@ def prim_frontier_step(X: jax.Array, aux: jax.Array, xq: jax.Array,
       auxq: f32 scalar — the pivot's aux entry.
       mind: (n,) float32 — in-band frontier (+inf = selected/padding).
       metric: one of ``kernels.ref.METRICS``.
+      form: "gram" (default) or "direct" — the numerics-policy tile form.
       use_pallas: fused Pallas tile kernel vs the XLA reference.
       block: Pallas VMEM tile length.
 
@@ -297,10 +306,11 @@ def prim_frontier_step(X: jax.Array, aux: jax.Array, xq: jax.Array,
     if use_pallas:
         selected = jnp.isinf(mind)
         new_mind, value, idx = prim_frontier_step_pallas(
-            X, aux, xq, auxq, mind, selected, metric=metric, block=block,
-            interpret=_interpret())
+            X, aux, xq, auxq, mind, selected, metric=metric, form=form,
+            block=block, interpret=_interpret())
         return jnp.where(selected, jnp.inf, new_mind), value, idx
-    return ref.prim_frontier_step_ref(X, aux, xq, auxq, mind, metric=metric)
+    return ref.prim_frontier_step_ref(X, aux, xq, auxq, mind, metric=metric,
+                                      form=form)
 
 
 def kernel_dispatch_stats(fn, *args, **kwargs) -> dict:

@@ -44,14 +44,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.ref import check_metric
+from repro.numerics.condition import check_form
 
 DEFAULT_BLOCK = 256
 _LANE = 128  # MXU/VREG lane width — pad contraction dim to a multiple
 _MANHATTAN_BLOCK = 64  # broadcast-chunk metrics pay BM*BN*_LANE VMEM
 
 
-def _tile_dissim(x, y, metric):
-    """(BM, d), (BN, d) -> (BM, BN) dissimilarity tile, f32 accumulate."""
+def _tile_dissim(x, y, metric, form):
+    """(BM, d), (BN, d) -> (BM, BN) dissimilarity tile, f32 accumulate.
+
+    ``form == "direct"`` (euclidean/sqeuclidean under the safe/auto
+    numerics policies) trades the single MXU matmul for the manhattan
+    -style broadcast-chunk loop over squared differences — no
+    cancellation, ~2x slower, and it pays the same BM*BN*_LANE VMEM
+    bill (so ``_clamp_block`` clamps it like manhattan).
+    """
     if metric == "manhattan":
         acc = jnp.zeros((x.shape[0], y.shape[0]), jnp.float32)
         for k0 in range(0, x.shape[1], _LANE):  # d is static: unrolled
@@ -59,6 +67,12 @@ def _tile_dissim(x, y, metric):
             yc = y[:, k0:k0 + _LANE]
             acc += jnp.sum(jnp.abs(xc[:, None, :] - yc[None, :, :]), axis=-1)
         return acc
+    if form == "direct" and metric != "cosine":
+        acc = jnp.zeros((x.shape[0], y.shape[0]), jnp.float32)
+        for k0 in range(0, x.shape[1], _LANE):  # d is static: unrolled
+            dc = x[:, None, k0:k0 + _LANE] - y[None, :, k0:k0 + _LANE]
+            acc += jnp.sum(dc * dc, axis=-1)
+        return jnp.sqrt(acc) if metric == "euclidean" else acc
     cross = jax.lax.dot_general(                # MXU: (BM, d) x (BN, d)^T
         x, y, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -73,16 +87,16 @@ def _tile_dissim(x, y, metric):
     return jnp.sqrt(sq) if metric == "euclidean" else sq
 
 
-def _pairwise_kernel(x_ref, y_ref, o_ref, *, metric):
+def _pairwise_kernel(x_ref, y_ref, o_ref, *, metric, form):
     x = x_ref[...].astype(jnp.float32)          # (BM, d)
     y = y_ref[...].astype(jnp.float32)          # (BN, d)
-    o_ref[...] = _tile_dissim(x, y, metric).astype(o_ref.dtype)
+    o_ref[...] = _tile_dissim(x, y, metric, form).astype(o_ref.dtype)
 
 
-def _pairwise_kernel_batch(x_ref, y_ref, o_ref, *, metric):
+def _pairwise_kernel_batch(x_ref, y_ref, o_ref, *, metric, form):
     x = x_ref[0].astype(jnp.float32)            # (1, BM, d) slab -> (BM, d)
     y = y_ref[0].astype(jnp.float32)
-    o_ref[0] = _tile_dissim(x, y, metric).astype(o_ref.dtype)
+    o_ref[0] = _tile_dissim(x, y, metric, form).astype(o_ref.dtype)
 
 
 def _pad_to(a: jax.Array, size: int, axis: int) -> jax.Array:
@@ -94,18 +108,21 @@ def _pad_to(a: jax.Array, size: int, axis: int) -> jax.Array:
     return jnp.pad(a, widths)
 
 
-def _clamp_block(block: int, n: int, metric: str) -> int:
-    if metric == "manhattan":
-        block = min(block, _MANHATTAN_BLOCK)
+def _clamp_block(block: int, n: int, metric: str,
+                 form: str = "gram") -> int:
+    if metric == "manhattan" or (form == "direct" and metric != "cosine"):
+        block = min(block, _MANHATTAN_BLOCK)  # broadcast-chunk VMEM bill
     return min(block, max(8, n))
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "form", "block", "interpret"))
 def pairwise_dist_pallas(
     X: jax.Array,
     Y: jax.Array | None = None,
     *,
     metric: str = "euclidean",
+    form: str = "gram",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
@@ -116,8 +133,11 @@ def pairwise_dist_pallas(
       Y: (m, d) float or None — reference points (None: Y = X).
       metric: one of ``kernels.ref.METRICS`` (static — each metric
         compiles its own tile; see the module docstring for the math).
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form (static; see ``_tile_dissim`` and ``numerics.resolve``).
       block: output tile edge BM = BN (static; clamped to n/m, and to
-        ``_MANHATTAN_BLOCK`` for the broadcast-chunk metric).
+        ``_MANHATTAN_BLOCK`` for the broadcast-chunk tiles — manhattan,
+        and direct-form euclidean/sqeuclidean).
       interpret: Pallas interpret mode (CPU correctness path).
 
     Returns:
@@ -127,12 +147,13 @@ def pairwise_dist_pallas(
       it never reaches the caller.
     """
     check_metric(metric)
+    check_form(form)
     if Y is None:
         Y = X
     n, d = X.shape
     m = Y.shape[0]
-    bm = _clamp_block(block, n, metric)
-    bn = _clamp_block(block, m, metric)
+    bm = _clamp_block(block, n, metric, form)
+    bn = _clamp_block(block, m, metric, form)
     n_pad = -(-n // bm) * bm
     m_pad = -(-m // bn) * bn
     d_pad = -(-d // _LANE) * _LANE
@@ -140,7 +161,7 @@ def pairwise_dist_pallas(
     Yp = _pad_to(_pad_to(Y, m_pad, 0), d_pad, 1)
 
     out = pl.pallas_call(
-        functools.partial(_pairwise_kernel, metric=metric),
+        functools.partial(_pairwise_kernel, metric=metric, form=form),
         grid=(n_pad // bm, m_pad // bn),
         in_specs=[
             pl.BlockSpec((bm, d_pad), lambda i, j: (i, 0)),
@@ -153,11 +174,13 @@ def pairwise_dist_pallas(
     return out[:n, :m]
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "form", "block", "interpret"))
 def pairwise_dist_pallas_batch(
     X: jax.Array,
     *,
     metric: str = "euclidean",
+    form: str = "gram",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
@@ -166,8 +189,10 @@ def pairwise_dist_pallas_batch(
     Args:
       X: (b, n, d) float — b independent datasets of n points each.
       metric: one of ``kernels.ref.METRICS`` (static).
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form (static).
       block: square output tile edge (BM = BN); clamped to n (and to
-        ``_MANHATTAN_BLOCK`` for the broadcast-chunk metric).
+        ``_MANHATTAN_BLOCK`` for the broadcast-chunk tiles).
       interpret: Pallas interpret mode (CPU correctness path).
 
     Returns:
@@ -180,14 +205,15 @@ def pairwise_dist_pallas_batch(
     budget regardless of b.
     """
     check_metric(metric)
+    check_form(form)
     b, n, d = X.shape
-    bm = _clamp_block(block, n, metric)
+    bm = _clamp_block(block, n, metric, form)
     n_pad = -(-n // bm) * bm
     d_pad = -(-d // _LANE) * _LANE
     Xp = _pad_to(_pad_to(X, n_pad, 1), d_pad, 2)
 
     out = pl.pallas_call(
-        functools.partial(_pairwise_kernel_batch, metric=metric),
+        functools.partial(_pairwise_kernel_batch, metric=metric, form=form),
         grid=(b, n_pad // bm, n_pad // bm),
         in_specs=[
             pl.BlockSpec((1, bm, d_pad), lambda bi, i, j: (bi, i, 0)),

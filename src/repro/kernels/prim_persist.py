@@ -30,10 +30,11 @@ Lazy-fold exactness argument (why pruning cannot change the ordering):
     pending, unfolded pivot's distance to any lane of T, from the tile's
     centroid + radius via the triangle inequality — both computed in the
     direct difference form — shrunk by ``_LB_MARGIN`` against relative
-    f32 rounding AND debited ``_LB_SLACK_ULPS·eps·max‖x‖²`` against the
-    ABSOLUTE cancellation error of the Gram-trick rows it is compared
-    with).  ``min(tmin, pend_lb)`` lower-bounds T's computed frontier
-    min.
+    f32 rounding AND debited ``lb_slack_ulps(form)·eps·max‖x‖²``
+    against the absolute cancellation error of the Gram-trick rows it
+    is compared with — 4 ulps suffice for direct-form rows, which have
+    no cancellation).  ``min(tmin, pend_lb)`` lower-bounds T's computed
+    frontier min.
   * per step, tiles are folded in ascending-bound order until every
     unfolded tile's bound strictly exceeds the best exact candidate.
     Stale lanes then provably exceed the winner too (stale >= true >
@@ -64,6 +65,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.prim_stream import (_LANE, DEFAULT_BLOCK, _tile_pivot_row,
                                        pad_points)
 from repro.kernels.ref import UNSEEN, check_metric
+from repro.numerics.condition import check_form, lb_slack_ulps
 
 #: VMEM the persistent kernel may plan for (bytes).  Conservative slice
 #: of the ~16 MiB core: leaves room for compiler temporaries and the
@@ -77,18 +79,17 @@ PERSIST_VMEM_BUDGET = 12 * 1024 * 1024
 #: tile within 0.1% of the winner would be folded next step anyway).
 _LB_MARGIN = 0.999
 
-#: Absolute-error allowance for the GRAM-TRICK side of the comparison.
-#: The frontier values the bound is checked against come from
-#: ``_tile_pivot_row``'s aux + aux_q - 2·cross decomposition, whose
-#: cancellation error is ABSOLUTE — up to ~C·eps·max‖x‖² regardless of
-#: how small the distance is — so a relative margin alone is unsound on
-#: uncentered data (coordinates offset far from the origin).  The
-#: kernel therefore subtracts ``_LB_SLACK_ULPS · eps · max(aux)`` in
-#: squared-distance units from every bound (its sqrt in euclidean
-#: units).  64 covers the decomposition's 3 same-magnitude terms with
-#: >10x headroom; on origin-centered data the slack is far below any
-#: inter-cluster gap and pruning is unaffected.
-_LB_SLACK_ULPS = 64.0
+#: Absolute-error allowance for the frontier-row side of the comparison:
+#: ``numerics.condition.lb_slack_ulps(form)`` ulps at scale max‖x‖².
+#: Gram-form rows (``_tile_pivot_row``'s aux + aux_q - 2·cross
+#: decomposition) carry ABSOLUTE cancellation error — up to
+#: ~C·eps·max‖x‖² regardless of how small the distance is — so a
+#: relative margin alone is unsound on uncentered data; the kernel
+#: subtracts ``lb_slack_ulps(form) · eps · max(aux)`` in squared
+#: -distance units from every bound (its sqrt in euclidean units).
+#: The gram value (64) is the original PR-5 constant, now shared with
+#: the ``KAPPA_SAFE`` derivation; direct-form rows have no cancellation
+#: and keep only a tiny final-sum allowance (4).
 _F32_EPS = float(jnp.finfo(jnp.float32).eps)
 
 
@@ -170,7 +171,7 @@ def persist_tile_bounds(Xp: jax.Array, n: int, *, metric: str,
 
 def _persist_kernel(i0_ref, aux_ref, cent_ref, rad_ref, x_ref,
                     order_ref, edges_ref, stats_ref, tile_ref, row_ref,
-                    sem_t, sem_r, *, n, metric, block, prune):
+                    sem_t, sem_r, *, n, metric, form, block, prune):
     n_pad = aux_ref.shape[0]
     nblk = n_pad // block
     aux = aux_ref[...]
@@ -188,9 +189,10 @@ def _persist_kernel(i0_ref, aux_ref, cent_ref, rad_ref, x_ref,
         cp.wait()
         return row_ref[...]
 
-    # row-side Gram-cancellation allowance, squared-distance units (the
-    # module constants explain why a relative margin alone is unsound)
-    slack_sq = jnp.float32(_LB_SLACK_ULPS * _F32_EPS) * jnp.max(aux)
+    # row-side cancellation allowance, squared-distance units, per tile
+    # form (the module constants explain why a relative margin alone is
+    # unsound against Gram rows)
+    slack_sq = jnp.float32(lb_slack_ulps(form) * _F32_EPS) * jnp.max(aux)
 
     def tile_lb(xq):
         """Lower bound on d(q, any lane of tile T) for every T: triangle
@@ -242,7 +244,7 @@ def _persist_kernel(i0_ref, aux_ref, cent_ref, rad_ref, x_ref,
             # dot-shape-for-dot-shape) identical rows across both Pallas
             # engines, so near-tie metrics cannot flip between them on
             # 1-ulp dot-lowering differences
-            row = _tile_pivot_row(tile, xp, aux_t, ap, metric)
+            row = _tile_pivot_row(tile, xp, aux_t, ap, metric, form)
             return jnp.where(jnp.isinf(mt), inf, jnp.minimum(mt, row))
 
         mt = lax.fori_loop(k0, t, fold_one, mt)
@@ -312,14 +314,15 @@ def _persist_kernel(i0_ref, aux_ref, cent_ref, rad_ref, x_ref,
     stats_ref[...] = carry[6]
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block", "interpret",
-                                             "prune"))
+@functools.partial(jax.jit, static_argnames=("metric", "form", "block",
+                                             "interpret", "prune"))
 def prim_persist_pallas(
     X: jax.Array,
     aux: jax.Array,
     i0: jax.Array,
     *,
     metric: str = "euclidean",
+    form: str = "gram",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
     prune: bool = True,
@@ -336,6 +339,9 @@ def prim_persist_pallas(
       aux: (n,) float32 — ``kernels.ref.metric_aux_ref`` of X.
       i0: i32 scalar — seed vertex (``core.vat._streamed_seed_pivot``).
       metric: one of ``kernels.ref.METRICS`` (static).
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form (static); the pruning slack is debited per form via
+        ``numerics.condition.lb_slack_ulps``.
       block: X tile length (static); clamped like ``pad_points``.
       interpret: Pallas interpret mode (the CPU correctness path).
       prune: lazy-Prim tile pruning (static).  False forces the eager
@@ -358,14 +364,15 @@ def prim_persist_pallas(
     ``kernels.ops.prim_persist`` owns that guard.
     """
     check_metric(metric)
+    check_form(form)
     n = X.shape[0]
     Xp, auxp, n_pad, bn = pad_points(X.astype(jnp.float32), aux, block=block)
     cent, rad = persist_tile_bounds(Xp, n, metric=metric, block=bn)
     d_pad = Xp.shape[1]
 
     order, edges, stats = pl.pallas_call(
-        functools.partial(_persist_kernel, n=n, metric=metric, block=bn,
-                          prune=prune),
+        functools.partial(_persist_kernel, n=n, metric=metric, form=form,
+                          block=bn, prune=prune),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),          # i0
             pl.BlockSpec((n_pad,), lambda: (0,)),           # aux

@@ -42,19 +42,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.ref import check_metric
+from repro.numerics.condition import check_form
 
 DEFAULT_BLOCK = 1024
 _LANE = 128  # MXU/VREG lane width — pad d to a multiple
 
 
-def _tile_pivot_row(x, xq, aux, auxq, metric):
+def _tile_pivot_row(x, xq, aux, auxq, metric, form):
     """((B, d), (1, d), (B,), (1,)) -> (B,) dissimilarities to the pivot.
 
     Mirrors ``kernels.ref.pivot_row_ref`` term for term so the fused path
     reproduces the XLA path's orderings (same formula, same clamps).
+    ``form == "direct"`` (euclidean/sqeuclidean under the safe/auto
+    numerics policies) replaces the MXU matvec with a broadcast squared
+    -difference reduce — no Gram cancellation, at a VPU-bound cost.
     """
     if metric == "manhattan":
         return jnp.sum(jnp.abs(x - xq), axis=-1)
+    if form == "direct" and metric != "cosine":
+        diff = x - xq
+        sq = jnp.sum(diff * diff, axis=-1)
+        return jnp.sqrt(sq) if metric == "euclidean" else sq
     cross = jax.lax.dot_general(            # MXU: (B, d) x (1, d)^T
         x, xq, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32).reshape(x.shape[0])
@@ -67,11 +75,11 @@ def _tile_pivot_row(x, xq, aux, auxq, metric):
 
 
 def _prim_stream_kernel(x_ref, xq_ref, aux_ref, auxq_ref, mind_ref, sel_ref,
-                        newmind_ref, minv_ref, mini_ref, *, metric):
+                        newmind_ref, minv_ref, mini_ref, *, metric, form):
     b = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)          # (B, d)
     xq = xq_ref[...].astype(jnp.float32)        # (1, d)
-    row = _tile_pivot_row(x, xq, aux_ref[...], auxq_ref[...], metric)
+    row = _tile_pivot_row(x, xq, aux_ref[...], auxq_ref[...], metric, form)
     new = jnp.minimum(mind_ref[...], row)       # Prim min-update, fused
     newmind_ref[...] = new
     masked = jnp.where(sel_ref[...], jnp.inf, new)
@@ -85,11 +93,11 @@ def _prim_stream_kernel(x_ref, xq_ref, aux_ref, auxq_ref, mind_ref, sel_ref,
 
 def _prim_stream_kernel_batch(x_ref, xq_ref, aux_ref, auxq_ref, mind_ref,
                               sel_ref, newmind_ref, minv_ref, mini_ref, *,
-                              metric):
+                              metric, form):
     j = pl.program_id(1)
     x = x_ref[0].astype(jnp.float32)            # (1, B, d) slab -> (B, d)
     xq = xq_ref[0].astype(jnp.float32)          # (1, 1, d) slab -> (1, d)
-    row = _tile_pivot_row(x, xq, aux_ref[0], auxq_ref[0], metric)
+    row = _tile_pivot_row(x, xq, aux_ref[0], auxq_ref[0], metric, form)
     new = jnp.minimum(mind_ref[0], row)
     newmind_ref[0] = new
     masked = jnp.where(sel_ref[0], jnp.inf, new)
@@ -124,7 +132,7 @@ def pad_points(X: jax.Array, aux: jax.Array, *, block: int = DEFAULT_BLOCK):
     return Xp, auxp, n_pad, bn
 
 
-def _stream_call(Xp, xq, auxp, auxq, mind, selected, *, metric, block,
+def _stream_call(Xp, xq, auxp, auxq, mind, selected, *, metric, form, block,
                  interpret):
     """Shared pallas_call of the solo fused step: pivot passed by value.
 
@@ -136,7 +144,7 @@ def _stream_call(Xp, xq, auxp, auxq, mind, selected, *, metric, block,
     n_pad, d_pad = Xp.shape
     nblk = n_pad // block
     new_mind, minv, mini = pl.pallas_call(
-        functools.partial(_prim_stream_kernel, metric=metric),
+        functools.partial(_prim_stream_kernel, metric=metric, form=form),
         grid=(nblk,),
         in_specs=[
             pl.BlockSpec((block, d_pad), lambda b: (b, 0)),
@@ -163,7 +171,7 @@ def _stream_call(Xp, xq, auxp, auxq, mind, selected, *, metric, block,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "block", "interpret"))
+                   static_argnames=("metric", "form", "block", "interpret"))
 def prim_frontier_step_pallas(
     Xp: jax.Array,
     auxp: jax.Array,
@@ -173,6 +181,7 @@ def prim_frontier_step_pallas(
     selected: jax.Array,
     *,
     metric: str = "euclidean",
+    form: str = "gram",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ):
@@ -188,7 +197,7 @@ def prim_frontier_step_pallas(
       auxp: (n_pad,) f32 — padded local auxiliary vector.
       xq: (d_pad,) f32 — the (padded) pivot point.
       auxq: f32 scalar — the pivot's ``metric_aux_ref`` entry.
-      mind / selected / metric / block / interpret: as in
+      mind / selected / metric / form / block / interpret: as in
         ``prim_stream_step_pallas``.
 
     Returns:
@@ -198,13 +207,14 @@ def prim_frontier_step_pallas(
       and its masked (min, argmin) pair.
     """
     check_metric(metric)
+    check_form(form)
     return _stream_call(Xp, xq.reshape(1, -1), auxp, auxq.reshape(1),
-                        mind, selected, metric=metric, block=block,
-                        interpret=interpret)
+                        mind, selected, metric=metric, form=form,
+                        block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "block", "interpret"))
+                   static_argnames=("metric", "form", "block", "interpret"))
 def prim_stream_step_pallas(
     Xp: jax.Array,
     auxp: jax.Array,
@@ -213,6 +223,7 @@ def prim_stream_step_pallas(
     selected: jax.Array,
     *,
     metric: str = "euclidean",
+    form: str = "gram",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ):
@@ -228,6 +239,8 @@ def prim_stream_step_pallas(
       selected: (n_pad,) bool — True lanes excluded from the argmin
         (already visited + padding).
       metric: one of ``kernels.ref.METRICS`` (static).
+      form: "gram" (default) or "direct" — the numerics-policy tile
+        form (static; see ``_tile_pivot_row``).
       block: VMEM tile length (static; must divide n_pad — use the
         clamped block ``pad_points`` returns).
       interpret: Pallas interpret mode (CPU correctness path).
@@ -240,14 +253,15 @@ def prim_stream_step_pallas(
       within blocks).
     """
     check_metric(metric)
+    check_form(form)
     xq = jax.lax.dynamic_slice_in_dim(Xp, q, 1, axis=0)        # (1, d_pad)
     auxq = jax.lax.dynamic_slice_in_dim(auxp, q, 1, axis=0)    # (1,)
     return _stream_call(Xp, xq, auxp, auxq, mind, selected, metric=metric,
-                        block=block, interpret=interpret)
+                        form=form, block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "block", "interpret"))
+                   static_argnames=("metric", "form", "block", "interpret"))
 def prim_stream_step_pallas_batch(
     Xp: jax.Array,
     auxp: jax.Array,
@@ -256,6 +270,7 @@ def prim_stream_step_pallas_batch(
     selected: jax.Array,
     *,
     metric: str = "euclidean",
+    form: str = "gram",
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
 ):
@@ -272,7 +287,7 @@ def prim_stream_step_pallas_batch(
       q: (b,) i32 — per-dataset pivot from the previous step.
       mind: (b, n_pad) f32 — per-dataset frontiers (padding +inf).
       selected: (b, n_pad) bool — per-dataset visited masks (padding True).
-      metric, block, interpret: as in ``prim_stream_step_pallas``.
+      metric, form, block, interpret: as in ``prim_stream_step_pallas``.
 
     Returns:
       (new_mind (b, n_pad) f32, edge (b,) f32, next (b,) i32) — each lane
@@ -280,6 +295,7 @@ def prim_stream_step_pallas_batch(
       cross-dataset reduction exists anywhere).
     """
     check_metric(metric)
+    check_form(form)
     b, n_pad, d_pad = Xp.shape
     nblk = n_pad // block
     xq = jax.vmap(
@@ -288,7 +304,8 @@ def prim_stream_step_pallas_batch(
         lambda a, i: jax.lax.dynamic_slice_in_dim(a, i, 1, 0))(auxp, q)
 
     new_mind, minv, mini = pl.pallas_call(
-        functools.partial(_prim_stream_kernel_batch, metric=metric),
+        functools.partial(_prim_stream_kernel_batch, metric=metric,
+                          form=form),
         grid=(b, nblk),
         in_specs=[
             pl.BlockSpec((1, block, d_pad), lambda bi, j: (bi, j, 0)),

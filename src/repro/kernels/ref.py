@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.numerics.condition import check_form
+
 #: Metrics every pairwise path (XLA ref + Pallas tile) implements.
 METRICS = ("euclidean", "sqeuclidean", "manhattan", "cosine")
 
@@ -30,7 +32,8 @@ def check_metric(metric: str):
 
 
 def pairwise_dissim_ref(X: jax.Array, Y: jax.Array | None = None, *,
-                        metric: str = "euclidean") -> jax.Array:
+                        metric: str = "euclidean",
+                        form: str = "gram") -> jax.Array:
     """Metric-dispatched pairwise dissimilarity matrix.
 
     Args:
@@ -42,22 +45,39 @@ def pairwise_dissim_ref(X: jax.Array, Y: jax.Array | None = None, *,
         manhattan    sum_k |xik - yjk|      (broadcast |diff| reduce)
         cosine       1 - xi.yj/(|xi||yj|)   (in [0, 2]; zero-norm rows
                                              get an eps-guarded denom)
+      form: "gram" (default — the MXU decomposition above, absolute
+        cancellation error ~eps·max||x||²) or "direct" — squared
+        differences ``sum_k (xik - yjk)²``, no cancellation, relative
+        error only.  Selected by ``numerics.resolve``; only meaningful
+        for euclidean/sqeuclidean (manhattan is already direct, cosine
+        has no direct form and ignores it).
 
     Returns:
       (n, m) float32 dissimilarity matrix.
     """
     check_metric(metric)
+    check_form(form)
     if Y is None:
         Y = X
     Xf = X.astype(jnp.float32)
     Yf = Y.astype(jnp.float32)
     if metric in ("euclidean", "sqeuclidean"):
-        # ||xi - yj||^2 = ||xi||^2 + ||yj||^2 - 2 xi.yj — the cross term is
-        # one matmul, which is what makes this MXU-friendly (and is the
-        # exact decomposition the Pallas kernel tiles).
-        nx = jnp.sum(Xf * Xf, axis=-1)
-        ny = jnp.sum(Yf * Yf, axis=-1)
-        sq = jnp.maximum(nx[:, None] + ny[None, :] - 2.0 * (Xf @ Yf.T), 0.0)
+        if form == "direct":
+            # No cancellation: every term is a squared difference, so the
+            # error is relative to the distance itself.  Same formula as
+            # every other direct-form ref in this module — ref↔ref rows
+            # stay bitwise-identical, the property the matrix-free
+            # ordering contracts need under the safe/auto policies.
+            diff = Xf[:, None, :] - Yf[None, :, :]
+            sq = jnp.sum(diff * diff, axis=-1)
+        else:
+            # ||xi - yj||^2 = ||xi||^2 + ||yj||^2 - 2 xi.yj — the cross
+            # term is one matmul, which is what makes this MXU-friendly
+            # (and is the exact decomposition the Pallas kernel tiles).
+            nx = jnp.sum(Xf * Xf, axis=-1)
+            ny = jnp.sum(Yf * Yf, axis=-1)
+            sq = jnp.maximum(
+                nx[:, None] + ny[None, :] - 2.0 * (Xf @ Yf.T), 0.0)
         return jnp.sqrt(sq) if metric == "euclidean" else sq
     if metric == "manhattan":
         return jnp.sum(jnp.abs(Xf[:, None, :] - Yf[None, :, :]), axis=-1)
@@ -167,23 +187,25 @@ def metric_aux_ref(X: jax.Array, *, metric: str = "euclidean") -> jax.Array:
 
 
 def pivot_row_ref(X: jax.Array, aux: jax.Array, q: jax.Array, *,
-                  metric: str = "euclidean") -> jax.Array:
+                  metric: str = "euclidean",
+                  form: str = "gram") -> jax.Array:
     """Row q of the pairwise dissimilarity matrix, never materializing it.
 
     The matrix-free Prim engine's inner product: one (n, d) x (d,) cross
-    term plus O(n) elementwise work per call.  Unlike ``row_dissim_ref``
-    (direct differences — the more accurate formula), this path uses the
-    *same Gram-trick decomposition as* ``pairwise_dissim_ref``, so its
-    values are bitwise-identical to the materialized matrix's row q —
-    the property ``core.vat.vat_matrix_free`` needs to reproduce
-    ``vat_order``'s ordering exactly.  Do not mix the two row oracles
-    inside one bitwise contract.
+    term plus O(n) elementwise work per call.  This path uses the *same
+    decomposition as* ``pairwise_dissim_ref`` for the same ``form``, so
+    its values are bitwise-identical to the materialized matrix's row q
+    — the property ``core.vat.vat_matrix_free`` needs to reproduce
+    ``vat_order``'s ordering exactly.  Do not mix forms (or this oracle
+    with ``row_dissim_ref``'s slightly different clamp) inside one
+    bitwise contract.
 
     Args:
       X: (n, d) float — data points.
       aux: (n,) float32 — ``metric_aux_ref(X, metric=metric)``.
       q: int scalar (traced ok) — the pivot row index.
       metric: one of ``METRICS``.
+      form: "gram" (default) or "direct" — see ``pairwise_dissim_ref``.
 
     Returns:
       (n,) float32 — dissimilarity of every point to point q.  The
@@ -191,10 +213,15 @@ def pivot_row_ref(X: jax.Array, aux: jax.Array, q: jax.Array, *,
       the materialized matrix's exact zero diagonal must mask it.
     """
     check_metric(metric)
+    check_form(form)
     Xf = X.astype(jnp.float32)
     xq = jnp.take(Xf, q, axis=0)
     if metric == "manhattan":
         return jnp.sum(jnp.abs(Xf - xq[None, :]), axis=-1)
+    if form == "direct" and metric != "cosine":
+        diff = Xf - xq[None, :]
+        sq = jnp.sum(diff * diff, axis=-1)
+        return jnp.sqrt(sq) if metric == "euclidean" else sq
     cross = Xf @ xq
     aq = jnp.take(aux, q)
     if metric == "cosine":
@@ -206,15 +233,16 @@ def pivot_row_ref(X: jax.Array, aux: jax.Array, q: jax.Array, *,
 
 def pivot_row_from_point_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
                              auxq: jax.Array, *,
-                             metric: str = "euclidean") -> jax.Array:
+                             metric: str = "euclidean",
+                             form: str = "gram") -> jax.Array:
     """``pivot_row_ref`` when the pivot's (point, aux) are already in hand.
 
     The building block of the sharded matrix-free engine: the pivot
     usually lives on another device, so its row x_q arrives by collective
     broadcast rather than a local gather.  The formula is *identical* to
-    ``pivot_row_ref`` term for term (same Gram decomposition, same
-    clamps), so a shard's slice of this row is bitwise-equal to the solo
-    path's row restricted to the shard — the property the sharded
+    ``pivot_row_ref`` term for term (same decomposition per ``form``,
+    same clamps), so a shard's slice of this row is bitwise-equal to the
+    solo path's row restricted to the shard — the property the sharded
     ordering contract rests on.
 
     Args:
@@ -223,15 +251,21 @@ def pivot_row_from_point_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
       xq: (d,) float — the pivot point.
       auxq: float32 scalar — the pivot's ``metric_aux_ref`` entry.
       metric: one of ``METRICS``.
+      form: "gram" (default) or "direct" — see ``pairwise_dissim_ref``.
 
     Returns:
       (n,) float32 dissimilarity of every row of X to xq.
     """
     check_metric(metric)
+    check_form(form)
     Xf = X.astype(jnp.float32)
     xqf = xq.astype(jnp.float32)
     if metric == "manhattan":
         return jnp.sum(jnp.abs(Xf - xqf[None, :]), axis=-1)
+    if form == "direct" and metric != "cosine":
+        diff = Xf - xqf[None, :]
+        sq = jnp.sum(diff * diff, axis=-1)
+        return jnp.sqrt(sq) if metric == "euclidean" else sq
     cross = Xf @ xqf
     if metric == "cosine":
         denom = jnp.maximum(aux * auxq, 1e-12)
@@ -242,7 +276,7 @@ def pivot_row_from_point_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
 
 def prim_frontier_step_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
                            auxq: jax.Array, mind: jax.Array, *,
-                           metric: str = "euclidean"):
+                           metric: str = "euclidean", form: str = "gram"):
     """Fused frontier fold + masked argmin with the pivot passed by value.
 
     The per-device body of ``core.distributed.vat_matrix_free_sharded``:
@@ -262,12 +296,14 @@ def prim_frontier_step_ref(X: jax.Array, aux: jax.Array, xq: jax.Array,
       auxq: f32 scalar — the pivot's aux entry.
       mind: (n,) float32 — frontier; +inf lanes are selected/padding.
       metric: one of ``METRICS``.
+      form: "gram" (default) or "direct" — see ``pairwise_dissim_ref``.
 
     Returns:
       (new_mind (n,) f32, value f32 scalar, idx i32 scalar) — the updated
       frontier and its min with first-index tie-breaking.
     """
-    row = pivot_row_from_point_ref(X, aux, xq, auxq, metric=metric)
+    row = pivot_row_from_point_ref(X, aux, xq, auxq, metric=metric,
+                                   form=form)
     new_mind = jnp.where(jnp.isinf(mind), jnp.inf, jnp.minimum(mind, row))
     value = jnp.min(new_mind)
     n = new_mind.shape[0]
@@ -285,7 +321,8 @@ UNSEEN = float(jnp.finfo(jnp.float32).max)
 
 
 def prim_persist_ref(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
-                     metric: str = "euclidean", unroll: int = 4):
+                     metric: str = "euclidean", form: str = "gram",
+                     unroll: int = 4):
     """The whole Prim traversal in one call — the persistent engine's
     XLA mirror (Turbo Flash-VAT).
 
@@ -318,6 +355,7 @@ def prim_persist_ref(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
       aux: (n,) float32 — ``metric_aux_ref`` of X.
       i0: i32 scalar — the seed vertex (``core.vat._streamed_seed_pivot``).
       metric: one of ``METRICS``.
+      form: "gram" (default) or "direct" — see ``pairwise_dissim_ref``.
       unroll: scan unroll factor (static; perf only).
 
     Returns:
@@ -338,7 +376,7 @@ def prim_persist_ref(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
 
     def step(carry, t):
         mind, q, order, edges = carry
-        row = pivot_row_ref(Xf, aux, q, metric=metric)
+        row = pivot_row_ref(Xf, aux, q, metric=metric, form=form)
         mind = jnp.where(jnp.isinf(mind), jnp.inf, jnp.minimum(mind, row))
         ev = jnp.min(mind)
         nq = jnp.min(jnp.where(mind == ev, iota, n)).astype(jnp.int32)
@@ -355,7 +393,7 @@ def prim_persist_ref(X: jax.Array, aux: jax.Array, i0: jax.Array, *,
 
 def prim_stream_step_ref(X: jax.Array, aux: jax.Array, q: jax.Array,
                          mind: jax.Array, selected: jax.Array, *,
-                         metric: str = "euclidean"):
+                         metric: str = "euclidean", form: str = "gram"):
     """One fused matrix-free Prim step — the XLA oracle for prim_stream.
 
     Recomputes pivot q's distance row, folds it into the frontier with a
@@ -372,12 +410,13 @@ def prim_stream_step_ref(X: jax.Array, aux: jax.Array, q: jax.Array,
       mind: (n,) float32 — frontier distances *before* folding in q's row.
       selected: (n,) bool — True lanes are already in the MST (q included).
       metric: one of ``METRICS``.
+      form: "gram" (default) or "direct" — see ``pairwise_dissim_ref``.
 
     Returns:
       (new_mind (n,) f32, edge f32 scalar — the masked min (the MST edge
       weight of the next vertex), next (i32 scalar) — the next vertex).
     """
-    row = pivot_row_ref(X, aux, q, metric=metric)
+    row = pivot_row_ref(X, aux, q, metric=metric, form=form)
     new_mind = jnp.minimum(mind, row)
     edge, nxt = masked_argmin_ref(new_mind, selected)
     return new_mind, edge, nxt

@@ -22,6 +22,9 @@ Scenarios:
              probe re-opens it, a healthy probe closes it.
   admission  non-finite / degenerate inputs are refused typed at
              submit, counted, and never reach a batch.
+  numerics_trip  a bf16 request whose certification is fault-tripped
+             degrades to f32 — counted, stamped on the report, and
+             bitwise-equal to the solo f32 fit.
   disarmed   all faults disarmed: served results bitwise-equal solo
              fits and every resilience counter is zero.
 """
@@ -34,6 +37,7 @@ import numpy as np
 
 from repro import faults
 from repro.api import FastVAT, InvalidInput
+from repro.numerics import NumericsPolicy
 from repro.serve import (BreakerConfig, ExecutionError, ResilienceStats,
                          RetryPolicy, ServeConfig, TendencyServer)
 
@@ -184,6 +188,36 @@ def scenario_admission(problems: list) -> None:
         srv.close()
 
 
+def scenario_numerics_trip(problems: list) -> None:
+    srv = _server(_VirtualClock(), max_batch=1,
+                  numerics=NumericsPolicy(dtype="bf16"))
+    try:
+        offset = np.float32(1.0e4)          # conditions; then bf16-safe
+        clean = srv.submit(_blobs(48) + offset,
+                           method="vat").result(timeout=300)
+        _expect(problems, "certified dtype",
+                clean.meta.numerics.dtype, "bf16")
+        _expect(problems, "certified fallbacks",
+                clean.meta.numerics.fallbacks, 0)
+        faults.arm("kernels.numerics_trip", times=1)
+        X = _blobs(48, seed=1) + offset
+        tripped = srv.submit(X, method="vat").result(timeout=300)
+        rep = tripped.meta.numerics
+        _expect(problems, "tripped dtype", rep.dtype, "f32")
+        _expect(problems, "tripped fallbacks", rep.fallbacks, 1)
+        _expect(problems, "tripped form", rep.form, "direct")
+        # the degradation lands on the default f32 path: bitwise-equal
+        # to the solo auto-policy fit of the same data
+        if not _same(tripped, _solo(X, "vat")):
+            problems.append("tripped bf16 result diverged from solo "
+                            "f32 fit")
+        _expect(problems, "numerics counters", srv.stats().resilience,
+                ResilienceStats(numerics_fallbacks=1))
+    finally:
+        srv.close()
+        faults.disarm_all()
+
+
 def scenario_disarmed(problems: list) -> None:
     _expect(problems, "armed faults before disarmed run",
             faults.armed(), {})
@@ -204,6 +238,7 @@ SCENARIOS = {
     "fallback": scenario_fallback,
     "breaker": scenario_breaker,
     "admission": scenario_admission,
+    "numerics_trip": scenario_numerics_trip,
     "disarmed": scenario_disarmed,
 }
 

@@ -1,0 +1,32 @@
+"""The numerics shield (ISSUE 10): condition-aware dispatch + precision.
+
+One subsystem owns every floating-point-robustness decision the fast
+engines used to make implicitly:
+
+  * ``condition.py`` — the per-fit conditioning pre-pass: scale
+    statistics, the Gram-cancellation condition estimate κ, the
+    isometry-safe conditioning transform (mean-center + power-of-2
+    rescale), the ``fast | safe | auto`` policy resolution, and the
+    bf16 storage certification with its counted fallback.
+  * ``certify.py`` — the adversarial certification harness: worst-case
+    generators run through every rung × policy against the f64
+    reference oracle (kept import-light; it pulls the API layer in,
+    so the package root deliberately does NOT import it — import
+    ``repro.numerics.certify`` explicitly).
+
+See docs/numerics.md for the condition estimate's derivation and the
+policy table.
+"""
+from repro.numerics.condition import (CONDITIONED_METRICS, KAPPA_BF16,
+                                      KAPPA_SAFE, ConditionStats,
+                                      NumericsPolicy, NumericsReport,
+                                      as_policy, condition_stats,
+                                      condition_transform, lb_slack_ulps,
+                                      resolve)
+
+__all__ = [
+    "CONDITIONED_METRICS", "KAPPA_BF16", "KAPPA_SAFE",
+    "ConditionStats", "NumericsPolicy", "NumericsReport",
+    "as_policy", "condition_stats", "condition_transform",
+    "lb_slack_ulps", "resolve",
+]

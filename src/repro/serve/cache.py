@@ -11,8 +11,9 @@ The key contract (documented in docs/serving.md and pinned by the
 key-distinctness tests): if a knob can alter the jaxpr or the lowered
 HLO, it MUST appear in the key.  That is rung, padded shape
 (b_bucket, n_bucket, d), metric, device-mesh fingerprint, turbo mode,
-kNN fan-out, the Pallas toggle, and svat's sample size.  Seeds and
-request deadlines are runtime data, not key material.
+kNN fan-out, the Pallas toggle, svat's sample size, and the numerics
+shield's resolved plan (tile form + storage dtype).  Seeds and request
+deadlines are runtime data, not key material.
 
 Capacity is a hard bound: inserting past it evicts the least recently
 used program (compiled artifacts hold device buffers; an unbounded
@@ -48,6 +49,13 @@ class ProgramKey:
       knn_k: approx-rung kNN fan-out.
       use_pallas: kernel-dispatch toggle.
       sample_size: svat's maximin sample size.
+      num_form: the numerics shield's tile form ("gram" | "direct") —
+        resolved host-side per request (``numerics.resolve``) and baked
+        statically into the kernels, so it is key material: a
+        direct-form batch must never ride a Gram-form program.
+      num_dtype: resolved coordinate-storage precision ("f32" | "bf16")
+        — bf16 requests that pass certification key separately so their
+        quantized lanes never coalesce with full-precision ones.
     """
     rung: str
     b_bucket: int
@@ -59,6 +67,8 @@ class ProgramKey:
     knn_k: int = 15
     use_pallas: bool = False
     sample_size: int = 256
+    num_form: str = "gram"
+    num_dtype: str = "f32"
 
     def with_batch(self, b_bucket: int) -> "ProgramKey":
         """The same program family at a concrete lane count."""

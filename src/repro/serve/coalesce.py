@@ -69,6 +69,11 @@ class ServeRequest:
         with DeadlineExceeded / the dispatch error.
       tag: optional caller-provided label (tests use it to identify
         requests in dispatch records).
+      numerics: the request's resolved numerics plan
+        (``repro.numerics.NumericsReport`` — X above is already the
+        conditioned/quantized copy it describes), stamped onto the
+        unpacked result's meta; None when the server skipped the
+        pre-pass.
     """
     X: Any
     n: int
@@ -77,6 +82,7 @@ class ServeRequest:
     deadline: float
     future: Future
     tag: Any = None
+    numerics: Any = None
 
 
 @dataclasses.dataclass

@@ -189,6 +189,10 @@ class ResilienceStats:
       breaker_probes: HALF_OPEN probe dispatches after cooldown.
       invalid_rejects: requests refused at admission (InvalidInput).
       failed: futures ultimately failed after the whole ladder.
+      numerics_fallbacks: requests whose bf16 storage request failed
+        certification (or was fault-tripped) and was served at f32
+        instead — the numerics shield's counted degradation (mirrors
+        ``NumericsReport.fallbacks``; see repro.numerics).
       breakers: sorted (key-family, state) pairs of every breaker whose
         state is not CLOSED — empty on a healthy server.
     """
@@ -201,6 +205,7 @@ class ResilienceStats:
     breaker_probes: int = 0
     invalid_rejects: int = 0
     failed: int = 0
+    numerics_fallbacks: int = 0
     breakers: tuple[tuple[str, str], ...] = ()
 
     @property
@@ -220,6 +225,7 @@ class ResilienceCounters:
         self.degraded = 0
         self.invalid_rejects = 0
         self.failed = 0
+        self.numerics_fallbacks = 0
 
     def bump(self, field: str, by: int = 1) -> None:
         with self._lock:
@@ -233,6 +239,7 @@ class ResilienceCounters:
                 breaker_opens=sum(b.opens for b in breakers.values()),
                 breaker_probes=sum(b.probes for b in breakers.values()),
                 invalid_rejects=self.invalid_rejects, failed=self.failed,
+                numerics_fallbacks=self.numerics_fallbacks,
                 breakers=tuple(sorted(
                     (name, b.state) for name, b in breakers.items()
                     if b.state != CLOSED)))

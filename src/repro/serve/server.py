@@ -75,6 +75,8 @@ from repro.serve.resilience import (BreakerConfig, CircuitBreaker,
                                     ResilienceCounters, ResilienceStats,
                                     RetryPolicy, breaker_family,
                                     fallback_chain)
+from repro.numerics import NumericsPolicy
+from repro.numerics import resolve as resolve_numerics
 
 #: Rungs the server dispatches — exactly the batch-capable registry set.
 SERVABLE = ("vat", "ivat", "flashvat")
@@ -136,6 +138,14 @@ class ServeConfig:
         consecutive primary failures a key family is pinned to its
         fallback chain until ``breaker.cooldown_s`` elapses on the
         server clock, then re-probed once.
+      numerics: the numerics shield's policy
+        (``repro.numerics.NumericsPolicy``) applied host-side to every
+        submitted X before it can join a batch.  The resolved plan
+        (tile form, storage dtype) becomes key material
+        (``ProgramKey.num_form`` / ``num_dtype``), the per-request
+        report is stamped on each unpacked result's meta, and bf16
+        certification fallbacks are counted on
+        ``stats().resilience.numerics_fallbacks``.
     """
     window_s: float = 0.002
     max_batch: int = 8
@@ -150,13 +160,16 @@ class ServeConfig:
     validate: bool = True
     retry: RetryPolicy = RetryPolicy()
     breaker: BreakerConfig = BreakerConfig()
+    numerics: NumericsPolicy = NumericsPolicy()
 
 
 def resolve_key(n: int, d: int, *, method: str = "auto",
                 metric: str = "euclidean",
                 config: ServeConfig = ServeConfig(),
                 slo_ms: float | None = None,
-                mesh: str | None = None) -> ProgramKey:
+                mesh: str | None = None,
+                num_form: str = "gram",
+                num_dtype: str = "f32") -> ProgramKey:
     """Route a request shape to its program-cache group key.
 
     Pure function of its arguments (no server state), so tests and the
@@ -171,6 +184,9 @@ def resolve_key(n: int, d: int, *, method: str = "auto",
       slo_ms: latency budget in milliseconds; with ``method="auto"``
         routes through the cost-model router instead of the size policy.
       mesh: device-mesh fingerprint override (defaults to the live one).
+      num_form / num_dtype: the numerics shield's resolved plan for the
+        request's data (``numerics.resolve``) — key material, since the
+        tile form and storage precision are baked into the program.
 
     Returns:
       The group :class:`ProgramKey` with ``b_bucket=0`` (lane count is
@@ -204,7 +220,8 @@ def resolve_key(n: int, d: int, *, method: str = "auto",
                       mesh=mesh if mesh is not None else mesh_fingerprint(),
                       turbo=config.turbo, knn_k=config.knn_k,
                       use_pallas=config.use_pallas,
-                      sample_size=config.sample_size)
+                      sample_size=config.sample_size,
+                      num_form=num_form, num_dtype=num_dtype)
 
 
 def _build_program(key: ProgramKey, seed: int):
@@ -226,7 +243,7 @@ def _build_program(key: ProgramKey, seed: int):
                       sample_size=key.sample_size,
                       use_pallas=key.use_pallas)
     opts = RungOptions(sample_size=key.sample_size, turbo=key.turbo,
-                       knn_k=key.knn_k)
+                       knn_k=key.knn_k, num_form=key.num_form)
 
     def fit(Xs):
         _TRACE_CENSUS["traces"] += 1
@@ -238,17 +255,19 @@ def _build_program(key: ProgramKey, seed: int):
 
 
 def _unpack(key: ProgramKey, res: TendencyResult, lane: int,
-            n: int, seed: int) -> TendencyResult:
+            n: int, seed: int, numerics=None) -> TendencyResult:
     """Extract one request's solo-equivalent result from a batched fit.
 
     For the padded rungs the real-point subsequence of the padded
     ordering IS the unpadded ordering (bucketing.py's dup-row
     argument), so slicing the lane at the real positions reproduces the
     solo fit bitwise.  flashvat lanes are unpadded — take the lane.
+    ``numerics`` is the request's own resolved plan (NumericsReport),
+    stamped on the solo-equivalent meta exactly where FastVAT stamps it.
     """
     meta = ResultMeta(method=key.rung, metric=key.metric, n=n, batch=None,
                       seed=seed, sample_size=key.sample_size,
-                      use_pallas=key.use_pallas)
+                      use_pallas=key.use_pallas, numerics=numerics)
     if key.rung in PADDED_RUNGS:
         order_pad = np.asarray(res.order[lane])
         pos = real_positions(order_pad, n)
@@ -366,7 +385,7 @@ class TendencyServer:
         """
         if self.config.validate:
             try:
-                validate_points(X)
+                validate_points(X, metric=metric)
             except InvalidInput:
                 self._counters.bump("invalid_rejects")
                 raise
@@ -374,13 +393,23 @@ class TendencyServer:
         if X.ndim != 2:
             raise ValueError(f"submit wants an (n, d) matrix, got shape "
                              f"{X.shape}")
+        # The numerics shield runs host-side at admission, exactly like
+        # the solo facade: X becomes the conditioned (possibly bf16
+        # -quantized) copy and the resolved plan keys the program, so a
+        # direct-form request can never ride a Gram-form batch.
+        X, num_report = resolve_numerics(X, metric=metric,
+                                         policy=self.config.numerics)
+        if num_report.fallbacks:
+            self._counters.bump("numerics_fallbacks", num_report.fallbacks)
         n, d = int(X.shape[0]), int(X.shape[1])
         key = resolve_key(n, d, method=method, metric=metric,
-                          config=self.config, slo_ms=slo_ms)
+                          config=self.config, slo_ms=slo_ms,
+                          num_form=num_report.form,
+                          num_dtype=num_report.dtype)
         now = self._clock()
         req = ServeRequest(X=X, n=n, key=key, arrival=now,
                            deadline=now + timeout_s, future=Future(),
-                           tag=tag)
+                           tag=tag, numerics=num_report)
         # Poll-then-enqueue: due flushes/expiries are pulled out of the
         # core and handed to the dispatcher BEFORE the bound check, so a
         # Backpressure rejection can never strand a flushed batch (its
@@ -410,20 +439,25 @@ class TendencyServer:
 
     def warm(self, n: int, d: int, *, metric: str = "euclidean",
              method: str = "auto", slo_ms: float | None = None,
-             batch: int = 1) -> ProgramKey:
+             batch: int = 1, num_form: str = "gram",
+             num_dtype: str = "f32") -> ProgramKey:
         """Pre-compile the program a future (n, d) request will hit.
 
         Pass the same ``slo_ms`` the requests will carry: with an SLO
         the router may pick a different rung than the size policy, and
         warming must target the key those requests resolve to or they
-        pay trace+compile on the serving path anyway.
+        pay trace+compile on the serving path anyway.  Likewise
+        ``num_form`` / ``num_dtype``: requests whose data resolves to a
+        direct-form or bf16 plan hit a different program — warm with
+        the plan ``numerics.resolve`` will produce for the real data.
 
         Returns the concrete (batched) ProgramKey that was compiled —
         a subsequent matching request is a pure cache hit.
         """
         key = resolve_key(n, d, method=method, metric=metric,
-                          config=self.config,
-                          slo_ms=slo_ms).with_batch(bucket_batch(batch))
+                          config=self.config, slo_ms=slo_ms,
+                          num_form=num_form,
+                          num_dtype=num_dtype).with_batch(bucket_batch(batch))
         self._cache.get(key, lambda: _build_program(key, self.config.seed))
         return key
 
@@ -587,7 +621,8 @@ class TendencyServer:
             requests[0].future.set_exception(err)
             return
         for lane, req in enumerate(requests):
-            lane_res = _unpack(used_key, res, lane, req.n, self.config.seed)
+            lane_res = _unpack(used_key, res, lane, req.n,
+                               self.config.seed, req.numerics)
             if self._drift is not None:
                 # drift only runs on the dispatcher thread; stats()
                 # reads the state attribute (GIL-atomic) elsewhere

@@ -1,0 +1,60 @@
+"""Shared adversarial datasets for the numerics-shield tests (ISSUE 10).
+
+One module so ``test_numerics`` / ``test_metrics`` / ``test_flashvat`` /
+``test_turbo`` all draw the SAME worst-case geometries the certification
+harness sweeps (``repro.numerics.certify.GENERATORS``), with the same
+deterministic seeding — any failure against these fixtures reproduces
+byte-for-byte under ``python -m repro.numerics.certify``.
+
+``ADVERSARIAL_NAMES`` is the stable tuple tests feed to
+``strategies.sampled_from`` (works with the deterministic hypothesis
+stub and the real library alike); ``adversarial(name)`` materializes one
+dataset.  ``grid_clusters`` builds the exact-arithmetic clustered grid
+the shift-invariance pins use: every coordinate is a multiple of 0.125
+and n is a power of two, so the f64 mean inside
+``repro.numerics.condition.condition_transform`` is EXACT and
+``fit(X + c·1)`` must match ``fit(X)`` bitwise for any f32-exact c.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from repro.numerics.certify import GENERATORS
+
+#: Stable, sorted generator names — the sampled_from pool.
+ADVERSARIAL_NAMES = tuple(sorted(GENERATORS))
+
+
+def adversarial(name: str, n: int = 64, seed: int = 0) -> np.ndarray:
+    """One adversarial (n, d) float32 dataset, seeded exactly like
+    ``certify.sweep`` so test data and certification cells coincide."""
+    gsalt = zlib.crc32(name.encode()) & 0xFFFF
+    rng = np.random.default_rng(np.random.SeedSequence([seed, gsalt]))
+    return GENERATORS[name](rng, n)
+
+
+def grid_clusters(n: int = 64, d: int = 4, offset: float = 1000.0,
+                  seed: int = 0) -> np.ndarray:
+    """Two clusters on the 0.125 grid at a large common offset.
+
+    Exactness budget (what makes the shift-invariance pin BITWISE):
+
+      * coordinates are ``offset + g·0.125`` with integer ``|g| <= 64``
+        — exact in f32 up to offsets of 1e6 (ulp there is 0.0625);
+      * n is a power of two, so the f64 column mean is an exact
+        multiple of ``0.125 / n`` and centering is exact arithmetic;
+      * adding an f32-exact ``c`` shifts the mean by exactly ``c``, so
+        the centered f64 array — and therefore the conditioned f32
+        array every kernel sees — is bitwise identical.
+
+    At the default offset 1000 the condition estimate κ is ~1e5, well
+    past ``KAPPA_SAFE``, so the auto policy conditions the BASE fit too
+    (both sides of the pin take the same code path).
+    """
+    assert n > 1 and n & (n - 1) == 0, "n must be a power of two"
+    rng = np.random.default_rng(seed)
+    g = rng.integers(-16, 17, size=(n, d)).astype(np.float64) * 0.125
+    g[n // 2:, 0] += 6.0     # 48 grid steps between the cluster centers
+    return np.asarray(g + offset, np.float32)

@@ -229,7 +229,7 @@ def test_rung_capability_flags():
 #: The documented public surface (docs/api.md) — every name must import.
 PUBLIC_ROOT = ("FastVAT", "assess_tendency", "TendencyResult",
                "TendencyReport", "ResultMeta", "METRICS", "select_method",
-               "InvalidInput")
+               "InvalidInput", "NumericsPolicy", "NumericsReport")
 PUBLIC_API = PUBLIC_ROOT + ("Rung", "RungOptions", "register", "get_rung",
                             "registry", "METHODS", "SMALL_N", "MEDIUM_N",
                             "COMPUTED_METRICS", "validate_metric",

@@ -81,6 +81,24 @@ def test_matrix_free_blobs_order_keeps_clusters_contiguous():
     assert runs == 4
 
 
+def test_matrix_free_direct_form_bitwise_on_adversarial_data():
+    """ISSUE 10 satellite: the matrix-free engine speaks the direct form
+    too — on the shared adversarial pool (near-duplicate pairs at offset
+    1e4) the resolved plan keeps it bitwise with ``vat_from_dist`` on
+    the materialized direct-form matrix."""
+    from _numerics_data import adversarial
+    from repro.numerics import resolve
+    X = adversarial("near_duplicates", n=96)
+    for metric in ("euclidean", "manhattan"):
+        Xc, rep = resolve(X, metric=metric)
+        assert rep.conditioned and rep.form == "direct"
+        Xj = jnp.asarray(Xc)
+        R = kops.pairwise_dist(Xj, metric=metric, form="direct")
+        want = core.vat_from_dist(R).order
+        got = core.vat_matrix_free(Xj, metric=metric, form="direct").order
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
 # ------------------------------------------------------ batched agreement ----
 
 def test_matrix_free_batch_agrees_with_solo():

@@ -131,6 +131,24 @@ def test_facade_ordering_pinned_against_naive_prim(metric):
     assert got.tolist() == want
 
 
+def test_facade_auto_policy_matches_naive_prim_on_adversarial_data():
+    """ISSUE 10 satellite: on the shared adversarial pool (huge common
+    offset) the default auto policy conditions and switches to direct
+    -form tiles — and the fit still reproduces the pure-Python Prim run
+    on the conditioned matrix bitwise."""
+    from _numerics_data import adversarial
+    from repro.numerics import resolve
+    X = adversarial("offset_clusters", n=48)
+    for metric in ("euclidean", "sqeuclidean", "manhattan"):
+        Xc, rep = resolve(X, metric=metric)
+        assert rep.conditioned and rep.form == "direct"
+        R = np.asarray(ops.pairwise_dist(jnp.asarray(Xc), metric=metric,
+                                         form="direct"), np.float64)
+        want = vat_order_naive(R.tolist())
+        got = FastVAT(metric=metric).fit(X).order()
+        assert got.tolist() == want
+
+
 # --------------------------------------------------- precomputed input ----
 
 def test_precomputed_round_trip_bitwise():

@@ -201,6 +201,32 @@ def test_pruning_sound_on_uncentered_data(metric, offset):
     np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
 
 
+@pytest.mark.parametrize("offset", [1e3, 1e4, 1e6])
+@pytest.mark.parametrize("metric", ["euclidean", "sqeuclidean", "manhattan"])
+def test_pruning_exact_under_auto_plan_at_any_offset(metric, offset):
+    """ISSUE 10 satellite: where the raw Gram slack would eat the whole
+    signal (offsets to 1e6), the auto policy's resolved plan —
+    conditioned coordinates + direct-form tiles + the 4-ulp slack —
+    keeps prune on/off bitwise inside the megakernel."""
+    from repro.numerics import resolve
+    # sep=2 keeps the pairwise-gap proxy small enough that κ crosses
+    # KAPPA_SAFE already at the 1e3 offset
+    X = _contig_blobs(500, k=4, seed=3, sep=2.0)
+    Xc, rep = resolve(np.asarray(X) + np.float32(offset), metric=metric)
+    assert rep.conditioned and rep.form == "direct"
+    Xj = jnp.asarray(Xc)
+    aux = kref.metric_aux_ref(Xj, metric=metric)
+    i0 = _streamed_seed_pivot(Xj, metric=metric, form=rep.form)
+    o1, e1, _ = kpp.prim_persist_pallas(Xj, aux, i0, metric=metric,
+                                        form=rep.form, block=64,
+                                        interpret=True)
+    o0, e0, _ = kpp.prim_persist_pallas(Xj, aux, i0, metric=metric,
+                                        form=rep.form, block=64,
+                                        interpret=True, prune=False)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o0))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+
+
 def test_pruned_megakernel_matches_mirror_on_clustered_data():
     """Pruning engaged (clustered contiguous data) still reproduces the
     XLA mirror's ordering bitwise for the triangle metrics.  sep=8 keeps
